@@ -1,0 +1,61 @@
+"""Shared helpers for the paper-replication benchmarks (§6).
+
+The synthetic dataset matches §6.2: each record has 6 random strings
+(20–40 readable chars), 6 random ints (1..10000), and a map of 10 entries
+(4-char keys drawn from a limited universe, int values).
+"""
+from __future__ import annotations
+
+import random
+import string
+import time
+from typing import Any, Callable, Dict, Iterable, List, Tuple
+
+from repro.core import ARRAY, INT32, MAP, STRING, Schema
+
+ASCII = string.ascii_letters + string.digits + " .,:;-_/"
+
+
+def micro_schema() -> Schema:
+    cols: List[Tuple[str, Any]] = []
+    for i in range(6):
+        cols.append((f"str{i}", STRING()))
+    for i in range(6):
+        cols.append((f"int{i}", INT32()))
+    cols.append(("map0", MAP(INT32())))
+    return Schema(cols)
+
+
+def micro_records(n: int, seed: int = 0, key_universe: int = 40):
+    rnd = random.Random(seed)
+    keys = ["".join(rnd.choices(string.ascii_lowercase, k=4)) for _ in range(key_universe)]
+    for _ in range(n):
+        rec: Dict[str, Any] = {}
+        for i in range(6):
+            ln = rnd.randint(20, 40)
+            rec[f"str{i}"] = "".join(rnd.choices(ASCII, k=ln))
+        for i in range(6):
+            rec[f"int{i}"] = rnd.randint(1, 10000)
+        rec["map0"] = {k: rnd.randint(1, 10000) for k in rnd.sample(keys, 10)}
+        yield rec
+
+
+def timeit(fn: Callable[[], Any], repeat: int = 1) -> Tuple[float, Any]:
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows (the harness contract)."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, seconds: float, derived: str = "") -> None:
+        self.rows.append((name, seconds * 1e6, derived))
+        print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

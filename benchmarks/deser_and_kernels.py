@@ -1,0 +1,119 @@
+"""fig8 — deserialization/object-creation overhead (paper Fig. 8 / §B.1).
+
+The paper contrasts Java (per-object deserialization) with C++ (cast the
+buffer).  The exact analog here: per-element Python decode vs vectorized
+numpy decode vs the Pallas unpack path (device decode of packed codes).
+
+kernels — us_per_call for each Pallas kernel in interpret mode (correctness
+timing only; TPU perf comes from the dry-run roofline) plus the jnp
+reference path, which is what the XLA backend would run without the kernel.
+
+pipeline — host input pipeline throughput across the three decode paths.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokens import TokenCorpus, TokenCorpusWriter, pack_codes, unpack_codes
+from repro.kernels import ops, ref
+
+from .common import Csv, timeit
+
+
+def fig8(csv: Csv, n: int = 200_000) -> None:
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 4096, size=n).astype(np.uint32)
+    packed = pack_codes(codes, 16)
+    dictionary = rng.integers(0, 50000, size=4096).astype(np.int32)
+
+    # "Java path": per-element loop with Python object creation
+    def py_decode():
+        words = np.frombuffer(packed, dtype="<u4")
+        out = []
+        for w in words:
+            w = int(w)
+            out.append(int(dictionary[w & 0xFFFF]))
+            out.append(int(dictionary[(w >> 16) & 0xFFFF]))
+        return out
+
+    t, _ = timeit(py_decode)
+    csv.add("fig8/python-objects", t / n, f"MB/s={2*n/ t / 1e6 * 2:.1f}")
+    base = t
+
+    # "C++ path": vectorized numpy (cast the buffer)
+    def np_decode():
+        return dictionary[unpack_codes(packed, 16, n)]
+
+    t, _ = timeit(np_decode, repeat=3)
+    csv.add("fig8/numpy-vector", t / n, f"speedup={base/t:.0f}x")
+
+    # device path: Pallas bitunpack + dict_decode (interpret on CPU)
+    words = jnp.asarray(np.frombuffer(packed, dtype="<u4"))
+    dj = jnp.asarray(dictionary)
+
+    def dev_decode():
+        return np.asarray(ops.dict_decode(ops.bitunpack(words, 16, interpret=True), dj, interpret=True))
+
+    t, _ = timeit(dev_decode, repeat=2)
+    csv.add("fig8/pallas-interpret", t / n, f"(correctness path; TPU perf in §Roofline)")
+
+
+def kernels(csv: Csv) -> None:
+    rng = np.random.default_rng(1)
+    words = jnp.asarray(rng.integers(0, 2**32, size=(65536,), dtype=np.uint32))
+    for bits in (4, 8, 16):
+        f = jax.jit(lambda w: ref.bitunpack_ref(w, bits)).lower(words).compile()
+        t, _ = timeit(lambda: jax.block_until_ready(f(words)), repeat=3)
+        csv.add(f"kernels/bitunpack{bits}/jnp-ref", t, f"n={words.shape[0]}")
+        t, _ = timeit(lambda: jax.block_until_ready(ops.bitunpack(words, bits, interpret=True)), repeat=2)
+        csv.add(f"kernels/bitunpack{bits}/pallas-interp", t, "")
+    codes = jnp.asarray(rng.integers(0, 512, size=(32768,)), jnp.int32)
+    table = jnp.asarray(rng.integers(0, 50000, size=(512,)), jnp.int32)
+    t, _ = timeit(lambda: jax.block_until_ready(ref.dict_decode_ref(codes, table)), repeat=3)
+    csv.add("kernels/dict_decode/jnp-ref", t, "")
+    t, _ = timeit(lambda: jax.block_until_ready(ops.dict_decode(codes, table, interpret=True)), repeat=2)
+    csv.add("kernels/dict_decode/pallas-interp", t, "")
+    mask = jnp.asarray(rng.random(32768) < 0.06)
+    t, _ = timeit(lambda: jax.block_until_ready(ref.filter_compact_ref(mask)[0]), repeat=3)
+    csv.add("kernels/filter_compact/jnp-ref", t, "")
+    t, _ = timeit(lambda: jax.block_until_ready(ops.filter_compact(mask, interpret=True)[0]), repeat=2)
+    csv.add("kernels/filter_compact/pallas-interp", t, "")
+    from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+    q = jnp.asarray(rng.normal(size=(4, 512, 64)), jnp.float32)
+    t, _ = timeit(lambda: jax.block_until_ready(flash_attention_ref(q, q, q)), repeat=3)
+    csv.add("kernels/flash_attn/jnp-ref", t, "bh=4 s=512 d=64")
+    t, _ = timeit(lambda: jax.block_until_ready(flash_attention(q, q, q, interpret=True)), repeat=1)
+    csv.add("kernels/flash_attn/pallas-interp", t, "")
+
+
+def pipeline(csv: Csv, n_docs: int = 400, seq_len: int = 512) -> None:
+    tmp = tempfile.mkdtemp(prefix="bench-pipe-")
+    from repro.launch.load_data import synth_token_docs
+
+    w = TokenCorpusWriter(os.path.join(tmp, "c"), seq_len=seq_len, split_records=256)
+    for toks, meta in synth_token_docs(n_docs, vocab=30000):
+        w.add_document(toks, meta)
+    w.close()
+    corpus = TokenCorpus(os.path.join(tmp, "c"))
+    from repro.data.pipeline import HostPipeline
+
+    for decode in ("py", "np", "packed"):
+        pipe = HostPipeline(corpus, batch_per_host=8, prefetch=0, decode=decode)
+        it = iter(pipe)
+        n_batches = 16 if decode != "py" else 4
+        def run():
+            tok = 0
+            for _ in range(n_batches):
+                b = next(it)
+                tok += b["tokens"].size
+            return tok
+        t, tok = timeit(run)
+        csv.add(f"pipeline/decode-{decode}", t / n_batches,
+                f"tok/s={tok/t:.0f}")
+    shutil.rmtree(tmp, ignore_errors=True)

@@ -1,0 +1,106 @@
+"""§Roofline generator: reads dry-run JSONs, emits the per-cell roofline
+table (markdown + CSV) used in EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/results/dryrun]
+        [--variant baseline] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+DEF_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str, variant: str = "baseline", mesh: str = "single") -> List[Dict]:
+    out = []
+    for fn in sorted(os.listdir(dir_)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(dir_, fn)) as f:
+            r = json.load(f)
+        if r.get("variant") == variant and r.get("mesh") == mesh:
+            out.append(r)
+    out.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                            if r["shape"] in SHAPE_ORDER else 9))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def row(r: Dict) -> Dict:
+    if r["status"] != "ok":
+        return {
+            "arch": r["arch"], "shape": r["shape"], "status": r["status"],
+            "reason": r.get("reason", r.get("error", ""))[:70],
+        }
+    t = r["roofline"]
+    step = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return {
+        "arch": r["arch"], "shape": r["shape"], "status": "ok",
+        "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"], "dominant": t["dominant"],
+        "roofline_frac": t["compute_s"] / step if step else 0.0,
+        "useful_ratio": r.get("useful_flops_ratio"),
+        "temp_gb": r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+        "arg_gb": r.get("memory", {}).get("argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "roofline frac | 6ND/HLO | temp GB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | "
+                f"{r.get('reason','')} |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['roofline_frac']*100:.1f}% | "
+            f"{(r['useful_ratio'] or 0):.2f} | {r['temp_gb']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEF_DIR)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = [row(r) for r in load(args.dir, args.variant, args.mesh)]
+    if args.markdown:
+        print(markdown_table(rows))
+        return
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,roofline_frac,useful_ratio")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']},{r['shape']},,,,{r['status']},,")
+        else:
+            print(
+                f"{r['arch']},{r['shape']},{r['compute_s']:.4g},{r['memory_s']:.4g},"
+                f"{r['collective_s']:.4g},{r['dominant']},{r['roofline_frac']:.3f},"
+                f"{(r['useful_ratio'] or 0):.3f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

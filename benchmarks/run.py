@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
+stderr-safe comment lines).  Scale flags keep the default run laptop-fast;
+--full multiplies dataset sizes toward the paper's regime.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,table1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger datasets")
+    ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
+                    "fig9,fig10,fig11,table2,kernels,pipeline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    mul = 4 if args.full else 1
+
+    from .common import Csv
+    from . import deser_and_kernels as dk
+    from . import storage_formats as sf
+
+    csv = Csv()
+    print("name,us_per_call,derived")
+    jobs = [
+        ("fig7", lambda: sf.fig7(csv, n=8000 * mul)),
+        ("table1", lambda: sf.table1(csv, n=6000 * mul)),
+        ("fig8", lambda: dk.fig8(csv, n=200_000 * mul)),
+        ("fig9", lambda: sf.fig9(csv, n=8000 * mul)),
+        ("fig10", lambda: sf.fig10(csv, n=20000 * mul)),
+        ("fig11", lambda: sf.fig11(csv, n=4000 * mul)),
+        ("table2", lambda: sf.table2(csv, n=8000 * mul)),
+        ("kernels", lambda: dk.kernels(csv)),
+        ("pipeline", lambda: dk.pipeline(csv, n_docs=400 * mul)),
+    ]
+    failures = []
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", flush=True)
+    if failures:
+        print(f"# {len(failures)} benchmark(s) failed: {[f[0] for f in failures]}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Paper §6 benchmarks over storage formats.
+
+fig7   — microbenchmark: scan projections of the synthetic dataset across
+         TXT / SEQ / CIF / RCFile (paper Fig. 7)
+table1 — the crawl workload across SEQ variants, RCFile(+comp), and the five
+         CIF metadata layouts (paper Table 1); reports map time + bytes read
+fig9   — RCFile row-group size sweep (paper Fig. 9 / §B.2)
+fig10  — selectivity sweep CIF vs CIF-SL (paper Fig. 10 / §B.4)
+fig11  — record-width sweep (paper Fig. 11 / §B.5)
+table2 — load times per format (paper Table 2 / §B.3)
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.core import CIFReader, COFWriter, ColumnFormat, Schema, STRING, urlinfo_schema
+from repro.core.rowgroup import RCFileReader, RCFileWriter
+from repro.core.seqfile import SeqReader, write_seq
+from repro.core.textfile import TextReader, write_text
+from repro.launch.load_data import synth_crawl_records
+
+from .common import Csv, micro_records, micro_schema, timeit
+
+
+def _tmp() -> str:
+    return tempfile.mkdtemp(prefix="bench-")
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig7(csv: Csv, n: int = 8000) -> None:
+    tmp = _tmp()
+    schema = micro_schema()
+    records = list(micro_records(n))
+    projections = {
+        "1int": ["int0"],
+        "1str": ["str0"],
+        "1map": ["map0"],
+        "all": schema.names(),
+    }
+    # TXT / SEQ scan everything regardless of projection
+    p_txt = os.path.join(tmp, "d.jsonl")
+    write_text(p_txt, schema, records)
+    t, _ = timeit(lambda: sum(1 for _ in TextReader(p_txt, schema).scan()))
+    csv.add("fig7/txt/any", t / n, f"bytes={os.path.getsize(p_txt)}")
+    p_seq = os.path.join(tmp, "d.seq")
+    write_seq(p_seq, schema, records)
+    t, _ = timeit(lambda: sum(1 for _ in SeqReader(p_seq).scan()))
+    seq_t = t
+    csv.add("fig7/seq/any", t / n, f"bytes={os.path.getsize(p_seq)}")
+
+    root = os.path.join(tmp, "cif")
+    w = COFWriter(root, schema, split_records=4096)
+    w.append_all(records)
+    w.close()
+    p_rc = os.path.join(tmp, "d.rc")
+    rw = RCFileWriter(p_rc, schema, rowgroup_bytes=4 * 1024 * 1024)
+    for r in records:
+        rw.append(r)
+    rw.close()
+
+    for pname, cols in projections.items():
+        def cif_scan():
+            r = CIFReader(root, columns=cols, lazy=False)
+            for rec in r.scan():
+                for c in cols:
+                    rec.get(c)
+            return r.stats.bytes_io
+
+        t, bio = timeit(cif_scan)
+        csv.add(f"fig7/cif/{pname}", t / n, f"speedup_vs_seq={seq_t/t:.2f}x;bytes={bio}")
+
+        def rc_scan():
+            r = RCFileReader(p_rc, columns=cols)
+            for rec in r.scan():
+                pass
+            return r.stats.bytes_io
+
+        t, bio = timeit(rc_scan)
+        csv.add(f"fig7/rcfile/{pname}", t / n, f"speedup_vs_seq={seq_t/t:.2f}x;bytes={bio}")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _run_fig1_job_cif(root: str, lazy: bool = True):
+    r = CIFReader(root, columns=["url", "metadata"], lazy=lazy)
+    found = set()
+    for rec in r.scan():
+        if "ibm.com/jp" in rec.get("url"):
+            ct = rec.get_map_value("metadata", "content-type")
+            if ct:
+                found.add(ct)
+    return r.stats, found
+
+
+def table1(csv: Csv, n: int = 6000, content_bytes: int = 4096) -> None:
+    tmp = _tmp()
+    schema = urlinfo_schema()
+    records = list(synth_crawl_records(n, content_bytes=content_bytes))
+    answer = None
+
+    # SEQ variants
+    for mode, name in (("plain", "seq-uncomp"), ("record", "seq-record"), ("block", "seq-block")):
+        p = os.path.join(tmp, f"{name}.seq")
+        write_seq(p, schema, records, mode=mode)
+        def scan(p=p):
+            found = set()
+            r = SeqReader(p)
+            for rec in r.scan():
+                if "ibm.com/jp" in rec["url"]:
+                    found.add(rec["metadata"]["content-type"])
+            return r.stats.bytes_io, found
+        t, (bio, found) = timeit(scan)
+        answer = answer or found
+        assert found == answer
+        csv.add(f"table1/{name}", t / n, f"bytes={bio}")
+        if name == "seq-uncomp":
+            base = t
+
+    # RCFile
+    for codec, name in (("none", "rcfile"), ("zlib", "rcfile-comp")):
+        p = os.path.join(tmp, f"{name}.rc")
+        w = RCFileWriter(p, schema, codec=codec)
+        for r_ in records:
+            w.append(r_)
+        w.close()
+        def scan(p=p):
+            found = set()
+            r = RCFileReader(p, columns=["url", "metadata"])
+            for rec in r.scan():
+                if "ibm.com/jp" in rec["url"]:
+                    found.add(rec["metadata"]["content-type"])
+            return r.stats.bytes_io, found
+        t, (bio, found) = timeit(scan)
+        assert found == answer
+        csv.add(f"table1/{name}", t / n, f"speedup={base/t:.2f}x;bytes={bio}")
+
+    # CIF metadata layouts (Table 1's five variants)
+    variants = {
+        "cif": ColumnFormat("plain"),
+        "cif-sl": ColumnFormat("skiplist"),
+        "cif-lzo": ColumnFormat("cblock", codec="lzo"),
+        "cif-zlib": ColumnFormat("cblock", codec="zlib"),
+        "cif-dcsl": ColumnFormat("dcsl"),
+    }
+    for name, fmt in variants.items():
+        root = os.path.join(tmp, name)
+        w = COFWriter(root, schema, formats={
+            "metadata": fmt, "url": ColumnFormat("skiplist"),
+            "content": ColumnFormat("cblock", codec="lzo"),
+        })
+        w.append_all(records)
+        w.close()
+        t, (stats, found) = timeit(lambda root=root: _run_fig1_job_cif(root))
+        assert found == answer, (name, found, answer)
+        csv.add(
+            f"table1/{name}", t / n,
+            f"speedup={base/t:.2f}x;bytes={stats.bytes_io};"
+            f"touched={stats.bytes_touched};decoded={stats.cells_decoded}",
+        )
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig9(csv: Csv, n: int = 8000) -> None:
+    tmp = _tmp()
+    schema = micro_schema()
+    records = list(micro_records(n))
+    for rg_mb in (1, 4, 16):
+        p = os.path.join(tmp, f"rg{rg_mb}.rc")
+        w = RCFileWriter(p, schema, rowgroup_bytes=rg_mb * 1024 * 1024)
+        for r in records:
+            w.append(r)
+        w.close()
+        def scan(p=p):
+            r = RCFileReader(p, columns=["int0"])
+            for _ in r.scan():
+                pass
+            return r.stats.bytes_io
+        t, bio = timeit(scan)
+        csv.add(f"fig9/rcfile-rg{rg_mb}mb/1int", t / n, f"bytes={bio}")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def fig10(csv: Csv, n: int = 20000) -> None:
+    """Selectivity sweep: CIF vs CIF-SL, aggregate a map value under a
+    predicate on a string column (§B.4)."""
+    tmp = _tmp()
+    schema = micro_schema()
+    records = []
+    for i, rec in enumerate(micro_records(n)):
+        records.append(rec)
+    for sel in (0.01, 0.1, 0.5, 1.0):
+        thresh = int(10000 * sel)
+        for name, fmt in (("cif", ColumnFormat("plain")), ("cif-sl", ColumnFormat("skiplist")), ("cif-dcsl", ColumnFormat("dcsl"))):
+            root = os.path.join(tmp, f"{name}-{sel}")
+            w = COFWriter(root, schema, formats={"map0": fmt})
+            w.append_all(records)
+            w.close()
+            def job(root=root, thresh=thresh):
+                r = CIFReader(root, columns=["int0", "map0"], lazy=True)
+                total = 0
+                for rec in r.scan():
+                    if rec.get("int0") <= thresh:
+                        m = rec.get("map0")
+                        total += sum(m.values())
+                return r.stats, total
+            t, (stats, _) = timeit(job)
+            csv.add(f"fig10/{name}/sel{sel}", t / n,
+                    f"decoded={stats.cells_decoded};skipped={stats.cells_skipped}")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def fig11(csv: Csv, n: int = 4000) -> None:
+    tmp = _tmp()
+    import random
+    rnd = random.Random(0)
+    for ncols in (20, 40, 80):
+        schema = Schema([(f"c{i}", STRING()) for i in range(ncols)])
+        records = [
+            {f"c{i}": "".join(rnd.choices("abcdefgh", k=30)) for i in range(ncols)}
+            for _ in range(n)
+        ]
+        root = os.path.join(tmp, f"w{ncols}")
+        w = COFWriter(root, schema)
+        w.append_all(records)
+        w.close()
+        p = os.path.join(tmp, f"w{ncols}.rc")
+        rw = RCFileWriter(p, schema, rowgroup_bytes=16 * 1024 * 1024)
+        for r in records:
+            rw.append(r)
+        rw.close()
+        for frac, cols in (("1col", ["c0"]), ("10pct", [f"c{i}" for i in range(max(1, ncols // 10))]), ("all", schema.names())):
+            def cif_scan(root=root, cols=cols):
+                r = CIFReader(root, columns=cols, lazy=False)
+                for rec in r.scan():
+                    pass
+                return r.stats.bytes_io
+            t, bio = timeit(cif_scan)
+            csv.add(f"fig11/cif/w{ncols}/{frac}", t / n, f"bytes={bio}")
+            def rc_scan(p=p, cols=cols):
+                r = RCFileReader(p, columns=cols)
+                for rec in r.scan():
+                    pass
+                return r.stats.bytes_io
+            t, bio = timeit(rc_scan)
+            csv.add(f"fig11/rcfile/w{ncols}/{frac}", t / n, f"bytes={bio}")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def table2(csv: Csv, n: int = 8000) -> None:
+    tmp = _tmp()
+    schema = micro_schema()
+    records = list(micro_records(n))
+    def load_cif(fmt=None):
+        root = os.path.join(tmp, f"load-{time.time_ns()}")
+        w = COFWriter(root, schema, formats=fmt or {})
+        w.append_all(records)
+        w.close()
+        return root
+    t, _ = timeit(lambda: load_cif())
+    csv.add("table2/load-cif", t / n, "")
+    t, _ = timeit(lambda: load_cif({"map0": ColumnFormat("skiplist")}))
+    csv.add("table2/load-cif-sl", t / n, "overhead vs cif should be minor")
+    t, _ = timeit(lambda: load_cif({"map0": ColumnFormat("dcsl")}))
+    csv.add("table2/load-cif-dcsl", t / n, "")
+    def load_rc():
+        p = os.path.join(tmp, f"l{time.time_ns()}.rc")
+        w = RCFileWriter(p, schema)
+        for r in records:
+            w.append(r)
+        w.close()
+    t, _ = timeit(load_rc)
+    csv.add("table2/load-rcfile", t / n, "")
+    shutil.rmtree(tmp, ignore_errors=True)

@@ -1,0 +1,99 @@
+"""Storage-format shootout on the paper's workload (mini Table 1).
+
+Loads the same synthetic crawl into TXT / SEQ / RCFile / CIF variants and
+runs the Fig. 1 job on each, reporting map time and bytes read — the
+paper's two headline columns.  Full-scale numbers live in benchmarks/.
+
+Run:  PYTHONPATH=src python examples/crawl_analytics.py [--n 20000]
+"""
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import CIFReader, COFWriter, ColumnFormat, urlinfo_schema
+from repro.core.rowgroup import RCFileReader, RCFileWriter
+from repro.core.seqfile import SeqReader, write_seq
+from repro.core.textfile import TextReader, write_text
+from repro.launch.load_data import synth_crawl_records
+
+
+def job_over_records(records) -> set:
+    out = set()
+    for rec in records:
+        url = rec["url"] if isinstance(rec, dict) else rec.get("url")
+        if "ibm.com/jp" in url:
+            if isinstance(rec, dict):
+                ct = rec["metadata"].get("content-type")
+            else:
+                ct = rec.get_map_value("metadata", "content-type")
+            if ct:
+                out.add(ct)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    args = ap.parse_args()
+    tmp = tempfile.mkdtemp(prefix="crawl-analytics-")
+    schema = urlinfo_schema()
+    records = list(synth_crawl_records(args.n, content_bytes=1024))
+    results = []
+
+    def report(name, secs, bytes_io, answer):
+        results.append((name, secs, bytes_io))
+        print(f"{name:10s} map_time={secs*1e3:8.1f}ms bytes_read={bytes_io/1e6:8.1f}MB"
+              f"  -> {sorted(answer)}")
+
+    # TXT
+    p = os.path.join(tmp, "crawl.jsonl")
+    write_text(p, schema, records)
+    r = TextReader(p, schema)
+    t0 = time.time(); ans = job_over_records(r.scan())
+    report("TXT", time.time() - t0, r.bytes_io, ans)
+
+    # SEQ
+    p = os.path.join(tmp, "crawl.seq")
+    write_seq(p, schema, records, mode="plain")
+    r = SeqReader(p)
+    t0 = time.time(); ans = job_over_records(r.scan())
+    report("SEQ", time.time() - t0, r.stats.bytes_io, ans)
+
+    # RCFile
+    p = os.path.join(tmp, "crawl.rc")
+    w = RCFileWriter(p, schema)
+    for x in records:
+        w.append(x)
+    w.close()
+    r = RCFileReader(p, columns=["url", "metadata"])
+    t0 = time.time(); ans = job_over_records(r.scan())
+    report("RCFile", time.time() - t0, r.stats.bytes_io, ans)
+
+    # CIF (plain) and CIF-DCSL
+    for name, fmt in (("CIF", ColumnFormat("plain")),
+                      ("CIF-DCSL", ColumnFormat("dcsl"))):
+        root = os.path.join(tmp, f"cif-{name}")
+        w = COFWriter(root, schema, formats={"metadata": fmt,
+                                             "url": ColumnFormat("skiplist")})
+        w.append_all(records)
+        w.close()
+        rd = CIFReader(root, columns=["url", "metadata"], lazy=True)
+        t0 = time.time(); ans = job_over_records(rd.scan())
+        report(name, time.time() - t0, rd.stats.bytes_io, ans)
+
+    base = results[1][1]  # SEQ map time
+    print("\nspeedup vs SEQ (paper Table 1 reports 60.8x for CIF, 107.8x for "
+          "CIF-DCSL at 6.4TB scale; content column dominance grows with "
+          "record size):")
+    for name, secs, _ in results:
+        print(f"  {name:10s} {base/secs:6.1f}x")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

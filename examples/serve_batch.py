@@ -1,0 +1,52 @@
+"""Batched serving demo: continuous batching over a fixed decode step.
+
+Submits more requests than slots; the engine admits them as slots free
+(slot-reuse resets KV/recurrent state), decodes greedily, and reports
+per-request outputs + aggregate throughput.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch gemma3-12b]
+(arch is always instantiated at reduced/smoke scale on CPU)
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, reduced
+    from repro.models import lm
+    from repro.models.spec import init_params
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = reduced(get_config(args.arch))
+    assert cfg.supports_decode, f"{args.arch} is encoder-only"
+    params = init_params(lm.param_spec(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=args.slots, max_seq=256)
+
+    for i in range(args.requests):
+        engine.submit(Request(rid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
+                              max_new=args.max_new))
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    for r in sorted(done, key=lambda r: r.rid)[:5]:
+        print(f"req {r.rid}: prompt={r.prompt} -> {r.out}")
+    print(f"... {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s on CPU at smoke scale)")
+
+
+if __name__ == "__main__":
+    main()

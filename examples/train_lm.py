@@ -1,0 +1,85 @@
+"""End-to-end training driver: columnar token corpus -> HostPipeline ->
+pjit train loop -> async checkpoints -> kill-safe resume.
+
+Default scale finishes on a laptop CPU in a few minutes (a ~1M-param
+tinyllama-family config, 200 steps).  The same command scales the model by
+flag; on a pod, drop --reduced and add --production-mesh:
+
+    PYTHONPATH=src python examples/train_lm.py                  # tiny demo
+    PYTHONPATH=src python examples/train_lm.py --steps 400 \
+        --d-model 512 --layers 8                                # ~100M-class
+
+The loss curve is written to <workdir>/history.json.
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default="/tmp/cif-train-demo")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--docs", type=int, default=2000)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import HostPipeline
+    from repro.data.tokens import TokenCorpus, TokenCorpusWriter
+    from repro.distributed.sharding import default_sharding
+    from repro.launch.load_data import synth_token_docs
+    from repro.launch.mesh import make_host_mesh
+    from repro.training.train_loop import TrainLoopConfig, fit
+
+    corpus_dir = os.path.join(args.workdir, "corpus")
+    if not os.path.exists(os.path.join(corpus_dir, "corpus.json")):
+        w = TokenCorpusWriter(corpus_dir, seq_len=args.seq_len, split_records=256)
+        for toks, meta in synth_token_docs(args.docs, vocab=8192):
+            w.add_document(toks, meta)
+        w.close()
+        print(f"corpus: {w.n_sequences} sequences")
+    corpus = TokenCorpus(corpus_dir)
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    cfg = dataclasses.replace(
+        cfg,
+        name="demo-lm",
+        d_model=args.d_model,
+        n_layers=args.layers,
+        n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(2, args.d_model // 128),
+        head_dim=0,
+        d_ff=args.d_model * 3,
+        vocab_size=corpus.vocab_size,
+    )
+    mesh = make_host_mesh()
+    shape = ShapeConfig("train", args.seq_len, args.batch, "train")
+    pipeline = HostPipeline(corpus, batch_per_host=args.batch)
+    loop = TrainLoopConfig(
+        steps=args.steps,
+        ckpt_every=max(50, args.steps // 4),
+        log_every=10,
+        ckpt_dir=os.path.join(args.workdir, "ckpt"),
+    )
+    out = fit(cfg, mesh, default_sharding(cfg), shape, pipeline, loop)
+    hist = out["history"]
+    with open(os.path.join(args.workdir, "history.json"), "w") as f:
+        json.dump(hist, f, indent=1)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .base import SHAPES, ModelConfig, ShapeConfig, all_configs, get_config, reduced
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "all_configs", "get_config", "reduced"]

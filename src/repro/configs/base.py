@@ -1,0 +1,194 @@
+"""Model/config system: every assigned architecture is a ModelConfig.
+
+Shapes (assigned to this paper's arch pool):
+    train_4k     seq=4096,   global_batch=256   (training)
+    prefill_32k  seq=32768,  global_batch=32    (inference prefill)
+    decode_32k   seq=32768,  global_batch=128   (decode: 1 new token vs KV)
+    long_500k    seq=524288, global_batch=1     (long-context decode)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention
+    rope_theta: float = 10000.0
+    sliding_window: int = 0  # window size for local-attention layers
+    layer_pattern: str = ""  # per-layer kinds, cycled; "" -> homogeneous
+    causal: bool = True  # False for encoder-only archs
+    attn_logit_softcap: float = 0.0
+
+    # moe
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_impl: str = "ragged"  # ragged (dropless) | capacity (§Perf variant)
+
+    # attention GQA compute path: "gather" expands KV per q-head (general,
+    # needed for padded-head archs); "grouped" keeps KV unexpanded (§Perf)
+    attn_kv_mode: str = "gather"
+
+    # ssm / recurrent
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+
+    # frontends (modality stubs per the assignment: input_specs() provides
+    # precomputed frame/patch embeddings)
+    frontend: str = "none"  # none | vision | audio
+    n_patches: int = 1024  # vision: patch embeddings per example
+
+    act: str = "swiglu"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # shape applicability
+    supports_decode: bool = True
+    subquadratic: bool = False  # eligible for long_500k
+
+    # remat: "none" | "block" (checkpoint each layer's activations)
+    remat: str = "block"
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def layer_plan(self) -> List[Tuple[str, int]]:
+        """Segments of (kind, count).  Homogeneous archs get one scanned
+        segment; patterned archs (gemma3, zamba2, xlstm) get repeated runs.
+
+        Kinds: attn (full), attn_local, moe, mamba, mlstm, slstm,
+        shared_attn (zamba2's reused transformer block).
+        """
+        if not self.layer_pattern:
+            kind = "moe" if self.family == "moe" else "attn"
+            return [(kind, self.n_layers)]
+        # compress the cycled pattern into runs covering n_layers *pattern
+        # positions* (shared_attn does not consume a layer index: it is a
+        # reused block, so it is encoded as its own symbol in the pattern).
+        runs: List[Tuple[str, int]] = []
+        symbols = {
+            "F": "attn",
+            "L": "attn_local",
+            "M": "mamba",
+            "X": "mlstm",
+            "S": "slstm",
+            "A": "shared_attn",
+            "E": "moe",
+        }
+        consumed = 0
+        i = 0
+        pat = self.layer_pattern
+        while consumed < self.n_layers:
+            sym = pat[i % len(pat)]
+            kind = symbols[sym]
+            if kind != "shared_attn":
+                consumed += 1
+            if runs and runs[-1][0] == kind:
+                runs[-1] = (kind, runs[-1][1] + 1)
+            else:
+                runs.append((kind, 1))
+            i += 1
+        return runs
+
+    def applicable_shapes(self) -> List[str]:
+        out = ["train_4k", "prefill_32k"]
+        if self.supports_decode:
+            out.append("decode_32k")
+            if self.subquadratic:
+                out.append("long_500k")
+        return out
+
+    def skip_reason(self, shape: str) -> Optional[str]:
+        if shape in self.applicable_shapes():
+            return None
+        if not self.supports_decode:
+            return "encoder-only arch has no decode step"
+        return "long_500k needs sub-quadratic attention; arch is pure full-attention"
+
+
+_REGISTRY: Dict[str, "ModelConfig"] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    assert cfg.name not in _REGISTRY, f"duplicate config {cfg.name}"
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    from . import (  # noqa: F401
+        dbrx_132b,
+        gemma3_12b,
+        hubert_xlarge,
+        olmoe_1b_7b,
+        phi3_vision_4_2b,
+        phi4_mini_3_8b,
+        stablelm_1_6b,
+        tinyllama_1_1b,
+        xlstm_350m,
+        zamba2_1_2b,
+    )
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    shrink = dict(
+        n_layers=max(2, min(4, cfg.n_layers // 12)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(4, max(1, cfg.n_kv_heads // 8)) if cfg.n_kv_heads else 4,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        head_dim=16,
+        sliding_window=32 if cfg.sliding_window else 0,
+        n_experts=8 if cfg.n_experts else 0,
+        moe_top_k=min(2, cfg.moe_top_k) if cfg.moe_top_k else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        n_patches=8 if cfg.frontend == "vision" else cfg.n_patches,
+        remat="none",
+    )
+    shrink.update(overrides)
+    return replace(cfg, name=cfg.name + "-reduced", **shrink)

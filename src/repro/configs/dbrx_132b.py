@@ -1,0 +1,20 @@
+"""dbrx-132b [moe] — 16 experts, top-4, fine-grained (hf:databricks/dbrx-base).
+
+The big one: ~130B params.  Expert weights are sharded over BOTH mesh axes
+(expert axis over model, d_ff over data = FSDP-style storage) so fp32 Adam
+state fits 256x16GB; see distributed/sharding.py rules for family="moe".
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    n_experts=16,
+    moe_top_k=4,
+))

@@ -1,0 +1,22 @@
+"""gemma3-12b [dense] — 5:1 local:global sliding-window attention, 128k ctx.
+
+Sliding-window local layers make the arch sub-quadratic, so long_500k runs
+(global layers keep a full KV cache; local layers a 1024-token window).
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=15360,
+    vocab_size=262144,
+    layer_pattern="LLLLLF",  # 5 local : 1 global
+    sliding_window=1024,
+    rope_theta=1_000_000.0,
+    act="gelu",
+    subquadratic=True,
+))

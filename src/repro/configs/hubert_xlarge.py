@@ -1,0 +1,22 @@
+"""hubert-xlarge [audio] — encoder-only, same arch as wav2vec2 (arXiv:2106.07447).
+
+Frontend is a STUB: input_specs() provides precomputed frame embeddings
+(B, T, d_model).  Trains with masked-unit prediction over vocab=504 units.
+Encoder-only -> decode shapes skipped.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,
+    frontend="audio",
+    act="gelu",
+    supports_decode=False,
+))

@@ -1,0 +1,20 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend.
+
+The modality frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (B, n_patches, d_model) that are concatenated
+ahead of the text tokens.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    frontend="vision",
+    n_patches=1024,
+))

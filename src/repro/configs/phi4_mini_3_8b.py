@@ -1,0 +1,17 @@
+"""phi4-mini-3.8b [dense] — RoPE SwiGLU GQA (arXiv:2412.08905).
+
+24 heads do not divide the 16-way model axis: the attention layer pads q
+heads 24->32 with output masking (see models/layers.py); kv=8 is replicated.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+))

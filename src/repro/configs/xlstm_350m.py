@@ -1,0 +1,19 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks (arXiv:2405.04517).
+
+d_ff=0: blocks carry their own 2x up-projection (no standalone FFN).
+Pattern: 5 mLSTM : 1 sLSTM.  Recurrent state is O(1)/token -> long_500k runs.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    layer_pattern="XXXXXS",
+    subquadratic=True,
+))

@@ -1,0 +1,21 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block
+(arXiv:2411.15242).  38 Mamba2 layers; ONE shared transformer block
+(attn kv=32 + d_ff=8192 MLP) applied after every 6th Mamba2 layer, weights
+reused across applications (per-application LoRA omitted; DESIGN.md §8).
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    layer_pattern="MMMMMMA",
+    ssm_state=64,
+    ssm_head_dim=64,
+    subquadratic=True,
+))

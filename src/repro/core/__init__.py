@@ -1,0 +1,42 @@
+"""Core columnar storage engine — the paper's contribution.
+
+Public API:
+    Schema / ColumnType constructors        (schema)
+    COFWriter, add_column                   (cof)     — ColumnOutputFormat
+    CIFReader                               (cif)     — ColumnInputFormat
+    ColumnFormat                            (colfile) — per-column layout
+    Placement, WorkQueue                    (placement) — CPP analog
+    run_job, fig1_map, fig1_reduce          (mapreduce)
+Baselines: seqfile (SEQ), textfile (TXT), rowgroup (RCFile).
+"""
+from .cif import CIFReader, ScanStats, list_splits, read_schema
+from .cof import COFWriter, add_column, split_name
+from .colfile import CBLOCK_RECORDS, ColumnFileReader, ColumnFileWriter, ColumnFormat
+from .lazy import EagerRecord, LazyRecord, Record
+from .mapreduce import JobResult, fig1_map, fig1_reduce, run_job
+from .placement import Placement, WorkQueue
+from .schema import (
+    ARRAY,
+    BOOL,
+    BYTES,
+    FLOAT32,
+    FLOAT64,
+    INT32,
+    INT64,
+    MAP,
+    RECORD,
+    STRING,
+    ColumnType,
+    Schema,
+    urlinfo_schema,
+)
+
+__all__ = [
+    "ARRAY", "BOOL", "BYTES", "CBLOCK_RECORDS", "CIFReader", "COFWriter",
+    "ColumnFileReader", "ColumnFileWriter", "ColumnFormat", "ColumnType",
+    "EagerRecord", "FLOAT32", "FLOAT64", "INT32", "INT64", "JobResult",
+    "LazyRecord", "MAP", "Placement", "RECORD", "Record", "STRING",
+    "ScanStats", "Schema", "WorkQueue", "add_column", "fig1_map",
+    "fig1_reduce", "list_splits", "read_schema", "run_job", "split_name",
+    "urlinfo_schema",
+]

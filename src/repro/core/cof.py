@@ -1,0 +1,159 @@
+"""ColumnOutputFormat (COF, §4.2): split-directories with one file per column.
+
+A dataset directory looks like (Fig. 4):
+
+    /data/2011-01-01/
+        schema.json
+        split-00000/
+            _meta.json          # n_records, per-column format + byte sizes
+            url.col
+            srcUrl.col
+            metadata.col
+            ...
+        split-00001/
+            ...
+
+Split-directories follow a strict naming convention (``split-NNNNN``) —
+exactly as the paper's CPP requires a naming convention to know which files
+to co-locate.  ``placement.py`` consumes it.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict
+from typing import Any, Dict, Iterable, List, Optional
+
+from .colfile import ColumnFileWriter, ColumnFormat
+from .schema import Schema
+
+SPLIT_PREFIX = "split-"
+DEFAULT_SPLIT_RECORDS = 4096
+
+
+def split_name(i: int) -> str:
+    return f"{SPLIT_PREFIX}{i:05d}"
+
+
+def is_split_dir(name: str) -> bool:
+    return name.startswith(SPLIT_PREFIX) and name[len(SPLIT_PREFIX) :].isdigit()
+
+
+class COFWriter:
+    """Streams records into split-directories.
+
+    formats: optional per-column ColumnFormat (default: plain).  This is the
+    load-time layout choice of Table 1 (CIF vs CIF-SL vs CIF-LZO vs CIF-DCSL).
+    """
+
+    def __init__(
+        self,
+        root: str,
+        schema: Schema,
+        formats: Optional[Dict[str, ColumnFormat]] = None,
+        split_records: int = DEFAULT_SPLIT_RECORDS,
+    ):
+        self.root = root
+        self.schema = schema
+        self.formats = {n: ColumnFormat() for n in schema.names()}
+        if formats:
+            self.formats.update(formats)
+        self.split_records = split_records
+        os.makedirs(root, exist_ok=True)
+        with open(os.path.join(root, "schema.json"), "w") as f:
+            f.write(schema.to_json())
+        self._split_idx = 0
+        self._writers: Optional[Dict[str, ColumnFileWriter]] = None
+        self._split_n = 0
+        self.total_records = 0
+
+    def _open_split(self) -> None:
+        self._writers = {
+            name: ColumnFileWriter(self.schema.type_of(name), self.formats[name])
+            for name in self.schema.names()
+        }
+        self._split_n = 0
+
+    def append(self, record: Dict[str, Any]) -> None:
+        if self._writers is None:
+            self._open_split()
+        for name in self.schema.names():
+            self._writers[name].append(record[name])
+        self._split_n += 1
+        self.total_records += 1
+        if self._split_n >= self.split_records:
+            self._close_split()
+
+    def append_all(self, records: Iterable[Dict[str, Any]]) -> None:
+        for r in records:
+            self.append(r)
+
+    def _close_split(self) -> None:
+        assert self._writers is not None
+        sdir = os.path.join(self.root, split_name(self._split_idx))
+        os.makedirs(sdir, exist_ok=True)
+        sizes = {}
+        for name, w in self._writers.items():
+            raw = w.finish()
+            path = os.path.join(sdir, f"{name}.col")
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(raw)
+            os.replace(tmp, path)  # atomic: readers never see partial files
+            sizes[name] = len(raw)
+        meta = {
+            "n_records": self._split_n,
+            "columns": {n: asdict(self.formats[n]) for n in self.schema.names()},
+            "bytes": sizes,
+        }
+        with open(os.path.join(sdir, "_meta.json"), "w") as f:
+            json.dump(meta, f)
+        self._split_idx += 1
+        self._writers = None
+        self._split_n = 0
+
+    def close(self) -> None:
+        if self._writers is not None and self._split_n > 0:
+            self._close_split()
+        self._writers = None
+
+
+def add_column(
+    root: str,
+    name: str,
+    typ,
+    values_fn,
+    fmt: Optional[ColumnFormat] = None,
+) -> None:
+    """Schema evolution (§4.3): add a derived column WITHOUT rewriting the
+    dataset — just drop one more file into each split-directory.  RCFile
+    must rewrite every block for this; COF appends a file.
+
+    values_fn(split_index, n_records) -> iterable of values for that split.
+    """
+    from .cif import list_splits  # local import to avoid cycle
+
+    schema = Schema.from_json(open(os.path.join(root, "schema.json")).read())
+    new_schema = schema.with_column(name, typ)
+    fmt = fmt or ColumnFormat()
+    for si, sdir in list_splits(root):
+        meta = json.load(open(os.path.join(sdir, "_meta.json")))
+        n = meta["n_records"]
+        w = ColumnFileWriter(typ, fmt)
+        count = 0
+        for v in values_fn(si, n):
+            w.append(v)
+            count += 1
+        assert count == n, f"split {si}: expected {n} values, got {count}"
+        raw = w.finish()
+        path = os.path.join(sdir, f"{name}.col")
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(raw)
+        os.replace(tmp, path)
+        meta["columns"][name] = asdict(fmt)
+        meta["bytes"][name] = len(raw)
+        with open(os.path.join(sdir, "_meta.json"), "w") as f:
+            json.dump(meta, f)
+    with open(os.path.join(root, "schema.json"), "w") as f:
+        f.write(new_schema.to_json())

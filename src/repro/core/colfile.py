@@ -1,0 +1,291 @@
+"""Column-file container: one file per column per split-directory (§4.2).
+
+Layout:  [MAGIC "RCOL"][u8 version][kind str][codec str][uvarint n_records]
+         [uvarint body_len][body]
+
+Kinds (the paper's five metadata-column layouts from Table 1 map onto these):
+  plain    — serialized cells back-to-back                      (CIF)
+  skiplist — cells interleaved with skip blocks                 (CIF-SL)
+  cblock   — compressed blocks, codec ∈ {lzo, zlib}             (CIF-LZO/-ZLIB)
+  dcsl     — dictionary-compressed skip list (map columns)      (CIF-DCSL)
+
+Every reader exposes monotone ``value_at(index)`` plus instrumentation
+counters.  ``bytes_touched`` models the paper's "Data Read" column: bytes the
+reader actually traverses (skip-list jumps and undecompressed blocks are NOT
+touched, matching how CIF-SL reads 75GB where CIF reads 96GB in Table 1).
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+from .compression import compress_block, decompress_block, read_block_header
+from .dcsl import DICT_BLOCK, DCSLColumnReader, DCSLColumnWriter
+from .schema import ColumnType
+from .skiplist import SkipListReader, SkipListWriter
+from .varcodec import (
+    decode_cell,
+    encode_cell,
+    read_uvarint,
+    skip_cell,
+    write_uvarint,
+)
+
+MAGIC = b"RCOL"
+VERSION = 1
+
+CBLOCK_RECORDS = 256  # records per compressed block (load-time knob, §5.3)
+
+
+@dataclass
+class ColumnFormat:
+    """Per-column storage choice, set at load time by COF."""
+
+    kind: str = "plain"  # plain | skiplist | cblock | dcsl
+    codec: str = "none"  # for cblock: lzo | zlib
+    block_records: int = CBLOCK_RECORDS
+
+    def validate(self, typ: ColumnType) -> None:
+        assert self.kind in ("plain", "skiplist", "cblock", "dcsl"), self.kind
+        if self.kind == "dcsl":
+            assert typ.kind == "map", "dcsl requires a map column"
+        if self.kind == "cblock":
+            assert self.codec in ("lzo", "zlib"), self.codec
+
+
+@dataclass
+class ReadCounters:
+    bytes_touched: int = 0
+    bytes_decoded: int = 0
+    cells_decoded: int = 0
+    cells_skipped: int = 0
+    blocks_decompressed: int = 0
+    blocks_skipped: int = 0
+
+
+def _write_str(buf: bytearray, s: str) -> None:
+    raw = s.encode()
+    write_uvarint(buf, len(raw))
+    buf += raw
+
+
+def _read_str(data: bytes, off: int) -> Tuple[str, int]:
+    n, off = read_uvarint(data, off)
+    return data[off : off + n].decode(), off + n
+
+
+# ===========================================================================
+# Writers
+# ===========================================================================
+
+
+class ColumnFileWriter:
+    def __init__(self, typ: ColumnType, fmt: ColumnFormat):
+        fmt.validate(typ)
+        self.typ = typ
+        self.fmt = fmt
+        self.n = 0
+        k = fmt.kind
+        if k == "plain":
+            self._buf = bytearray()
+        elif k == "skiplist":
+            self._slw = SkipListWriter(lambda v, b: encode_cell(typ, v, b))
+        elif k == "cblock":
+            self._buf = bytearray()
+            self._block = bytearray()
+            self._block_n = 0
+        elif k == "dcsl":
+            self._dcsl = DCSLColumnWriter(typ, block=DICT_BLOCK)
+
+    def append(self, v: Any) -> None:
+        k = self.fmt.kind
+        if k == "plain":
+            encode_cell(self.typ, v, self._buf)
+        elif k == "skiplist":
+            self._slw.append(v)
+        elif k == "cblock":
+            encode_cell(self.typ, v, self._block)
+            self._block_n += 1
+            if self._block_n == self.fmt.block_records:
+                self._flush_block()
+        elif k == "dcsl":
+            self._dcsl.append(v)
+        self.n += 1
+
+    def _flush_block(self) -> None:
+        self._buf += compress_block(self.fmt.codec, self._block_n, bytes(self._block))
+        self._block = bytearray()
+        self._block_n = 0
+
+    def finish(self) -> bytes:
+        k = self.fmt.kind
+        if k == "plain":
+            body = bytes(self._buf)
+        elif k == "skiplist":
+            body = self._slw.finish()
+        elif k == "cblock":
+            if self._block_n:
+                self._flush_block()
+            body = bytes(self._buf)
+        elif k == "dcsl":
+            body = self._dcsl.finish()
+        out = bytearray()
+        out += MAGIC
+        out.append(VERSION)
+        _write_str(out, self.fmt.kind)
+        _write_str(out, self.fmt.codec)
+        write_uvarint(out, self.n)
+        write_uvarint(out, len(body))
+        out += body
+        return bytes(out)
+
+
+# ===========================================================================
+# Readers
+# ===========================================================================
+
+
+class ColumnFileReader:
+    """Monotone reader over one column file; dispatches on the stored kind."""
+
+    def __init__(self, raw: bytes, typ: ColumnType):
+        assert raw[:4] == MAGIC, "bad column file magic"
+        assert raw[4] == VERSION
+        off = 5
+        self.kind, off = _read_str(raw, off)
+        self.codec, off = _read_str(raw, off)
+        self.n, off = read_uvarint(raw, off)
+        body_len, off = read_uvarint(raw, off)
+        self.body = raw[off : off + body_len]
+        self.typ = typ
+        self.counters = ReadCounters()
+        self.file_bytes = len(raw)
+        self._init_kind()
+
+    def _init_kind(self) -> None:
+        k = self.kind
+        if k == "plain":
+            self._pos = 0
+            self._off = 0
+        elif k == "skiplist":
+            self._slr = SkipListReader(
+                self.body,
+                self.n,
+                lambda d, o: decode_cell(self.typ, d, o),
+                lambda d, o: skip_cell(self.typ, d, o),
+            )
+        elif k == "cblock":
+            # header-only scan: (n_records, payload_off, payload_len, first_idx)
+            self._blocks: List[Tuple[int, int, int, int]] = []
+            o, idx = 0, 0
+            while o < len(self.body):
+                nrec, plen, poff = read_block_header(self.body, o)
+                self._blocks.append((nrec, poff, plen, idx))
+                idx += nrec
+                o = poff + plen
+            self._cur_block = -1
+            self._payload = b""
+            self._intra_pos = 0
+            self._intra_off = 0
+            self.counters.bytes_touched += o - sum(b[2] for b in self._blocks)  # headers
+        elif k == "dcsl":
+            self._dcsl = DCSLColumnReader(self.body, self.n, self.typ)
+        else:
+            raise ValueError(k)
+
+    # -- plain ---------------------------------------------------------------
+    def _plain_at(self, index: int) -> Any:
+        assert index >= self._pos, "plain reader is forward-only"
+        while self._pos < index:
+            new = skip_cell(self.typ, self.body, self._off)
+            self.counters.bytes_touched += new - self._off
+            self.counters.cells_skipped += 1
+            self._off = new
+            self._pos += 1
+        v, end = decode_cell(self.typ, self.body, self._off)
+        self.counters.bytes_touched += end - self._off
+        self.counters.bytes_decoded += end - self._off
+        self.counters.cells_decoded += 1
+        self._off = end
+        self._pos += 1
+        return v
+
+    # -- cblock ----------------------------------------------------------------
+    def _cblock_at(self, index: int) -> Any:
+        bi = self._cur_block
+        if bi < 0 or not (
+            self._blocks[bi][3] <= index < self._blocks[bi][3] + self._blocks[bi][0]
+        ):
+            # locate target block (monotone: linear scan forward is fine)
+            start = max(bi, 0)
+            for j in range(start, len(self._blocks)):
+                nrec, poff, plen, first = self._blocks[j]
+                if first <= index < first + nrec:
+                    if j != bi:
+                        skipped = range(max(bi + 1, 0), j)
+                        self.counters.blocks_skipped += len(skipped)
+                    from .compression import CODECS
+
+                    self._payload = CODECS[self.codec][1](
+                        self.body[poff : poff + plen]
+                    )
+                    self.counters.blocks_decompressed += 1
+                    self.counters.bytes_touched += plen
+                    self._cur_block = j
+                    self._intra_pos = first
+                    self._intra_off = 0
+                    break
+            else:
+                raise IndexError(index)
+        assert self._intra_pos <= index, "cblock reader is forward-only within block"
+        while self._intra_pos < index:
+            self._intra_off = skip_cell(self.typ, self._payload, self._intra_off)
+            self.counters.cells_skipped += 1
+            self._intra_pos += 1
+        v, end = decode_cell(self.typ, self._payload, self._intra_off)
+        self.counters.bytes_decoded += end - self._intra_off
+        self.counters.cells_decoded += 1
+        self._intra_off = end
+        self._intra_pos += 1
+        return v
+
+    # -- public -------------------------------------------------------------------
+    def value_at(self, index: int) -> Any:
+        assert 0 <= index < self.n, (index, self.n)
+        k = self.kind
+        if k == "plain":
+            return self._plain_at(index)
+        if k == "skiplist":
+            v = self._slr.value_at(index)
+            self._sync_sl_counters()
+            return v
+        if k == "cblock":
+            return self._cblock_at(index)
+        if k == "dcsl":
+            v = self._dcsl.value_at(index)
+            self._sync_dcsl_counters()
+            return v
+        raise ValueError(k)
+
+    def lookup(self, index: int, key: str) -> Optional[Any]:
+        """Single-key access for map columns (DCSL fast path; others decode)."""
+        if self.kind == "dcsl":
+            v = self._dcsl.lookup(index, key)
+            self._sync_dcsl_counters()
+            return v
+        m = self.value_at(index)
+        return m.get(key) if isinstance(m, dict) else None
+
+    def _sync_sl_counters(self, slr: Optional[SkipListReader] = None) -> None:
+        s = slr if slr is not None else self._slr
+        c = self.counters
+        c.cells_decoded = s.cells_decoded
+        c.cells_skipped = s.cells_skipped
+        c.bytes_decoded = s.bytes_decoded
+        # touched = decoded + single-step-skipped cell bytes + skip-entry bytes
+        # actually visited; jumped-over regions are never touched (§5.2).
+        c.bytes_touched = s.bytes_decoded + s.bytes_skipped + s.bytes_entries
+
+    def _sync_dcsl_counters(self) -> None:
+        self._sync_sl_counters(self._dcsl.counters)

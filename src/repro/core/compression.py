@@ -1,0 +1,84 @@
+"""Block codecs for column files (§5.3 "Compressed Blocks").
+
+The paper uses LZO (fast, modest ratio) and ZLIB (slow, high ratio).  LZO is
+GPL-encumbered and not installed; zstd level-1 has the same engineering
+profile (cheap decode, modest ratio) and stands in for it.  The codec is
+recorded by name in the column-file header, so files are self-describing.
+
+A *compressed block* is:  [uvarint n_records][uvarint payload_len][payload]
+— the header alone lets a reader skip the whole block without decompressing
+it (the paper's lazy-decompression property).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Dict, List, Tuple
+
+import zstandard
+
+from .varcodec import read_uvarint, write_uvarint
+
+_ZSTD_C = zstandard.ZstdCompressor(level=1)
+_ZSTD_D = zstandard.ZstdDecompressor()
+
+
+def _zstd_c(b: bytes) -> bytes:
+    return _ZSTD_C.compress(b)
+
+
+def _zstd_d(b: bytes) -> bytes:
+    return _ZSTD_D.decompress(b)
+
+
+def _zlib_c(b: bytes) -> bytes:
+    return zlib.compress(b, 6)
+
+
+def _zlib_d(b: bytes) -> bytes:
+    return zlib.decompress(b)
+
+
+def _none(b: bytes) -> bytes:
+    return b
+
+
+CODECS: Dict[str, Tuple[Callable[[bytes], bytes], Callable[[bytes], bytes]]] = {
+    "none": (_none, _none),
+    "lzo": (_zstd_c, _zstd_d),  # zstd-1 as the LZO analog (see DESIGN.md §8)
+    "zlib": (_zlib_c, _zlib_d),
+}
+
+
+def compress_block(codec: str, n_records: int, payload: bytes) -> bytes:
+    comp, _ = CODECS[codec]
+    body = comp(payload)
+    out = bytearray()
+    write_uvarint(out, n_records)
+    write_uvarint(out, len(body))
+    out += body
+    return bytes(out)
+
+
+def read_block_header(data: bytes, off: int) -> Tuple[int, int, int]:
+    """Returns (n_records, payload_len, payload_off)."""
+    n, off = read_uvarint(data, off)
+    plen, off = read_uvarint(data, off)
+    return n, plen, off
+
+
+def decompress_block(codec: str, data: bytes, off: int) -> Tuple[int, bytes, int]:
+    """Returns (n_records, payload, next_off)."""
+    _, dec = CODECS[codec]
+    n, plen, poff = read_block_header(data, off)
+    return n, dec(data[poff : poff + plen]), poff + plen
+
+
+def iter_blocks(data: bytes) -> List[Tuple[int, int, int]]:
+    """Scan block headers only: [(n_records, payload_off, payload_len)]."""
+    out = []
+    off = 0
+    while off < len(data):
+        n, plen, poff = read_block_header(data, off)
+        out.append((n, poff, plen))
+        off = poff + plen
+    return out

@@ -1,0 +1,97 @@
+"""Eager and lazy record construction (paper §5, Fig. 5).
+
+Both classes implement the same ``Record`` interface (``get(name)``), so map
+functions are oblivious to which is in use — exactly the paper's design.
+
+``LazyRecord`` is a *view* over the split: the reader hands out the same
+object for every record, bumping the split-level ``curPos``.  Nothing is read
+or deserialized until ``get()`` is called, at which point the column's reader
+skips ``curPos - lastPos`` records (cheap via skip lists) and decodes one
+cell.  ``get_map_value`` adds the DCSL fast path: fetch a single key of a
+map column without materializing the dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from .colfile import ColumnFileReader
+
+
+class Record:
+    def get(self, name: str) -> Any:
+        raise NotImplementedError
+
+    def get_map_value(self, name: str, key: str) -> Optional[Any]:
+        m = self.get(name)
+        return m.get(key) if isinstance(m, dict) else None
+
+
+class EagerRecord(Record):
+    """All projected columns deserialized up front."""
+
+    __slots__ = ("_values",)
+
+    def __init__(self, values: Dict[str, Any]):
+        self._values = values
+
+    def get(self, name: str) -> Any:
+        return self._values[name]
+
+
+class LazyRecord(Record):
+    """Split-level curPos + per-column lastPos (Fig. 5).
+
+    lastPos bookkeeping lives in the column readers themselves (their ``pos``
+    is exactly the paper's lastPos); this class only tracks curPos.
+    """
+
+    __slots__ = ("_readers", "_cur", "_memo", "_kmemo")
+
+    def __init__(self, readers: Dict[str, ColumnFileReader]):
+        self._readers = readers
+        self._cur = -1
+        self._memo: Dict[str, Any] = {}
+        self._kmemo: Dict[tuple, Any] = {}
+
+    def _advance(self) -> None:
+        self._cur += 1
+        if self._memo:
+            self._memo = {}
+        if self._kmemo:
+            self._kmemo = {}
+
+    def get(self, name: str) -> Any:
+        # column readers are forward-only; memoize within the current record
+        # so repeated get() calls (common in map functions) are safe.
+        if name in self._memo:
+            return self._memo[name]
+        if any(k[0] == name for k in self._kmemo):
+            raise RuntimeError(
+                f"column {name!r}: full get() after get_map_value() on the same "
+                "record is not supported (single-key DCSL access already "
+                "consumed this position)"
+            )
+        r = self._readers[name]
+        # value_at() internally does skip_to(curPos) — i.e. the paper's
+        # skip(curPos - lastPos) — then decodes exactly one cell.
+        v = r.value_at(self._cur)
+        self._memo[name] = v
+        return v
+
+    def get_map_value(self, name: str, key: str) -> Optional[Any]:
+        """DCSL fast path: single-key access without materializing the map."""
+        if name in self._memo:
+            m = self._memo[name]
+            return m.get(key) if isinstance(m, dict) else None
+        if (name, key) in self._kmemo:
+            return self._kmemo[(name, key)]
+        if self._readers[name].kind != "dcsl":
+            m = self.get(name)
+            return m.get(key) if isinstance(m, dict) else None
+        v = self._readers[name].lookup(self._cur, key)
+        self._kmemo[(name, key)] = v
+        return v
+
+    @property
+    def position(self) -> int:
+        return self._cur

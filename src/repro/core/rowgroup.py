@@ -1,0 +1,166 @@
+"""RCFile-analog PAX baseline (§4.1, He et al. [20]).
+
+File = sequence of row-groups.  Each row-group:
+
+    [16B sync marker][uvarint meta_len][meta JSON][column region 0][region 1]...
+
+Metadata lists n_rows and each column region's (offset, length, raw_length).
+Data regions are column-major within the group; with codec="zlib" each column
+region is deflate-compressed (RCFile-comp).
+
+I/O accounting: HDFS + the local filesystem prefetch in ``io_unit``-sized
+buffers (the paper's io.file.buffer.size, default 128KB).  Touching any byte
+of a unit costs the whole unit.  Because RCFile interleaves all columns in
+one block, a narrow projection still lands on many units — the effect the
+paper measures with iostat ("RCFile read 20x more bytes than CIF even when
+instructed to scan exactly one column", §6.2) and the reason row-group size
+needs tuning (§B.2).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
+
+from .compression import CODECS
+from .schema import Schema
+from .varcodec import decode_cell, encode_cell, read_uvarint, write_uvarint
+
+SYNC = b"\xde\xad\xbe\xef" * 4
+IO_UNIT = 128 * 1024
+DEFAULT_ROWGROUP_BYTES = 4 * 1024 * 1024  # the paper's recommended 4MB
+
+
+@dataclass
+class RCStats:
+    bytes_io: int = 0  # unit-rounded bytes fetched
+    bytes_decoded: int = 0
+    groups_read: int = 0
+    records: int = 0
+
+
+class RCFileWriter:
+    def __init__(
+        self,
+        path: str,
+        schema: Schema,
+        rowgroup_bytes: int = DEFAULT_ROWGROUP_BYTES,
+        codec: str = "none",
+    ):
+        self.path = path
+        self.schema = schema
+        self.rowgroup_bytes = rowgroup_bytes
+        self.codec = codec
+        self.buf = bytearray()
+        hdr = schema.to_json().encode()
+        self.buf += b"RRCF"
+        write_uvarint(self.buf, len(hdr))
+        self.buf += hdr
+        cn = codec.encode()
+        write_uvarint(self.buf, len(cn))
+        self.buf += cn
+        self._cols: List[bytearray] = [bytearray() for _ in schema.columns]
+        self._rows = 0
+        self.n = 0
+
+    def append(self, rec: Dict[str, Any]) -> None:
+        for i, (name, typ) in enumerate(self.schema.columns):
+            encode_cell(typ, rec[name], self._cols[i])
+        self._rows += 1
+        self.n += 1
+        if sum(len(c) for c in self._cols) >= self.rowgroup_bytes:
+            self._flush_group()
+
+    def _flush_group(self) -> None:
+        if self._rows == 0:
+            return
+        comp = CODECS[self.codec][0]
+        regions = [comp(bytes(c)) for c in self._cols]
+        meta = {
+            "n_rows": self._rows,
+            "lengths": [len(r) for r in regions],
+            "raw_lengths": [len(c) for c in self._cols],
+        }
+        mb = json.dumps(meta, separators=(",", ":")).encode()
+        self.buf += SYNC
+        write_uvarint(self.buf, len(mb))
+        self.buf += mb
+        for r in regions:
+            self.buf += r
+        self._cols = [bytearray() for _ in self.schema.columns]
+        self._rows = 0
+
+    def close(self) -> None:
+        self._flush_group()
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(self.buf)
+        os.replace(tmp, self.path)
+
+
+def _units(ranges: List[tuple], unit: int) -> int:
+    """Unit-rounded union size of byte ranges."""
+    touched = set()
+    for a, b in ranges:
+        touched.update(range(a // unit, (max(b, a + 1) - 1) // unit + 1))
+    return len(touched) * unit
+
+
+class RCFileReader:
+    def __init__(self, path: str, columns: Optional[Sequence[str]] = None, io_unit: int = IO_UNIT):
+        with open(path, "rb") as f:
+            self.data = f.read()
+        assert self.data[:4] == b"RRCF"
+        off = 4
+        n, off = read_uvarint(self.data, off)
+        self.schema = Schema.from_json(self.data[off : off + n].decode())
+        off += n
+        n, off = read_uvarint(self.data, off)
+        self.codec = self.data[off : off + n].decode()
+        off += n
+        self.body_off = off
+        names = self.schema.names()
+        self.columns = list(columns) if columns is not None else names
+        self.col_idx = [names.index(c) for c in self.columns]
+        self.io_unit = io_unit
+        self.stats = RCStats()
+        self.file_bytes = len(self.data)
+
+    def scan(self) -> Iterator[Dict[str, Any]]:
+        data = self.data
+        off = self.body_off
+        dec = CODECS[self.codec][1]
+        ranges: List[tuple] = []
+        while off < len(data):
+            assert data[off : off + 16] == SYNC
+            meta_start = off
+            off += 16
+            mlen, off = read_uvarint(data, off)
+            meta = json.loads(data[off : off + mlen])
+            off += mlen
+            ranges.append((meta_start, off))  # sync + metadata always read
+            lengths = meta["lengths"]
+            # locate selected regions
+            region_off = off
+            starts = []
+            for ln in lengths:
+                starts.append(region_off)
+                region_off += ln
+            payloads = {}
+            for ci in self.col_idx:
+                a, b = starts[ci], starts[ci] + lengths[ci]
+                ranges.append((a, b))
+                payloads[ci] = dec(data[a:b])
+                self.stats.bytes_decoded += len(payloads[ci])
+            offs = {ci: 0 for ci in self.col_idx}
+            for _ in range(meta["n_rows"]):
+                rec = {}
+                for c, ci in zip(self.columns, self.col_idx):
+                    typ = self.schema.type_of(c)
+                    rec[c], offs[ci] = decode_cell(typ, payloads[ci], offs[ci])
+                self.stats.records += 1
+                yield rec
+            self.stats.groups_read += 1
+            off = region_off
+        self.stats.bytes_io = _units(ranges, self.io_unit)

@@ -1,0 +1,207 @@
+"""Typed schemas for columnar datasets, including the paper's complex types.
+
+The paper (§3.1, Fig. 2) motivates complex types — arrays, maps, nested
+records — as first-class citizens of MapReduce datasets.  Unlike Dremel we do
+NOT shred complex values into sub-columns (§7): a complex value is serialized
+as a single cell inside its column file, exactly as CIF does.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Type system
+# ---------------------------------------------------------------------------
+
+PRIMITIVES = ("int32", "int64", "float32", "float64", "string", "bytes", "bool")
+
+
+@dataclass(frozen=True)
+class ColumnType:
+    """A (possibly complex) column type.
+
+    kind:
+      - one of PRIMITIVES
+      - "array"  -> elem is the element type
+      - "map"    -> key/value are the entry types (keys are strings, like Avro)
+      - "record" -> fields is an ordered list of (name, ColumnType)
+    """
+
+    kind: str
+    elem: Optional["ColumnType"] = None
+    value: Optional["ColumnType"] = None
+    fields: Optional[Tuple[Tuple[str, "ColumnType"], ...]] = None
+
+    def __post_init__(self):
+        if self.kind in PRIMITIVES:
+            return
+        if self.kind == "array":
+            assert self.elem is not None, "array type needs elem"
+        elif self.kind == "map":
+            assert self.value is not None, "map type needs value"
+        elif self.kind == "record":
+            assert self.fields, "record type needs fields"
+        else:
+            raise ValueError(f"unknown type kind: {self.kind}")
+
+    # -- json (de)serialization so schema files are human readable ---------
+    def to_json(self) -> Any:
+        if self.kind in PRIMITIVES:
+            return self.kind
+        if self.kind == "array":
+            return {"array": self.elem.to_json()}
+        if self.kind == "map":
+            return {"map": self.value.to_json()}
+        if self.kind == "record":
+            return {"record": [[n, t.to_json()] for n, t in self.fields]}
+        raise AssertionError(self.kind)
+
+    @staticmethod
+    def from_json(obj: Any) -> "ColumnType":
+        if isinstance(obj, str):
+            return ColumnType(obj)
+        if "array" in obj:
+            return ColumnType("array", elem=ColumnType.from_json(obj["array"]))
+        if "map" in obj:
+            return ColumnType("map", value=ColumnType.from_json(obj["map"]))
+        if "record" in obj:
+            return ColumnType(
+                "record",
+                fields=tuple((n, ColumnType.from_json(t)) for n, t in obj["record"]),
+            )
+        raise ValueError(f"bad type json: {obj!r}")
+
+
+# convenience constructors --------------------------------------------------
+def INT32() -> ColumnType:
+    return ColumnType("int32")
+
+
+def INT64() -> ColumnType:
+    return ColumnType("int64")
+
+
+def FLOAT32() -> ColumnType:
+    return ColumnType("float32")
+
+
+def FLOAT64() -> ColumnType:
+    return ColumnType("float64")
+
+
+def STRING() -> ColumnType:
+    return ColumnType("string")
+
+
+def BYTES() -> ColumnType:
+    return ColumnType("bytes")
+
+
+def BOOL() -> ColumnType:
+    return ColumnType("bool")
+
+
+def ARRAY(elem: ColumnType) -> ColumnType:
+    return ColumnType("array", elem=elem)
+
+
+def MAP(value: ColumnType) -> ColumnType:
+    return ColumnType("map", value=value)
+
+
+def RECORD(fields: List[Tuple[str, ColumnType]]) -> ColumnType:
+    return ColumnType("record", fields=tuple(fields))
+
+
+# ---------------------------------------------------------------------------
+# Schema: ordered named columns
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Schema:
+    columns: List[Tuple[str, ColumnType]] = field(default_factory=list)
+
+    def names(self) -> List[str]:
+        return [n for n, _ in self.columns]
+
+    def type_of(self, name: str) -> ColumnType:
+        for n, t in self.columns:
+            if n == name:
+                return t
+        raise KeyError(name)
+
+    def __contains__(self, name: str) -> bool:
+        return any(n == name for n, _ in self.columns)
+
+    def __len__(self) -> int:
+        return len(self.columns)
+
+    def with_column(self, name: str, typ: ColumnType) -> "Schema":
+        """Schema evolution: CIF's cheap add-a-column (§4.3)."""
+        assert name not in self, f"duplicate column {name}"
+        return Schema(columns=list(self.columns) + [(name, typ)])
+
+    def project(self, names: List[str]) -> "Schema":
+        return Schema(columns=[(n, self.type_of(n)) for n in names])
+
+    # -- persistence --------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({"columns": [[n, t.to_json()] for n, t in self.columns]})
+
+    @staticmethod
+    def from_json(s: str) -> "Schema":
+        obj = json.loads(s)
+        return Schema(
+            columns=[(n, ColumnType.from_json(t)) for n, t in obj["columns"]]
+        )
+
+
+# ---------------------------------------------------------------------------
+# The paper's URLInfo schema (Fig. 2) — used across benchmarks & tests
+# ---------------------------------------------------------------------------
+
+
+def urlinfo_schema() -> Schema:
+    return Schema(
+        columns=[
+            ("url", STRING()),
+            ("srcUrl", STRING()),
+            ("fetchTime", INT64()),
+            ("inlink", ARRAY(STRING())),
+            ("metadata", MAP(STRING())),
+            ("annotations", MAP(STRING())),
+            ("content", BYTES()),
+        ]
+    )
+
+
+def validate_value(typ: ColumnType, v: Any) -> bool:
+    """Structural validity check (used by property tests)."""
+    k = typ.kind
+    if k == "int32":
+        return isinstance(v, int) and -(2**31) <= v < 2**31
+    if k == "int64":
+        return isinstance(v, int) and -(2**63) <= v < 2**63
+    if k in ("float32", "float64"):
+        return isinstance(v, float) or isinstance(v, int)
+    if k == "string":
+        return isinstance(v, str)
+    if k == "bytes":
+        return isinstance(v, (bytes, bytearray))
+    if k == "bool":
+        return isinstance(v, bool)
+    if k == "array":
+        return isinstance(v, list) and all(validate_value(typ.elem, e) for e in v)
+    if k == "map":
+        return isinstance(v, dict) and all(
+            isinstance(key, str) and validate_value(typ.value, val)
+            for key, val in v.items()
+        )
+    if k == "record":
+        return isinstance(v, dict) and all(
+            f in v and validate_value(t, v[f]) for f, t in typ.fields
+        )
+    return False

@@ -1,0 +1,158 @@
+"""SEQ baseline: row-oriented binary records (Hadoop SequenceFile analog).
+
+Variants from Table 1:
+  seq          — uncompressed (SEQ-uncomp)
+  seq-record   — each record's payload compressed individually (SEQ-record)
+  seq-block    — blocks of records compressed together (SEQ-block)
+
+A record is the full row: every column serialized field-sequentially, so a
+scan must read and (at least) skip-parse every column of every record —
+this is precisely what CIF eliminates.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, Iterator, List, Optional
+
+from .compression import CODECS, compress_block, decompress_block
+from .schema import Schema
+from .varcodec import decode_cell, encode_cell, read_uvarint, write_uvarint
+
+MAGIC = b"RSEQ"
+SEQ_BLOCK_RECORDS = 256
+
+
+def _encode_record(schema: Schema, rec: Dict[str, Any], buf: bytearray) -> None:
+    for name, typ in schema.columns:
+        encode_cell(typ, rec[name], buf)
+
+
+def _decode_record(schema: Schema, data: bytes, off: int):
+    out = {}
+    for name, typ in schema.columns:
+        out[name], off = decode_cell(typ, data, off)
+    return out, off
+
+
+@dataclass
+class SeqStats:
+    bytes_io: int = 0
+    bytes_decoded: int = 0
+    records: int = 0
+
+
+class SeqWriter:
+    def __init__(self, path: str, schema: Schema, mode: str = "plain", codec: str = "lzo"):
+        assert mode in ("plain", "record", "block")
+        self.schema = schema
+        self.mode = mode
+        self.codec = codec if mode != "plain" else "none"
+        self.path = path
+        self._buf = bytearray()
+        self._buf += MAGIC
+        hdr = schema.to_json().encode()
+        write_uvarint(self._buf, len(hdr))
+        self._buf += hdr
+        write_uvarint(self._buf, {"plain": 0, "record": 1, "block": 2}[mode])
+        cn = self.codec.encode()
+        write_uvarint(self._buf, len(cn))
+        self._buf += cn
+        self._n_pos = len(self._buf)
+        self._buf += b"\x00" * 8  # patched record count
+        self.n = 0
+        self._block = bytearray()
+        self._block_n = 0
+
+    def append(self, rec: Dict[str, Any]) -> None:
+        if self.mode == "plain":
+            tmp = bytearray()
+            _encode_record(self.schema, rec, tmp)
+            write_uvarint(self._buf, len(tmp))
+            self._buf += tmp
+        elif self.mode == "record":
+            tmp = bytearray()
+            _encode_record(self.schema, rec, tmp)
+            comp = CODECS[self.codec][0](bytes(tmp))
+            write_uvarint(self._buf, len(comp))
+            self._buf += comp
+        else:  # block
+            _encode_record(self.schema, rec, self._block)
+            self._block_n += 1
+            if self._block_n == SEQ_BLOCK_RECORDS:
+                self._flush_block()
+        self.n += 1
+
+    def _flush_block(self) -> None:
+        self._buf += compress_block(self.codec, self._block_n, bytes(self._block))
+        self._block = bytearray()
+        self._block_n = 0
+
+    def close(self) -> None:
+        if self.mode == "block" and self._block_n:
+            self._flush_block()
+        import struct
+
+        struct.pack_into("<Q", self._buf, self._n_pos, self.n)
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(self._buf)
+        os.replace(tmp, self.path)
+
+
+class SeqReader:
+    def __init__(self, path: str):
+        with open(path, "rb") as f:
+            raw = f.read()
+        assert raw[:4] == MAGIC
+        off = 4
+        n, off = read_uvarint(raw, off)
+        self.schema = Schema.from_json(raw[off : off + n].decode())
+        off += n
+        mode_id, off = read_uvarint(raw, off)
+        self.mode = ("plain", "record", "block")[mode_id]
+        n, off = read_uvarint(raw, off)
+        self.codec = raw[off : off + n].decode()
+        off += n
+        import struct
+
+        (self.n,) = struct.unpack_from("<Q", raw, off)
+        off += 8
+        self.data = raw
+        self.body_off = off
+        self.stats = SeqStats(bytes_io=len(raw))
+
+    def scan(self) -> Iterator[Dict[str, Any]]:
+        off = self.body_off
+        data = self.data
+        if self.mode in ("plain", "record"):
+            dec = CODECS[self.codec][1]
+            for _ in range(self.n):
+                ln, off = read_uvarint(data, off)
+                payload = data[off : off + ln]
+                off += ln
+                if self.mode == "record":
+                    payload = dec(payload)
+                rec, _ = _decode_record(self.schema, payload, 0)
+                self.stats.bytes_decoded += len(payload)
+                self.stats.records += 1
+                yield rec
+        else:
+            remaining = self.n
+            while remaining > 0:
+                nrec, payload, off = decompress_block(self.codec, data, off)
+                self.stats.bytes_decoded += len(payload)
+                o = 0
+                for _ in range(nrec):
+                    rec, o = _decode_record(self.schema, payload, o)
+                    self.stats.records += 1
+                    yield rec
+                remaining -= nrec
+
+
+def write_seq(path: str, schema: Schema, records: Iterable[Dict[str, Any]], mode: str = "plain", codec: str = "lzo") -> int:
+    w = SeqWriter(path, schema, mode=mode, codec=codec)
+    for r in records:
+        w.append(r)
+    w.close()
+    return w.n

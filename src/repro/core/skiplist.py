@@ -1,0 +1,160 @@
+"""Skip-list column format (paper §5.2, Fig. 6).
+
+A column file contains regular serialized values interleaved with *skip
+blocks*.  A skip block at record index ``i`` holds one absolute byte offset
+per level N ∈ {1000, 100, 10} with ``i % N == 0``, pointing at the position
+of record ``i+N`` (or EOF).  ``skip(k)`` therefore advances k records with
+O(k/10) work instead of parsing every cell, and — crucially — with **zero
+object creation** (the paper's Fig. 8 cost).
+
+Offsets are fixed 8-byte little-endian so the writer can backpatch them:
+HDFS is append-only so the paper double-buffers (§B.3); we do the same by
+building the file in memory and patching offsets before flush.
+
+Because every level divides the largest level, a monotone skip provably
+visits every multiple-of-``max(levels)`` group it crosses (jumps of size N
+start and end on multiples of N and never overshoot).  DCSL exploits this:
+its per-block dictionaries sit at block boundaries aligned to the top level,
+and the ``boundary_hook`` — invoked at every group visit — is guaranteed to
+see them in order.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, Callable, List, Optional, Tuple
+
+LEVELS = (1000, 100, 10)
+_U64 = struct.Struct("<Q")
+
+EncodeFn = Callable[[Any, bytearray], None]
+DecodeFn = Callable[[bytes, int], Tuple[Any, int]]
+SkipFn = Callable[[bytes, int], int]
+# boundary hooks: (record_index, data, offset_after_entries) -> content_offset
+WriterHook = Callable[[int, bytearray], None]
+ReaderHook = Callable[[int, bytes, int], int]
+
+
+def levels_at(i: int, levels: Tuple[int, ...] = LEVELS) -> List[int]:
+    return [n for n in levels if i % n == 0]
+
+
+class SkipListWriter:
+    """Builds the skip-list body for one column (records encoded via encode_fn)."""
+
+    def __init__(
+        self,
+        encode_fn: EncodeFn,
+        levels: Tuple[int, ...] = LEVELS,
+        boundary_hook: Optional[WriterHook] = None,
+    ):
+        self.encode_fn = encode_fn
+        self.levels = levels
+        self.buf = bytearray()
+        self.n = 0
+        # (byte position of the u64 to patch, target record index)
+        self._pending: List[Tuple[int, int]] = []
+        # record index -> byte offset of its skip-group start
+        self._group_off: List[int] = []
+        # called right after skip entries, before the record body (DCSL
+        # embeds per-block dictionaries here).
+        self.boundary_hook = boundary_hook
+
+    def append(self, value: Any) -> None:
+        i = self.n
+        self._group_off.append(len(self.buf))
+        for n in levels_at(i, self.levels):
+            self._pending.append((len(self.buf), i + n))
+            self.buf += _U64.pack(0)  # backpatched in finish()
+        if self.boundary_hook is not None:
+            self.boundary_hook(i, self.buf)
+        self.encode_fn(value, self.buf)
+        self.n += 1
+
+    def finish(self) -> bytes:
+        eof = len(self.buf)
+        for patch_pos, target in self._pending:
+            off = self._group_off[target] if target < self.n else eof
+            _U64.pack_into(self.buf, patch_pos, off)
+        return bytes(self.buf)
+
+
+class SkipListReader:
+    """Sequential reader with O(k/10) skip().  Positions are record indices.
+
+    The reader's (pos, off) always points at the *skip-group start* of
+    record ``pos``.  ``boundary_hook`` is invoked at every group visit with
+    the offset just past the skip entries and must return the offset of the
+    record body (it may consume embedded metadata such as DCSL dictionaries;
+    it must be idempotent for repeated visits of the same index).
+    """
+
+    def __init__(
+        self,
+        data: bytes,
+        n_records: int,
+        decode_fn: DecodeFn,
+        skip_fn: SkipFn,
+        levels: Tuple[int, ...] = LEVELS,
+        boundary_hook: Optional[ReaderHook] = None,
+    ):
+        self.data = data
+        self.n = n_records
+        self.decode_fn = decode_fn
+        self.skip_fn = skip_fn
+        self.levels = levels
+        self.boundary_hook = boundary_hook
+        self.pos = 0  # next record index
+        self.off = 0  # byte offset of record `pos`'s skip-group
+        # instrumentation (benchmarks read these)
+        self.cells_decoded = 0
+        self.cells_skipped = 0
+        self.bytes_decoded = 0
+        self.bytes_skipped = 0
+        self.bytes_entries = 0  # skip-block bytes traversed
+
+    def _entries_end(self) -> int:
+        return self.off + 8 * len(levels_at(self.pos, self.levels))
+
+    def _content_off(self) -> int:
+        off = self._entries_end()
+        self.bytes_entries += off - self.off
+        if self.boundary_hook is not None:
+            off = self.boundary_hook(self.pos, self.data, off)
+        return off
+
+    def _try_jump(self, target: int) -> bool:
+        for slot, n in enumerate(levels_at(self.pos, self.levels)):
+            if self.pos + n <= target:
+                (self.off,) = _U64.unpack_from(self.data, self.off + 8 * slot)
+                self.pos += n
+                return True
+        return False
+
+    def skip_to(self, target: int) -> None:
+        assert self.pos <= target <= self.n, (self.pos, target, self.n)
+        while self.pos < target:
+            # Load any boundary metadata BEFORE jumping away: jumps land on
+            # every top-level boundary they cross (see module docstring), so
+            # visiting in order here keeps DCSL dictionaries current.
+            content = self._content_off()
+            if self._try_jump(target):
+                continue
+            self.off = self.skip_fn(self.data, content)
+            self.bytes_skipped += self.off - content
+            self.pos += 1
+            self.cells_skipped += 1
+
+    def read(self) -> Any:
+        assert self.pos < self.n
+        off = self._content_off()
+        value, end = self.decode_fn(self.data, off)
+        self.cells_decoded += 1
+        self.bytes_decoded += end - off
+        self.pos += 1
+        self.off = end
+        return value
+
+    def value_at(self, index: int) -> Any:
+        """Monotone access used by LazyRecord within a split."""
+        self.skip_to(index)
+        return self.read()

@@ -1,0 +1,67 @@
+"""TXT baseline: newline-delimited JSON (the "naive text format" of §6.2).
+
+The paper shows TXT is ~3x slower than SEQ because every line must be parsed
+— we reproduce the same effect with JSON-line parsing (bytes/base64 for the
+content column, as raw bytes are not JSON-representable).
+"""
+from __future__ import annotations
+
+import base64
+import json
+import os
+from typing import Any, Dict, Iterable, Iterator
+
+from .schema import ColumnType, Schema
+
+
+def _to_jsonable(typ: ColumnType, v: Any) -> Any:
+    if typ.kind == "bytes":
+        return base64.b64encode(v).decode("ascii")
+    if typ.kind == "array":
+        return [_to_jsonable(typ.elem, e) for e in v]
+    if typ.kind == "map":
+        return {k: _to_jsonable(typ.value, x) for k, x in v.items()}
+    if typ.kind == "record":
+        return {f: _to_jsonable(t, v[f]) for f, t in typ.fields}
+    return v
+
+
+def _from_jsonable(typ: ColumnType, v: Any) -> Any:
+    if typ.kind == "bytes":
+        return base64.b64decode(v)
+    if typ.kind == "array":
+        return [_from_jsonable(typ.elem, e) for e in v]
+    if typ.kind == "map":
+        return {k: _from_jsonable(typ.value, x) for k, x in v.items()}
+    if typ.kind == "record":
+        return {f: _from_jsonable(t, v[f]) for f, t in typ.fields}
+    return v
+
+
+def write_text(path: str, schema: Schema, records: Iterable[Dict[str, Any]]) -> int:
+    n = 0
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        for rec in records:
+            obj = {name: _to_jsonable(typ, rec[name]) for name, typ in schema.columns}
+            f.write(json.dumps(obj, separators=(",", ":")))
+            f.write("\n")
+            n += 1
+    os.replace(tmp, path)
+    return n
+
+
+class TextReader:
+    def __init__(self, path: str, schema: Schema):
+        self.path = path
+        self.schema = schema
+        self.bytes_io = os.path.getsize(path)
+
+    def scan(self) -> Iterator[Dict[str, Any]]:
+        with open(self.path) as f:
+            for line in f:
+                obj = json.loads(line)
+                yield {
+                    name: _from_jsonable(typ, obj[name])
+                    for name, typ in self.schema.columns
+                }

@@ -1,0 +1,185 @@
+"""Low-level serialization primitives: varint, zigzag, typed cell codec.
+
+This is the binary wire format shared by every storage format in core/
+(SEQ, RCFile-analog, CIF column files).  It mirrors Avro's binary encoding
+(§Appendix A of the paper): zigzag varints for integers, length-prefixed
+UTF-8 for strings, count-prefixed entries for arrays/maps, field-sequential
+records.
+
+Two decode paths exist on purpose:
+  * ``decode_cell``       — builds Python objects (the "Java object churn"
+                            path the paper measures in Fig. 8), and
+  * ``skip_cell``         — advances the offset WITHOUT building objects,
+                            which is what makes LazyRecord's skip() cheap
+                            when a column file has no skip blocks.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, Tuple
+
+from .schema import ColumnType
+
+# ---------------------------------------------------------------------------
+# varint / zigzag
+# ---------------------------------------------------------------------------
+
+
+def zigzag_encode(n: int) -> int:
+    return (n << 1) ^ (n >> 63) if n < 0 else n << 1
+
+
+def zigzag_decode(n: int) -> int:
+    return (n >> 1) ^ -(n & 1)
+
+
+def write_uvarint(buf: bytearray, n: int) -> None:
+    assert n >= 0
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            buf.append(b | 0x80)
+        else:
+            buf.append(b)
+            return
+
+
+def read_uvarint(data: bytes, off: int) -> Tuple[int, int]:
+    result = 0
+    shift = 0
+    while True:
+        b = data[off]
+        off += 1
+        result |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return result, off
+        shift += 7
+
+
+def write_varint(buf: bytearray, n: int) -> None:
+    write_uvarint(buf, zigzag_encode(n))
+
+
+def read_varint(data: bytes, off: int) -> Tuple[int, int]:
+    u, off = read_uvarint(data, off)
+    return zigzag_decode(u), off
+
+
+# ---------------------------------------------------------------------------
+# typed cells
+# ---------------------------------------------------------------------------
+
+_F32 = struct.Struct("<f")
+_F64 = struct.Struct("<d")
+
+
+def encode_cell(typ: ColumnType, v: Any, buf: bytearray) -> None:
+    k = typ.kind
+    if k in ("int32", "int64"):
+        write_varint(buf, int(v))
+    elif k == "float32":
+        buf += _F32.pack(float(v))
+    elif k == "float64":
+        buf += _F64.pack(float(v))
+    elif k == "bool":
+        buf.append(1 if v else 0)
+    elif k == "string":
+        raw = v.encode("utf-8")
+        write_uvarint(buf, len(raw))
+        buf += raw
+    elif k == "bytes":
+        write_uvarint(buf, len(v))
+        buf += v
+    elif k == "array":
+        write_uvarint(buf, len(v))
+        for e in v:
+            encode_cell(typ.elem, e, buf)
+    elif k == "map":
+        write_uvarint(buf, len(v))
+        for key, val in v.items():
+            raw = key.encode("utf-8")
+            write_uvarint(buf, len(raw))
+            buf += raw
+            encode_cell(typ.value, val, buf)
+    elif k == "record":
+        for fname, ftyp in typ.fields:
+            encode_cell(ftyp, v[fname], buf)
+    else:
+        raise ValueError(k)
+
+
+def decode_cell(typ: ColumnType, data: bytes, off: int) -> Tuple[Any, int]:
+    k = typ.kind
+    if k in ("int32", "int64"):
+        return read_varint(data, off)
+    if k == "float32":
+        return _F32.unpack_from(data, off)[0], off + 4
+    if k == "float64":
+        return _F64.unpack_from(data, off)[0], off + 8
+    if k == "bool":
+        return data[off] != 0, off + 1
+    if k == "string":
+        n, off = read_uvarint(data, off)
+        return data[off : off + n].decode("utf-8"), off + n
+    if k == "bytes":
+        n, off = read_uvarint(data, off)
+        return bytes(data[off : off + n]), off + n
+    if k == "array":
+        n, off = read_uvarint(data, off)
+        out = []
+        for _ in range(n):
+            e, off = decode_cell(typ.elem, data, off)
+            out.append(e)
+        return out, off
+    if k == "map":
+        n, off = read_uvarint(data, off)
+        out = {}
+        for _ in range(n):
+            klen, off = read_uvarint(data, off)
+            key = data[off : off + klen].decode("utf-8")
+            off += klen
+            val, off = decode_cell(typ.value, data, off)
+            out[key] = val
+        return out, off
+    if k == "record":
+        out = {}
+        for fname, ftyp in typ.fields:
+            out[fname], off = decode_cell(ftyp, data, off)
+        return out, off
+    raise ValueError(k)
+
+
+def skip_cell(typ: ColumnType, data: bytes, off: int) -> int:
+    """Advance past one cell without materializing it (no object creation)."""
+    k = typ.kind
+    if k in ("int32", "int64"):
+        while data[off] & 0x80:
+            off += 1
+        return off + 1
+    if k == "float32":
+        return off + 4
+    if k == "float64":
+        return off + 8
+    if k == "bool":
+        return off + 1
+    if k in ("string", "bytes"):
+        n, off = read_uvarint(data, off)
+        return off + n
+    if k == "array":
+        n, off = read_uvarint(data, off)
+        for _ in range(n):
+            off = skip_cell(typ.elem, data, off)
+        return off
+    if k == "map":
+        n, off = read_uvarint(data, off)
+        for _ in range(n):
+            klen, off = read_uvarint(data, off)
+            off += klen
+            off = skip_cell(typ.value, data, off)
+        return off
+    if k == "record":
+        for _, ftyp in typ.fields:
+            off = skip_cell(ftyp, data, off)
+        return off
+    raise ValueError(k)

@@ -1,0 +1,138 @@
+"""Per-host input pipeline: columnar corpus -> device-ready batches.
+
+The paper's storage wins land here: projection pushdown (only the token +
+mask columns are opened), lazy decode, split->host co-location (CPP analog),
+and a prefetch thread so storage decode overlaps the train step.
+
+Batch layout: {"tokens": (B,S) int32, "labels": (B,S) int32,
+               "loss_mask": (B,S) float32} — labels are next-token shifted,
+with the final position masked.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from ..core.placement import Placement
+from .sampler import SamplerState, ShardedSampler
+from .tokens import TokenCorpus, TokenSplit
+
+
+@dataclass
+class PipelineState:
+    sampler: SamplerState
+
+    def to_json(self):
+        return {"sampler": self.sampler.to_json()}
+
+    @staticmethod
+    def from_json(d):
+        return PipelineState(SamplerState.from_json(d["sampler"]))
+
+
+class HostPipeline:
+    def __init__(
+        self,
+        corpus: TokenCorpus,
+        batch_per_host: int,
+        n_hosts: int = 1,
+        host: int = 0,
+        seed: int = 0,
+        prefetch: int = 2,
+        state: Optional[PipelineState] = None,
+        decode: str = "np",
+    ):
+        self.corpus = corpus
+        self.batch = batch_per_host
+        self.decode = decode
+        ids = corpus.split_ids()
+        sizes = {sid: len(corpus.open_split(sid)) for sid in ids}
+        placement = Placement(n_splits=len(ids), n_hosts=n_hosts)
+        self.sampler = ShardedSampler(
+            sizes, placement, host, seed=seed,
+            state=state.sampler if state else None,
+        )
+        self._open: Dict[int, TokenSplit] = {}
+        self._prefetch_n = prefetch
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- core synchronous iteration ----------------------------------------
+    def _split(self, sid: int) -> TokenSplit:
+        if sid not in self._open:
+            # keep at most 2 splits open (forward-only readers)
+            if len(self._open) > 2:
+                self._open.clear()
+            self._open[sid] = self.corpus.open_split(sid)
+        return self._open[sid]
+
+    def _make_batch(self) -> Dict[str, np.ndarray]:
+        toks, masks = [], []
+        it = iter(self.sampler)
+        for _ in range(self.batch):
+            sid, rid = next(it)
+            sp = self._split(sid)
+            try:
+                t, m = sp.record(rid, decode=self.decode)
+            except AssertionError:
+                # forward-only reader was past rid (resume case): reopen
+                self._open.pop(sid, None)
+                sp = self._split(sid)
+                t, m = sp.record(rid, decode=self.decode)
+            toks.append(t)
+            masks.append(m)
+        tokens = np.stack(toks)
+        mask = np.stack(masks)
+        labels = np.concatenate(
+            [tokens[:, 1:], np.zeros((tokens.shape[0], 1), np.int32)], axis=1
+        )
+        lm = mask.astype(np.float32)
+        lm[:, -1] = 0.0
+        return {"tokens": tokens, "labels": labels, "loss_mask": lm}
+
+    # -- prefetching --------------------------------------------------------
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                item = (self._make_batch(), self.state())
+            except Exception as e:  # surface errors on the consumer side
+                self._q.put(e)
+                return
+            self._q.put(item)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        if self._prefetch_n <= 0:
+            while True:
+                yield self._make_batch()
+        self._q = queue.Queue(maxsize=self._prefetch_n)
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        self._last_state = self.state()
+        while True:
+            item = self._q.get()
+            if isinstance(item, Exception):
+                raise item
+            batch, st = item
+            self._consumed_state = st
+            yield batch
+
+    def state(self) -> PipelineState:
+        return PipelineState(
+            SamplerState(
+                self.sampler.state.epoch,
+                self.sampler.state.cursor,
+                self.sampler.state.record,
+            )
+        )
+
+    def consumed_state(self) -> PipelineState:
+        """State AFTER the last yielded batch (checkpoint this)."""
+        return getattr(self, "_consumed_state", self.state())
+
+    def stop(self) -> None:
+        self._stop.set()

@@ -1,0 +1,77 @@
+"""Deterministic, resumable data order.
+
+Split-granular shuffling (records within a split stay sequential — that is
+what keeps the paper's column scans sequential), seeded per epoch, with an
+O(1) serializable state.  Any host can compute any other host's order —
+no coordination, the same property CPP gives placement.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..core.placement import Placement
+
+
+def _perm(seed: int, epoch: int, n: int) -> List[int]:
+    """Deterministic permutation via hash sort (stable across python runs)."""
+    def key(i: int) -> bytes:
+        return hashlib.sha256(f"{seed}:{epoch}:{i}".encode()).digest()
+
+    return sorted(range(n), key=key)
+
+
+@dataclass
+class SamplerState:
+    epoch: int = 0
+    cursor: int = 0  # index into this host's split order
+    record: int = 0  # record offset within the current split
+
+    def to_json(self) -> Dict:
+        return {"epoch": self.epoch, "cursor": self.cursor, "record": self.record}
+
+    @staticmethod
+    def from_json(d: Dict) -> "SamplerState":
+        return SamplerState(d["epoch"], d["cursor"], d["record"])
+
+
+class ShardedSampler:
+    """Yields (split_id, record_index) for ONE host, resumable mid-split."""
+
+    def __init__(
+        self,
+        split_sizes: Dict[int, int],  # split_id -> n_records
+        placement: Placement,
+        host: int,
+        seed: int = 0,
+        state: Optional[SamplerState] = None,
+    ):
+        self.split_sizes = split_sizes
+        self.placement = placement
+        self.host = host
+        self.seed = seed
+        self.state = state or SamplerState()
+
+    def _host_splits(self, epoch: int) -> List[int]:
+        mine = self.placement.splits_of(self.host)
+        all_ids = sorted(self.split_sizes)
+        mine_ids = [all_ids[s] for s in mine if s < len(all_ids)]
+        order = _perm(self.seed, epoch, len(mine_ids))
+        return [mine_ids[i] for i in order]
+
+    def __iter__(self) -> Iterator[Tuple[int, int]]:
+        while True:
+            order = self._host_splits(self.state.epoch)
+            while self.state.cursor < len(order):
+                sid = order[self.state.cursor]
+                n = self.split_sizes[sid]
+                while self.state.record < n:
+                    r = self.state.record
+                    self.state.record += 1
+                    yield sid, r
+                self.state.cursor += 1
+                self.state.record = 0
+            self.state.epoch += 1
+            self.state.cursor = 0
+            self.state.record = 0

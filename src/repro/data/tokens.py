@@ -1,0 +1,221 @@
+"""Token corpora as columnar datasets (the paper's format, applied to LM data).
+
+Documents are packed into fixed-length sequences and written via COF with a
+*dictionary + bit-packed* token column — DCSL's trick (§5.3) specialized for
+token streams:
+
+  split-NNNNN/
+      tokens.col      BYTES cells: bit-packed dictionary codes per sequence
+      loss_mask.col   BYTES cells: 1 bit per position
+      meta.col        MAP cells: per-sequence provenance (doc ids, source)
+      tokens.dict.npy int32 dictionary for this split (sorted unique ids)
+
+Decode paths (Fig. 8's three worlds):
+  * decode_py       — per-element Python loop      ("Java object churn")
+  * decode_np       — vectorized numpy shifts      ("C++ cast the buffer")
+  * kernels.bitunpack + dict_decode — on-device VPU unpack (beyond-paper:
+    the compressed codes travel host->HBM, saving PCIe bandwidth)
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import BYTES, COFWriter, INT32, MAP, STRING, ColumnFormat, Schema
+from ..core.cif import CIFReader, list_splits
+
+
+def token_schema() -> Schema:
+    return Schema([
+        ("tokens", BYTES()),
+        ("n_tokens", INT32()),
+        ("loss_mask", BYTES()),
+        ("meta", MAP(STRING())),
+    ])
+
+
+def _bits_for(n_dict: int) -> int:
+    for b in (4, 8, 16):
+        if n_dict <= (1 << b):
+            return b
+    return 32
+
+
+def pack_codes(codes: np.ndarray, bits: int) -> bytes:
+    """codes: (n,) uint32 -> little-endian bit-packed bytes (word=uint32)."""
+    r = 32 // bits
+    pad = (-len(codes)) % r
+    c = np.concatenate([codes.astype(np.uint32), np.zeros(pad, np.uint32)])
+    c = c.reshape(-1, r)
+    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, :]
+    words = np.bitwise_or.reduce(c << shifts, axis=1).astype("<u4")
+    return words.tobytes()
+
+
+def unpack_codes(raw: bytes, bits: int, n: int) -> np.ndarray:
+    words = np.frombuffer(raw, dtype="<u4")
+    r = 32 // bits
+    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, :]
+    mask = np.uint32((1 << bits) - 1)
+    lanes = (words[:, None] >> shifts) & mask
+    return lanes.reshape(-1)[:n].astype(np.int32)
+
+
+def pack_bits(mask: np.ndarray) -> bytes:
+    return np.packbits(mask.astype(bool), bitorder="little").tobytes()
+
+
+def unpack_bits(raw: bytes, n: int) -> np.ndarray:
+    return np.unpackbits(np.frombuffer(raw, np.uint8), bitorder="little")[:n].astype(np.int32)
+
+
+class TokenCorpusWriter:
+    """Packs document token streams into seq_len sequences, buffers one split
+    at a time (the dictionary needs the split's token universe — the same
+    two-pass-per-block trick DCSL uses)."""
+
+    def __init__(self, root: str, seq_len: int, split_records: int = 1024):
+        self.root = root
+        self.seq_len = seq_len
+        self.split_records = split_records
+        os.makedirs(root, exist_ok=True)
+        self._cof = COFWriter(
+            root, token_schema(),
+            formats={"meta": ColumnFormat("dcsl")},
+            split_records=split_records,
+        )
+        self._carry: List[int] = []
+        self._carry_mask: List[int] = []
+        self._pending: List[Tuple[np.ndarray, np.ndarray, Dict[str, str]]] = []
+        self._split_dicts: List[np.ndarray] = []
+        self.n_sequences = 0
+        self.max_token = 0
+
+    def add_document(self, tokens: np.ndarray, meta: Optional[Dict[str, str]] = None) -> None:
+        if len(tokens):
+            self.max_token = max(self.max_token, int(np.max(tokens)))
+        self._carry.extend(int(t) for t in tokens)
+        self._carry_mask.extend([1] * len(tokens))
+        while len(self._carry) >= self.seq_len:
+            seq = np.asarray(self._carry[: self.seq_len], np.int32)
+            msk = np.asarray(self._carry_mask[: self.seq_len], np.int32)
+            del self._carry[: self.seq_len]
+            del self._carry_mask[: self.seq_len]
+            self._pending.append((seq, msk, dict(meta or {})))
+            self.n_sequences += 1
+            if len(self._pending) == self.split_records:
+                self._flush_split()
+
+    def _flush_split(self) -> None:
+        if not self._pending:
+            return
+        split_idx = self._cof._split_idx
+        all_tokens = np.concatenate([s for s, _, _ in self._pending])
+        dictionary = np.unique(all_tokens)
+        bits = _bits_for(len(dictionary))
+        code_of = {int(t): i for i, t in enumerate(dictionary)}
+        for seq, msk, meta in self._pending:
+            codes = np.asarray([code_of[int(t)] for t in seq], np.uint32)
+            self._cof.append({
+                "tokens": pack_codes(codes, bits),
+                "n_tokens": len(seq),
+                "loss_mask": pack_bits(msk),
+                "meta": meta,
+            })
+        # COF closed the split at exactly split_records; drop the sidecar
+        sdir = os.path.join(self.root, f"split-{split_idx:05d}")
+        assert os.path.isdir(sdir), "split should have been flushed by COF"
+        np.save(os.path.join(sdir, "tokens.dict.npy"), dictionary.astype(np.int32))
+        with open(os.path.join(sdir, "tokens.meta.json"), "w") as f:
+            json.dump({"bits": bits, "seq_len": self.seq_len}, f)
+        self._pending = []
+
+    def close(self) -> None:
+        # drop a final partial sequence (standard LM packing) but flush splits
+        if self._pending:
+            # partial split: COF flushes on close; write sidecar after
+            split_idx = self._cof._split_idx
+            all_tokens = np.concatenate([s for s, _, _ in self._pending])
+            dictionary = np.unique(all_tokens)
+            bits = _bits_for(len(dictionary))
+            code_of = {int(t): i for i, t in enumerate(dictionary)}
+            for seq, msk, meta in self._pending:
+                codes = np.asarray([code_of[int(t)] for t in seq], np.uint32)
+                self._cof.append({
+                    "tokens": pack_codes(codes, bits),
+                    "n_tokens": len(seq),
+                    "loss_mask": pack_bits(msk),
+                    "meta": meta,
+                })
+            self._pending = []
+            self._cof.close()
+            sdir = os.path.join(self.root, f"split-{split_idx:05d}")
+            np.save(os.path.join(sdir, "tokens.dict.npy"), dictionary.astype(np.int32))
+            with open(os.path.join(sdir, "tokens.meta.json"), "w") as f:
+                json.dump({"bits": bits, "seq_len": self.seq_len}, f)
+        else:
+            self._cof.close()
+        with open(os.path.join(self.root, "corpus.json"), "w") as f:
+            json.dump({
+                "seq_len": self.seq_len,
+                "n_sequences": self.n_sequences,
+                "vocab_size": self.max_token + 1,
+            }, f)
+
+
+class TokenSplit:
+    """Reader for one split: yields (codes|tokens, loss_mask) arrays."""
+
+    def __init__(self, split_dir: str, schema: Schema):
+        self.split_dir = split_dir
+        self.dictionary = np.load(os.path.join(split_dir, "tokens.dict.npy"))
+        with open(os.path.join(split_dir, "tokens.meta.json")) as f:
+            m = json.load(f)
+        self.bits = m["bits"]
+        self.seq_len = m["seq_len"]
+        from ..core.cif import SplitReader
+
+        # projection pushdown: meta.col is never opened for training
+        self.reader = SplitReader(split_dir, schema, ["tokens", "n_tokens", "loss_mask"])
+
+    def __len__(self) -> int:
+        return self.reader.n_records
+
+    def record(self, i: int, decode: str = "np") -> Tuple[np.ndarray, np.ndarray]:
+        raw = self.reader.readers["tokens"].value_at(i)
+        n = self.reader.readers["n_tokens"].value_at(i)
+        msk = unpack_bits(self.reader.readers["loss_mask"].value_at(i), n)
+        if decode == "packed":
+            return np.frombuffer(raw, dtype="<u4").copy(), msk  # device decodes
+        codes = unpack_codes(raw, self.bits, n)
+        if decode == "py":  # the "Java" path, for Fig. 8 benchmarks
+            toks = np.asarray([int(self.dictionary[c]) for c in codes], np.int32)
+        else:
+            toks = self.dictionary[codes]
+        return toks.astype(np.int32), msk
+
+
+class TokenCorpus:
+    def __init__(self, root: str):
+        self.root = root
+        self.schema = token_schema()
+        self.splits = list_splits(root)
+        meta_path = os.path.join(root, "corpus.json")
+        self.meta: Dict = {}
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                self.meta = json.load(f)
+
+    @property
+    def vocab_size(self) -> Optional[int]:
+        return self.meta.get("vocab_size")
+
+    def open_split(self, split_id: int) -> TokenSplit:
+        d = dict(self.splits)[split_id]
+        return TokenSplit(d, self.schema)
+
+    def split_ids(self) -> List[int]:
+        return [i for i, _ in self.splits]

@@ -1,0 +1,228 @@
+"""Sharding rules: logical axes -> mesh axes, for params, optimizer state,
+activations, and model inputs (incl. KV/SSM caches).
+
+Mesh axes: ("pod", "data", "model") multi-pod, ("data", "model") single pod.
+  * batch          -> (pod, data)         [falls back to cache/seq sharding
+                                            for tiny-batch decode shapes]
+  * TP             -> model (vocab, heads, kv_heads, mlp, ssm_inner)
+  * MoE            -> TP-in-expert baseline (mlp->model); dbrx stores experts
+                      on model and mlp on data (FSDP-style) so fp32 Adam fits
+  * ZeRO-1 variant -> moments additionally sharded over data (opt_shard_data)
+  * SP variant     -> activations' seq dim on model (seq_shard)
+
+All rules degrade to replication when a dimension is not divisible — the
+same fallback used for params in models/spec.py.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import lm
+from ..models.spec import leaf_pspec, partition_specs
+
+Rule = Union[str, Tuple[str, ...], None]
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    rules: Dict[str, Rule] = field(default_factory=dict)
+    seq_shard: bool = False  # SP: shard activation seq dim over model
+    opt_shard_data: bool = False  # ZeRO-1: moments sharded over data
+    fsdp_params: bool = False  # shard param mlp/embed dims over data too
+
+    def with_(self, **kw) -> "ShardingConfig":
+        return replace(self, **kw)
+
+
+BASE_RULES: Dict[str, Rule] = {
+    "vocab": "model",
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": None,
+    "ssm_inner": "model",
+    "state": None,
+    "layers": None,
+    "frontend": None,
+}
+
+
+def default_sharding(cfg: ModelConfig) -> ShardingConfig:
+    rules = dict(BASE_RULES)
+    if cfg.name.startswith("dbrx"):
+        # 132B params: EP storage (experts on model) + FSDP storage of the
+        # per-expert ff dim over data; attention/embed stay TP + ZeRO-1.
+        rules["experts"] = "model"
+        rules["mlp"] = "data"
+        return ShardingConfig(rules=rules, opt_shard_data=True)
+    if cfg.family == "moe":
+        # TP-in-expert baseline: experts replicated, ff sharded over model.
+        rules["experts"] = None
+        rules["mlp"] = "model"
+    return ShardingConfig(rules=rules)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _filter_axes(rule: Rule, mesh: Mesh) -> Rule:
+    if rule is None:
+        return None
+    names = (rule,) if isinstance(rule, str) else tuple(rule)
+    names = tuple(n for n in names if n in mesh.axis_names)
+    if not names:
+        return None
+    return names[0] if len(names) == 1 else names
+
+
+def param_pspecs(cfg: ModelConfig, sh: ShardingConfig, mesh: Mesh) -> Any:
+    rules = {k: _filter_axes(v, mesh) for k, v in sh.rules.items()}
+    if sh.fsdp_params:
+        # storage-shard the big replicated dims over data as well
+        for ax in ("mlp", "ssm_inner"):
+            r = rules.get(ax)
+            if r == "model":
+                rules[ax] = ("model", "data")
+            elif r is None:
+                rules[ax] = "data"
+    sizes = mesh_axis_sizes(mesh)
+    return partition_specs(lm.param_spec(cfg), rules, sizes)
+
+
+def opt_pspecs(cfg: ModelConfig, sh: ShardingConfig, mesh: Mesh) -> Any:
+    """Moments shard like params; ZeRO-1 additionally spreads over data."""
+    if not sh.opt_shard_data:
+        p = param_pspecs(cfg, sh, mesh)
+        return {"m": p, "v": p, "step": P()}
+    rules = {k: _filter_axes(v, mesh) for k, v in sh.rules.items()}
+    sizes = mesh_axis_sizes(mesh)
+    for ax in ("mlp", "embed", "ssm_inner", "vocab", "heads", "kv_heads"):
+        r = rules.get(ax)
+        if r is None:
+            rules[ax] = "data"
+        elif r == "model":
+            rules[ax] = ("model", "data")
+    spec = partition_specs(lm.param_spec(cfg), rules, sizes)
+    return {"m": spec, "v": spec, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+
+def make_constrain(sh: ShardingConfig, mesh: Mesh):
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    seq = "model" if sh.seq_shard else None
+    expert_ax = sh.rules.get("experts")
+
+    def constrain(x: jax.Array, kind: str) -> jax.Array:
+        if kind == "act" and x.ndim == 3:
+            spec = P(batch_axes, seq, None)
+        elif kind == "logits" and x.ndim == 3:
+            spec = P(batch_axes, seq, "model")
+        elif kind == "moe_dispatch" and x.ndim == 3:
+            # (n_experts, capacity, d): keep the expert axis sharded (EP)
+            # and spread capacity over the batch axes so the dispatch
+            # scatter never replicates the buffer on any device
+            e_ax = expert_ax if expert_ax in mesh.axis_names else None
+            cap_ax = tuple(a for a in batch_axes if a != e_ax) or None
+            spec = P(e_ax, cap_ax, None)
+        else:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        except ValueError:
+            return x  # non-divisible: leave to the partitioner
+
+    # explicit-SPMD blocks (shard_map MoE) need the mesh + rules
+    constrain.mesh = mesh
+    constrain.rules = {k: _filter_axes(v, mesh) for k, v in sh.rules.items()}
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# Input shardings (batch + caches)
+# ---------------------------------------------------------------------------
+
+
+def _batch_divisible(n: int, mesh: Mesh) -> bool:
+    sizes = mesh_axis_sizes(mesh)
+    dp = math.prod(sizes.get(a, 1) for a in ("pod", "data"))
+    return n % dp == 0
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching lm.input_specs(cfg, shape)."""
+    specs = lm.input_specs(cfg, lm_shape(shape))
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = mesh_axis_sizes(mesh)
+    bdiv = _batch_divisible(shape.global_batch, mesh)
+    b = batch_ax if bdiv else None
+    # when batch is unshardable (long_500k B=1), shard the long cache/seq
+    # dims over data instead so HBM per device stays bounded.
+    long_ax = None if bdiv else tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    model_sz = sizes.get("model", 1)
+    long_sz = math.prod(sizes.get(a, 1) for a in (long_ax or ()))
+
+    def _model_if_div(n: int) -> Optional[str]:
+        return "model" if model_sz > 1 and n % model_sz == 0 else None
+
+    def _with_lead(core: Tuple, nd: int) -> P:
+        lead = nd - len(core)
+        return P(*([None] * lead + list(core)))
+
+    def assign(tree: Any, name_hint: str = "") -> Any:
+        if isinstance(tree, dict):
+            return {k: assign(v, k) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [assign(v, name_hint) for v in tree]
+        sds: jax.ShapeDtypeStruct = tree
+        shp = sds.shape
+        nd = len(shp)
+        if name_hint in ("tokens", "labels", "loss_mask"):
+            return P(b) if nd == 1 else P(b, None)
+        if name_hint in ("frames", "patches"):
+            return P(b, None, None)
+        if name_hint == "pos" and nd == 1:
+            return P(b)
+        if name_hint in ("k", "v"):  # (..., B, C, KV, D)
+            B, C, KV, _ = shp[-4:]
+            c = long_ax if (long_ax and C % max(long_sz, 1) == 0) else None
+            return _with_lead((b, c, _model_if_div(KV), None), nd)
+        if name_hint == "pos":  # kv-cache positions (..., B, C)
+            B, C = shp[-2:]
+            c = long_ax if (long_ax and C % max(long_sz, 1) == 0) else None
+            return _with_lead((b, c), nd)
+        if name_hint in ("ssm", "S"):  # (..., B, H, P, N)
+            H = shp[-3]
+            return _with_lead((b, _model_if_div(H), None, None), nd)
+        if name_hint == "conv":  # (..., B, W, C)
+            return _with_lead((b, None, _model_if_div(shp[-1])), nd)
+        if name_hint in ("n", "h", "c", "m"):  # (..., B, H, P)
+            return _with_lead((b, _model_if_div(shp[-2]), None), nd)
+        return P()
+
+    return assign(specs)
+
+
+def lm_shape(shape: ShapeConfig) -> ShapeConfig:
+    return shape
+
+
+def named(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,193 @@
+"""Step builders: train_step / prefill_step / decode_step, with shardings.
+
+Everything here is mesh-aware but allocation-free: `abstract_state` builds
+ShapeDtypeStructs via eval_shape, so dry-runs lower+compile the full
+production configuration without touching device memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES
+from ..models import lm
+from ..models.spec import abstract_params, init_params
+from ..training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from .sharding import (
+    ShardingConfig,
+    default_sharding,
+    input_pspecs,
+    make_constrain,
+    named,
+    opt_pspecs,
+    param_pspecs,
+)
+
+
+@dataclass(frozen=True)
+class StepOptions:
+    q_chunk: int = 0  # 0 = auto (chunk when S > 4096)
+    loss_chunk: int = 0
+    aux_weight: float = 0.01
+    opt: AdamWConfig = AdamWConfig()
+
+    def resolve_q_chunk(self, seq_len: int) -> int:
+        if self.q_chunk:
+            return self.q_chunk if seq_len % self.q_chunk == 0 else 0
+        if seq_len > 4096:
+            return 2048
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    params = init_params(lm.param_spec(cfg), key)
+    opt = init_opt_state(params)
+    return {"params": params, **opt}
+
+
+def abstract_state(cfg: ModelConfig) -> Dict[str, Any]:
+    params = abstract_params(lm.param_spec(cfg))
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "params": params,
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_pspecs(cfg: ModelConfig, sh: ShardingConfig, mesh: Mesh) -> Dict[str, Any]:
+    o = opt_pspecs(cfg, sh, mesh)
+    return {"params": param_pspecs(cfg, sh, mesh), **o}
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    sh: ShardingConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    opts: StepOptions = StepOptions(),
+):
+    constrain = make_constrain(sh, mesh)
+    q_chunk = opts.resolve_q_chunk(shape.seq_len)
+
+    def train_step(state, batch):
+        def lf(p):
+            return lm.loss_fn(
+                p, batch, cfg,
+                q_chunk=q_chunk, loss_chunk=opts.loss_chunk,
+                aux_weight=opts.aux_weight, constrain=constrain,
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        opt_state = {"m": state["m"], "v": state["v"], "step": state["step"]}
+        new_p, new_opt, om = adamw_update(opts.opt, state["params"], grads, opt_state)
+        new_state = {"params": new_p, **new_opt}
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_state, out_metrics
+
+    sp = state_pspecs(cfg, sh, mesh)
+    bp = input_pspecs(cfg, shape, mesh)
+    metrics_p = {
+        k: P() for k in ("loss", "ce", "aux", "tokens", "grad_norm", "lr")
+    }
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(named(sp, mesh), named(bp, mesh)),
+        out_shardings=(named(sp, mesh), named(metrics_p, mesh)),
+        donate_argnums=(0,),
+    )
+    return jitted, (sp, bp)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    pseudo = ShapeConfig(shape.name, shape.seq_len, shape.global_batch, "decode")
+    return input_pspecs(cfg, pseudo, mesh)["caches"]
+
+
+def build_prefill_step(
+    cfg: ModelConfig,
+    sh: ShardingConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    opts: StepOptions = StepOptions(),
+):
+    constrain = make_constrain(sh, mesh)
+    q_chunk = opts.resolve_q_chunk(shape.seq_len)
+    cache_len = shape.seq_len
+
+    def prefill_step(params, batch):
+        return lm.prefill(
+            params, batch, cfg, cache_len=cache_len, q_chunk=q_chunk,
+            constrain=constrain,
+        )
+
+    pp = param_pspecs(cfg, sh, mesh)
+    bp = input_pspecs(cfg, shape, mesh)
+    cp = _cache_pspecs(cfg, shape, mesh)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes.get(a, 1)
+    bdiv = shape.global_batch % dp == 0
+    vdiv = cfg.vocab_size % sizes.get("model", 1) == 0
+    logits_p = P(batch_axes if bdiv else None, None, "model" if vdiv else None)
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(named(pp, mesh), named(bp, mesh)),
+        out_shardings=(NamedSharding(mesh, logits_p), named(cp, mesh)),
+    )
+    return jitted, (pp, bp, cp)
+
+
+def build_decode_step(
+    cfg: ModelConfig,
+    sh: ShardingConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    opts: StepOptions = StepOptions(),
+):
+    constrain = make_constrain(sh, mesh)
+
+    def decode(params, caches, tokens, pos):
+        return lm.decode_step(params, caches, tokens, pos, cfg, constrain=constrain)
+
+    pp = param_pspecs(cfg, sh, mesh)
+    ip = input_pspecs(cfg, shape, mesh)
+    cp, tp, pp_pos = ip["caches"], ip["tokens"], ip["pos"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes.get(a, 1)
+    bdiv = shape.global_batch % dp == 0
+    vdiv = cfg.vocab_size % sizes.get("model", 1) == 0
+    logits_p = P(batch_axes if bdiv else None, None, "model" if vdiv else None)
+    jitted = jax.jit(
+        decode,
+        in_shardings=(named(pp, mesh), named(cp, mesh), named(tp, mesh), named(pp_pos, mesh)),
+        out_shardings=(NamedSharding(mesh, logits_p), named(cp, mesh)),
+        donate_argnums=(1,),
+    )
+    return jitted, (pp, cp)

@@ -1,0 +1,3 @@
+from .ops import bitunpack, dict_decode, dict_embed, filter_compact, late_materialize
+
+__all__ = ["bitunpack", "dict_decode", "dict_embed", "filter_compact", "late_materialize"]

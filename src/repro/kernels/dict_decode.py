@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: dictionary decode (gather LUT), the device half of DCSL.
+
+Dictionary-compressed token/metadata blocks ship to the device as small
+integer codes; the per-block dictionary (<= a few thousand entries) fits in
+VMEM, so decode is a VMEM-resident gather — the DCSL "cheap decode" property
+(§5.3) carried across the host->HBM->VMEM path.
+
+Two variants:
+  * scalar table (V,): codes -> values                 (token ids, ints)
+  * vector table (V,D): codes -> rows                  (fused dict+embed:
+    the wrapper in ops.py pre-gathers the dictionary's embedding rows so raw
+    token ids are never materialized in HBM)
+
+The gather is expressed as a one-hot matmul over the dictionary: TPU has no
+fast arbitrary VMEM gather, but the MXU eats (bn x V) @ (V x D) for
+breakfast when V is dictionary-sized.  This is the standard TPU idiom.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _scalar_kernel(codes_ref, table_ref, out_ref):
+    codes = codes_ref[...]  # (bm, LANE) int32
+    table = table_ref[...]  # (V,) values
+    v = table.shape[0]
+    onehot = (codes[:, :, None] == jnp.arange(v, dtype=jnp.int32)[None, None, :])
+    vals = jnp.sum(
+        onehot.astype(jnp.float32) * table.astype(jnp.float32)[None, None, :], axis=-1
+    )
+    out_ref[...] = vals.astype(out_ref.dtype)
+
+
+def _vector_kernel(codes_ref, table_ref, out_ref):
+    codes = codes_ref[...][:, 0]  # (bn,) int32 — one code per output row
+    table = table_ref[...]  # (V, D)
+    v = table.shape[0]
+    onehot = (codes[:, None] == jnp.arange(v, dtype=jnp.int32)[None, :]).astype(
+        table.dtype
+    )
+    out_ref[...] = jnp.dot(onehot, table, preferred_element_type=out_ref.dtype)
+
+
+def dict_decode_scalar(
+    codes: jax.Array, table: jax.Array, block_rows: int = 32, interpret: bool = False
+) -> jax.Array:
+    """codes: (rows, 128) int32; table: (V,) -> (rows, 128) of table.dtype."""
+    rows, lane = codes.shape
+    assert lane == LANE
+    assert rows % block_rows == 0
+    v = table.shape[0]
+    return pl.pallas_call(
+        _scalar_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((v,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), table.dtype),
+        interpret=interpret,
+    )(codes, table)
+
+
+def dict_decode_rows(
+    codes: jax.Array,
+    table: jax.Array,
+    block_n: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """codes: (N, 1) int32; table: (V, D) -> (N, D) gathered rows."""
+    n = codes.shape[0]
+    v, d = table.shape
+    assert n % block_n == 0 and d % block_d == 0, (n, d)
+    return pl.pallas_call(
+        _vector_kernel,
+        grid=(n // block_n, d // block_d),
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((v, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(codes, table)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernels: predicate scan -> compacted indices (late
+materialization on-device).
+
+The map-side pattern of the paper's Fig. 1 — evaluate a predicate on one
+column, touch other columns only for matching records — becomes, on TPU:
+
+    mask = predicate(column_block)              # VPU elementwise
+    idx, count = filter_compact(mask)           # THIS kernel
+    wanted = other_column[idx[:count]]          # gather only survivors
+
+Two passes over a sequential grid:
+  1. block_count_kernel: per-block popcount (cheap reduction).
+  2. compact_kernel: within each block, compaction via the one-hot-matmul
+     scatter idiom (TPU has no VMEM scatter; (bn x bn) MXU work is cheap),
+     then a dynamically-offset store at the running prefix offset.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _count_kernel(mask_ref, out_ref):
+    out_ref[0] = jnp.sum(mask_ref[...].astype(jnp.int32))
+
+
+def block_counts(mask: jax.Array, block: int, interpret: bool = False) -> jax.Array:
+    n = mask.shape[0]
+    assert n % block == 0
+    nb = n // block
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.int32),
+        interpret=interpret,
+    )(mask)
+
+
+def _compact_kernel(mask_ref, offset_ref, out_ref, *, block: int, n_total: int):
+    i = pl.program_id(0)
+    m = mask_ref[...].astype(jnp.int32)  # (block,)
+    # global positions of this block's elements
+    gidx = i * block + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    # within-block destination slot for each kept element
+    dest = jnp.cumsum(m) - 1  # (block,), valid where m==1
+    # one-hot scatter: slots x elements matmul; kept element e lands in dest[e]
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    onehot = ((slots == dest[None, :]) & (m[None, :] == 1)).astype(jnp.float32)
+    compact = jnp.dot(onehot, gidx.astype(jnp.float32)).astype(jnp.int32)
+    kept = dest[-1] + 1  # = popcount of this block
+    # pad the tail with n_total (matches the jnp.nonzero fill_value oracle)
+    slot_ids = jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    compact = jnp.where(slot_ids < kept, compact, n_total)
+    out_ref[pl.dslice(offset_ref[0], block)] = compact
+
+
+def compact_indices(
+    mask: jax.Array, block: int = 1024, interpret: bool = False
+) -> tuple:
+    """mask: (N,) bool -> (indices (N + block,) int32, count ()).
+
+    indices[:count] are positions of True entries in order; the remainder is
+    filled with N.  The output is over-allocated by one block so each block's
+    dynamically-offset store stays in bounds; callers slice [:N].
+    """
+    n = mask.shape[0]
+    assert n % block == 0
+    counts = block_counts(mask, block, interpret=interpret)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    nb = n // block
+    out = pl.pallas_call(
+        partial(_compact_kernel, block=block, n_total=n),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n + block,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n + block,), jnp.int32),
+        interpret=interpret,
+    )(mask, offsets)
+    total = jnp.sum(counts)
+    # blocks pad their tails with n; a later block's store may overwrite a
+    # previous pad with real indices (offsets overlap pads by construction),
+    # so the final fixup re-pads everything past `total`.
+    slot = jnp.arange(n + block, dtype=jnp.int32)
+    out = jnp.where(slot < total, out, n)
+    return out[:n], total

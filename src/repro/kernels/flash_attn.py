@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash attention (forward), online-softmax tiling.
+
+The dry-run roofline shows the baseline memory term is dominated by the
+O(S^2) score/softmax buffers hitting HBM (see EXPERIMENTS.md §Roofline).
+Flash attention keeps score tiles in VMEM: HBM traffic drops from
+O(B*H*S^2) to O(B*S*H*D) — the q/k/v/o tensors plus O(S) softmax stats.
+
+Grid: (batch*heads, q_blocks); each program streams all k/v blocks for one
+q block, maintaining running max m, normalizer l, and accumulator acc in
+f32 scratch (classic FlashAttention-2 schedule, adapted to MXU-aligned
+(block_q x block_k) tiles with lane dim = head_dim).
+
+Causal masking is positional (q_pos >= k_pos); with `causal=False` the full
+rectangle is attended (encoder).  GQA is handled by the ops wrapper mapping
+q-heads to kv-heads before the call.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+            seq_k: int, causal: bool, sm_scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # (block_q, d)
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    nk = seq_k // block_k
+    if causal:
+        # only k-blocks at or below the diagonal contribute:
+        # ceil((qi+1)*block_q / block_k), as a traced value
+        nk_c = ((qi + 1) * block_q + block_k - 1) // block_k
+        nk = jnp.minimum(nk, nk_c)
+
+    def body(ki, carry):
+        m_, l_, acc_ = carry
+        k = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_ - m_new)
+        l_new = l_ * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_ * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m, l, acc))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,  # (BH, Sk, D)
+    v: jax.Array,  # (BH, Sk, D)
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    sm_scale = 1.0 / math.sqrt(d)
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, seq_k=sk,
+        causal=causal, sm_scale=sm_scale,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(bh, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Pure-jnp oracle (same layout)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

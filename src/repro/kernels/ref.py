@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitunpack_ref(words: jax.Array, bits: int) -> jax.Array:
+    """words: (..., W) uint32 -> (..., W*32//bits) int32; little-endian lanes."""
+    assert 32 % bits == 0
+    r = 32 // bits
+    shifts = jnp.arange(r, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    lanes = (words[..., None] >> shifts) & mask  # (..., W, r)
+    return lanes.reshape(*words.shape[:-1], words.shape[-1] * r).astype(jnp.int32)
+
+
+def dict_decode_ref(codes: jax.Array, table: jax.Array) -> jax.Array:
+    """codes: (N,) int32; table: (V,) or (V,D) -> (N,) or (N,D)."""
+    return jnp.take(table, codes, axis=0)
+
+
+def filter_compact_ref(mask: jax.Array) -> tuple:
+    """mask: (N,) bool -> (indices (N,) int32 [compacted, padded with N], count).
+
+    indices[:count] are the positions where mask is True, in order.
+    """
+    n = mask.shape[0]
+    idx = jnp.nonzero(mask, size=n, fill_value=n)[0].astype(jnp.int32)
+    return idx, jnp.sum(mask.astype(jnp.int32))
+
+
+def dict_embed_ref(codes: jax.Array, dict_ids: jax.Array, emb: jax.Array) -> jax.Array:
+    """codes (N,) -> emb[dict_ids[codes]] : (N, D)."""
+    return emb[dict_ids[codes]]

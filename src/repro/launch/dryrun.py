@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  — the two lines above MUST precede any jax import: jax
+# locks the device count on first initialization.
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun")
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    variant: str = "baseline",
+    seq_shard: bool = False,
+    opt_shard_data: bool = False,
+    fsdp: bool = False,
+    q_chunk: int = 0,
+    loss_chunk: int = 0,
+    remat: Optional[str] = None,
+    moe_ep: bool = False,
+    moe_impl: Optional[str] = None,
+    kv_mode: Optional[str] = None,
+) -> Dict[str, Any]:
+    import jax
+
+    from ..configs.base import SHAPES, get_config
+    from ..distributed.sharding import default_sharding
+    from ..distributed.steps import (
+        StepOptions,
+        abstract_state,
+        build_decode_step,
+        build_prefill_step,
+        build_train_step,
+    )
+    from ..models import lm
+    from .hlo_analysis import analyze_hlo, roofline_terms
+    from .mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "variant": variant,
+        "kind": shape.kind,
+    }
+    skip = cfg.skip_reason(shape_name)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    if kv_mode:
+        cfg = dataclasses.replace(cfg, attn_kv_mode=kv_mode)
+    sh = default_sharding(cfg)
+    if seq_shard:
+        sh = sh.with_(seq_shard=True)
+    if opt_shard_data:
+        sh = sh.with_(opt_shard_data=True)
+    if fsdp:
+        sh = sh.with_(fsdp_params=True)
+    if moe_ep:
+        rules = dict(sh.rules)
+        rules["experts"] = "model"
+        rules["mlp"] = None if not fsdp else rules.get("mlp")
+        sh = sh.with_(rules=rules)
+    opts = StepOptions(q_chunk=q_chunk, loss_chunk=loss_chunk)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step, _ = build_train_step(cfg, sh, mesh, shape, opts)
+            args = (abstract_state(cfg), lm.input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            step, _ = build_prefill_step(cfg, sh, mesh, shape, opts)
+            args = (abstract_params_only(cfg), lm.input_specs(cfg, shape))
+        else:
+            step, _ = build_decode_step(cfg, sh, mesh, shape, opts)
+            ins = lm.input_specs(cfg, shape)
+            args = (abstract_params_only(cfg), ins["caches"], ins["tokens"], ins["pos"])
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        print("memory_analysis:", mem)
+        cost = compiled.cost_analysis()
+        print("cost_analysis flops:", cost.get("flops"), "bytes:", cost.get("bytes accessed"))
+        text = compiled.as_text()
+        # loop-aware analysis (XLA's cost_analysis counts while bodies once;
+        # ours multiplies by known_trip_count — see hlo_analysis.py)
+        hc = analyze_hlo(text)
+        coll = hc.coll
+        flops = hc.flops
+        hbm_bytes = hc.bytes
+        traffic = hc.traffic
+        terms = roofline_terms(flops, hbm_bytes, traffic, n_chips)
+
+        mem_rec = {}
+        if mem is not None:
+            for f in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            ):
+                v = getattr(mem, f, None)
+                if v is not None:
+                    mem_rec[f] = int(v)
+
+        # MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE); D = tokens/step
+        n_active = lm.n_active_params(cfg)
+        if shape.kind == "train":
+            d_tokens = shape.global_batch * shape.seq_len
+            model_flops = 6 * n_active * d_tokens
+        elif shape.kind == "prefill":
+            d_tokens = shape.global_batch * shape.seq_len
+            model_flops = 2 * n_active * d_tokens
+        else:
+            d_tokens = shape.global_batch  # one token per sequence
+            model_flops = 2 * n_active * d_tokens
+        hlo_flops_total = flops * n_chips
+        rec.update(
+            status="ok",
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=flops,
+            xla_cost_flops=float(cost.get("flops", 0.0)),
+            xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+            hbm_bytes_per_device=hbm_bytes,
+            collectives={k: {kk: float(vv) for kk, vv in v.items()} for k, v in coll.items()},
+            collective_traffic_per_device=traffic,
+            scope_flops={k: float(v) for k, v in hc.scope_flops.items()},
+            scope_bytes={k: float(v) for k, v in hc.scope_bytes.items()},
+            roofline=terms,
+            memory=mem_rec,
+            n_params=lm.n_params(cfg),
+            n_active_params=n_active,
+            model_flops_total=model_flops,
+            hlo_flops_total=hlo_flops_total,
+            useful_flops_ratio=(model_flops / hlo_flops_total) if hlo_flops_total else None,
+        )
+    return rec
+
+
+def abstract_params_only(cfg):
+    from ..models import lm
+    from ..models.spec import abstract_params
+
+    return abstract_params(lm.param_spec(cfg))
+
+
+def cell_filename(arch: str, shape: str, mesh: str, variant: str) -> str:
+    return f"{arch}__{shape}__{mesh}__{variant}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run: lower+compile every (arch x shape x mesh) cell")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[None, "train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="sweep every cell in subprocesses")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--opt-shard-data", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true")
+    ap.add_argument("--moe-impl", default=None,
+                    choices=[None, "ragged", "capacity", "capacity_ep"])
+    ap.add_argument("--kv-mode", default=None, choices=[None, "gather", "grouped"])
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--remat", default=None, choices=[None, "none", "block"])
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    if args.all:
+        from ..configs.base import SHAPES, all_configs
+
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        cells = [
+            (a, s, m)
+            for a in sorted(all_configs())
+            for s in SHAPES
+            for m in meshes
+        ]
+        failures = []
+        for a, s, m in cells:
+            path = os.path.join(args.out_dir, cell_filename(a, s, m, args.variant))
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {a} {s} {m}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", a, "--shape", s, "--mesh", m,
+                "--variant", args.variant, "--out-dir", args.out_dir,
+            ]
+            for flag, on in (
+                ("--seq-shard", args.seq_shard), ("--opt-shard-data", args.opt_shard_data),
+                ("--fsdp", args.fsdp), ("--moe-ep", args.moe_ep),
+            ):
+                if on:
+                    cmd.append(flag)
+            if args.q_chunk:
+                cmd += ["--q-chunk", str(args.q_chunk)]
+            if args.loss_chunk:
+                cmd += ["--loss-chunk", str(args.loss_chunk)]
+            if args.remat:
+                cmd += ["--remat", args.remat]
+            print(f"[run] {a} {s} {m} ...", flush=True)
+            t0 = time.time()
+            try:
+                r = subprocess.run(cmd, capture_output=True, text=True, timeout=args.timeout)
+                ok = r.returncode == 0
+            except subprocess.TimeoutExpired:
+                ok = False
+                r = None
+            if not ok:
+                failures.append((a, s, m))
+                err = (r.stderr[-2000:] if r else "TIMEOUT")
+                with open(path, "w") as f:
+                    json.dump({"arch": a, "shape": s, "mesh": m, "variant": args.variant,
+                               "status": "failed", "error": err}, f, indent=1)
+                print(f"  FAILED ({time.time()-t0:.0f}s): {err[-300:]}")
+            else:
+                print(f"  ok ({time.time()-t0:.0f}s)")
+        print(f"\nsweep done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch/--shape required (or --all)"
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        try:
+            rec = run_cell(
+                args.arch, args.shape, m, variant=args.variant,
+                seq_shard=args.seq_shard, opt_shard_data=args.opt_shard_data,
+                fsdp=args.fsdp, moe_ep=args.moe_ep,
+                moe_impl=args.moe_impl, kv_mode=args.kv_mode,
+                q_chunk=args.q_chunk, loss_chunk=args.loss_chunk, remat=args.remat,
+            )
+        except Exception:
+            rec = {
+                "arch": args.arch, "shape": args.shape, "mesh": m,
+                "variant": args.variant, "status": "failed",
+                "error": traceback.format_exc()[-4000:],
+            }
+        path = os.path.join(args.out_dir, cell_filename(args.arch, args.shape, m, args.variant))
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps({k: v for k, v in rec.items() if k not in ("collectives",)}, indent=1))
+        if rec["status"] == "failed":
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

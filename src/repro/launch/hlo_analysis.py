@@ -1,0 +1,360 @@
+"""Loop-aware post-SPMD HLO analysis: FLOPs, HBM bytes, collective traffic.
+
+Why not compiled.cost_analysis()?  XLA's HloCostAnalysis counts a while
+loop's body ONCE, so a scan over 48 layers under-reports by 48x (verified
+empirically).  The partitioned HLO text carries
+``backend_config={"known_trip_count":{"n":...}}`` on every counted loop, so
+we parse the module, build a per-computation cost, and multiply loop bodies
+by their trip counts.
+
+Cost model (per executed instruction, per device — shapes in the
+partitioned module are already per-device):
+  dot                 flops += 2 * prod(result_dims) * prod(contracted dims)
+  fusion              bytes += operand bytes + result bytes (a fusion is the
+                      HBM traffic unit: internals live in registers/VMEM);
+                      flops += flops of the fused computation
+  dynamic-update-slice bytes += update bytes (in-place on TPU)
+  collectives         traffic += factor * shaped bytes
+                        all-gather: result bytes;   all-reduce: 2 * bytes
+                        reduce-scatter / all-to-all / permute: operand bytes
+  while               cost += trip * (body + cond)
+  top-level elementwise/copy/convert/reduce/slice: bytes += inputs + outputs
+  parameter/constant/tuple/get-tuple-element/bitcast: free
+
+FLOPs counts MXU work only (dots); VPU elementwise flops are ignored, which
+is the convention roofline analyses use for TPUs.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+FACTORS = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "partition-id", "replica-id", "iota"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes_shape(type_str: str) -> Tuple[int, Optional[List[int]]]:
+    """Bytes of a (possibly tuple) type; shape of the first array component."""
+    total = 0
+    first_shape: Optional[List[int]] = None
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        n = math.prod(shape) if shape else 1
+        total += n * DTYPE_BYTES[dtype]
+        if first_shape is None:
+            first_shape = shape
+    return total, first_shape
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, str] = field(default_factory=dict)  # name -> type_str
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_LHS = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"\s*([\w\-]+)\(")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_type(s: str) -> Tuple[str, int]:
+    """Parse a (possibly tuple) HLO type at the start of s; tuple types may
+    contain /*index=N*/ comments.  Returns (type_str, end_index)."""
+    if s.startswith("("):
+        end = s.index(")")  # parens never nest inside types
+        return s[: end + 1], end + 1
+    m = re.match(r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?", s)
+    if not m:
+        return "", 0
+    return m.group(0), m.end()
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("{" in line):
+            m = _COMP_HEAD.match(line.strip())
+            if m and "=" not in line.split("(")[0]:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        m = _LHS.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        rest = line[m.end():]
+        type_str, tend = _parse_type(rest)
+        if not type_str:
+            continue
+        rest = rest[tend:]
+        mo = _OPCODE.match(rest)
+        if not mo:
+            continue
+        opcode = mo.group(1)
+        rest = rest[mo.end():]
+        # operands are inside the first balanced paren group of `rest`
+        depth, i = 1, 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str, attrs = rest[: i - 1], rest[i:]
+        ops = _OPERAND.findall(operand_str)
+        cur.instrs.append(Instr(name, type_str, opcode, ops, attrs))
+        cur.table[name] = type_str
+    return comps, entry
+
+
+SCOPES = ("attn_core",)  # named scopes bucketed separately (flash variant)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    traffic: float = 0.0
+    coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    scope_flops: Dict[str, float] = field(default_factory=dict)
+    scope_bytes: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.coll.items():
+            rec = self.coll.setdefault(k, {"count": 0.0, "bytes": 0.0, "traffic": 0.0})
+            for kk in rec:
+                rec[kk] += v[kk] * mult
+        for k, v in other.scope_flops.items():
+            self.scope_flops[k] = self.scope_flops.get(k, 0.0) + v * mult
+        for k, v in other.scope_bytes.items():
+            self.scope_bytes[k] = self.scope_bytes.get(k, 0.0) + v * mult
+
+    def tag(self, attrs: str, flops: float, bytes_: float) -> None:
+        for s in SCOPES:
+            if s in attrs:
+                self.scope_flops[s] = self.scope_flops.get(s, 0.0) + flops
+                self.scope_bytes[s] = self.scope_bytes.get(s, 0.0) + bytes_
+
+
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    rbytes, rshape = _type_bytes_shape(ins.type_str)
+    if rshape is None:
+        return 0.0
+    contracted = 1.0
+    m = _LHS_C.search(ins.attrs)
+    if m and ins.operands:
+        lhs_type = comp.table.get(ins.operands[0])
+        if lhs_type:
+            _, lshape = _type_bytes_shape(lhs_type)
+            if lshape:
+                for d in (int(x) for x in m.group(1).split(",") if x):
+                    if d < len(lshape):
+                        contracted *= lshape[d]
+    return 2.0 * math.prod(rshape) * contracted if rshape else 0.0
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> float:
+    total = 0.0
+    for o in ins.operands:
+        t = comp.table.get(o)
+        if t:
+            total += _type_bytes_shape(t)[0]
+    return total
+
+
+def analyze_computation(
+    comps: Dict[str, Computation], name: str, memo: Dict[str, Cost]
+) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()  # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    c = Cost()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op in FREE_OPS:
+            continue
+        if op.endswith("-done") or op.endswith("-update"):
+            continue  # async completion: traffic counted at the -start op
+        out_bytes, _ = _type_bytes_shape(ins.type_str)
+        base = op.replace("-start", "")
+        if base in COLLECTIVES:
+            if base == "all-gather":
+                shaped = out_bytes
+            else:
+                shaped = _operand_bytes(ins, comp)
+            rec = c.coll.setdefault(base, {"count": 0.0, "bytes": 0.0, "traffic": 0.0})
+            rec["count"] += 1
+            rec["bytes"] += shaped
+            rec["traffic"] += shaped * FACTORS[base]
+            c.traffic += shaped * FACTORS[base]
+            c.bytes += out_bytes + _operand_bytes(ins, comp)
+            c.tag(ins.attrs, 0.0, out_bytes + _operand_bytes(ins, comp))
+            continue
+        if op == "while":
+            trip = 1
+            m = _TRIP.search(ins.attrs)
+            if m:
+                trip = int(m.group(1))
+            body = _CALLS.search(ins.attrs)
+            cond = _COND.search(ins.attrs)
+            sub = Cost()
+            if body:
+                sub.add(analyze_computation(comps, body.group(1), memo))
+            if cond:
+                sub.add(analyze_computation(comps, cond.group(1), memo))
+            c.add(sub, mult=trip)
+            continue
+        if op in ("fusion", "call", "custom-call", "map", "reduce", "reduce-window",
+                  "scatter", "select-and-scatter", "sort", "conditional"):
+            m = _CALLS.search(ins.attrs)
+            if m and op in ("fusion", "call", "map", "conditional"):
+                sub = analyze_computation(comps, m.group(1), memo)
+                c.flops += sub.flops  # fused dots still run on the MXU
+                c.traffic += sub.traffic
+                for k, v in sub.coll.items():
+                    rec = c.coll.setdefault(k, {"count": 0.0, "bytes": 0.0, "traffic": 0.0})
+                    for kk in rec:
+                        rec[kk] += v[kk]
+                for k, v in sub.scope_flops.items():
+                    c.scope_flops[k] = c.scope_flops.get(k, 0.0) + v
+            io = out_bytes + _operand_bytes(ins, comp)
+            c.bytes += io
+            c.tag(ins.attrs, 0.0, io)
+            continue
+        if op == "dot":
+            fl = _dot_flops(ins, comp)
+            io = out_bytes + _operand_bytes(ins, comp)
+            c.flops += fl
+            c.bytes += io
+            c.tag(ins.attrs, fl, io)
+            continue
+        if op == "convolution":
+            # rough: 2 * output elements * kernel elements
+            ob, oshape = _type_bytes_shape(ins.type_str)
+            kb = 0.0
+            if len(ins.operands) > 1:
+                t = comp.table.get(ins.operands[1])
+                if t:
+                    _, kshape = _type_bytes_shape(t)
+                    kb = math.prod(kshape) if kshape else 0
+            c.flops += 2.0 * (math.prod(oshape) if oshape else 0) * (kb or 1)
+            c.bytes += out_bytes + _operand_bytes(ins, comp)
+            continue
+        if op == "dynamic-update-slice":
+            # in-place on TPU: traffic = the update slice (operand 1)
+            upd = 0.0
+            if len(ins.operands) > 1:
+                t = comp.table.get(ins.operands[1])
+                if t:
+                    upd = _type_bytes_shape(t)[0]
+            c.bytes += upd
+            continue
+        if op in ("dynamic-slice", "gather"):
+            # a slice/gather reads only the selected window/rows, not the
+            # whole operand — counting the operand would charge a scan over
+            # layers (or time) L x the stacked buffer it slices per step.
+            c.bytes += 2 * out_bytes  # read selected + write result
+            c.tag(ins.attrs, 0.0, 2 * out_bytes)
+            continue
+        if op == "scatter":
+            upd = 0.0
+            if len(ins.operands) > 2:
+                t = comp.table.get(ins.operands[2])
+                if t:
+                    upd = _type_bytes_shape(t)[0]
+            c.bytes += 2 * upd  # read + write the touched rows (in-place)
+            c.tag(ins.attrs, 0.0, 2 * upd)
+            continue
+        # generic elementwise / data movement at top level
+        io = out_bytes + _operand_bytes(ins, comp)
+        c.bytes += io
+        c.tag(ins.attrs, 0.0, io)
+    memo[name] = c
+    return c
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return Cost()
+    memo: Dict[str, Cost] = {}
+    return analyze_computation(comps, entry, memo)
+
+
+def collective_stats(text: str) -> Dict[str, Dict[str, float]]:
+    return analyze_hlo(text).coll
+
+
+def total_traffic(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["traffic"] for v in stats.values())
+
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (traffic charged against one link)
+
+
+def roofline_terms(
+    flops: float, hbm_bytes: float, coll_traffic: float, n_chips: int
+) -> Dict[str, float]:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    coll_s = coll_traffic / ICI_BW
+    dom = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dom,
+    }

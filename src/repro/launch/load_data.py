@@ -1,0 +1,100 @@
+"""Parallel loader: convert raw data into COF columnar storage (the paper's
+one-time load cost, Table 2).
+
+Two modes:
+  --kind crawl   synthetic intranet-crawl records (URLInfo schema, Fig. 2)
+  --kind tokens  synthetic token documents -> packed token corpus
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def synth_crawl_records(n: int, seed: int = 0, content_bytes: int = 2048,
+                        jp_fraction: float = 0.06):
+    """Generator of URLInfo records ~ the paper's 6.4TB crawl, scaled down.
+    `jp_fraction` matches the paper's 6% predicate selectivity."""
+    rng = np.random.default_rng(seed)
+    content_types = ["text/html", "application/pdf", "text/plain", "image/png",
+                     "application/json", "text/xml"]
+    langs = ["en", "jp", "de", "fr", "es"]
+    hosts = ["w3.ibm.com", "ibm.com/us", "research.ibm.com", "example.org",
+             "internal.example.com"]
+    for i in range(n):
+        jp = rng.random() < jp_fraction
+        host = "ibm.com/jp" if jp else hosts[int(rng.integers(0, len(hosts)))]
+        n_inlinks = int(rng.integers(0, 8))
+        yield {
+            "url": f"http://{host}/page/{i}",
+            "srcUrl": f"http://{hosts[int(rng.integers(0, len(hosts)))]}/src/{i % 997}",
+            "fetchTime": 1300000000 + i,
+            "inlink": [f"http://{hosts[int(rng.integers(0, len(hosts)))]}/in/{j}"
+                       for j in range(n_inlinks)],
+            "metadata": {
+                "content-type": content_types[int(rng.integers(0, len(content_types)))],
+                "encoding": "utf-8",
+                "language": langs[int(rng.integers(0, len(langs)))],
+                "server": f"apache/{int(rng.integers(1, 3))}.{int(rng.integers(0, 10))}",
+                "status": "200",
+            },
+            "annotations": {
+                "topic": f"t{int(rng.integers(0, 50))}",
+                "quality": f"{rng.random():.3f}",
+            },
+            "content": rng.integers(0, 256, size=int(content_bytes * (0.5 + rng.random())),
+                                     dtype=np.uint8).tobytes(),
+        }
+
+
+def synth_token_docs(n_docs: int, vocab: int = 50000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    for i in range(n_docs):
+        ln = int(rng.integers(64, 2048))
+        # zipfian-ish: most mass on low ids (good dictionary compression)
+        toks = (rng.pareto(1.2, size=ln) * 100).astype(np.int64) % vocab
+        yield toks.astype(np.int32), {"doc": str(i), "source": f"s{i % 7}"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", choices=["crawl", "tokens"], required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--split-records", type=int, default=4096)
+    ap.add_argument("--metadata-format", default="dcsl",
+                    choices=["plain", "skiplist", "dcsl"])
+    ap.add_argument("--content-codec", default="lzo", choices=["none", "lzo", "zlib"])
+    args = ap.parse_args()
+
+    if args.kind == "crawl":
+        from ..core import COFWriter, ColumnFormat, urlinfo_schema
+
+        fmts = {
+            "url": ColumnFormat("skiplist"),
+            "inlink": ColumnFormat("skiplist"),
+            "metadata": ColumnFormat(args.metadata_format),
+            "annotations": ColumnFormat("skiplist"),
+        }
+        if args.content_codec != "none":
+            fmts["content"] = ColumnFormat("cblock", codec=args.content_codec)
+        w = COFWriter(args.out, urlinfo_schema(), formats=fmts,
+                      split_records=args.split_records)
+        w.append_all(synth_crawl_records(args.n))
+        w.close()
+        print(f"wrote {w.total_records} crawl records to {args.out}")
+    else:
+        from ..data.tokens import TokenCorpusWriter
+
+        w = TokenCorpusWriter(args.out, seq_len=args.seq_len,
+                              split_records=args.split_records)
+        for toks, meta in synth_token_docs(args.n):
+            w.add_document(toks, meta)
+        w.close()
+        print(f"wrote {w.n_sequences} sequences to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import layers, lm, moe, spec, ssm, xlstm  # noqa: F401

@@ -1,0 +1,352 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full/sliding/
+decode), SwiGLU/GeGLU MLP, embeddings.  Pure functions over param dicts.
+
+Attention supports:
+  * full causal / bidirectional (encoder) masks
+  * sliding-window local attention (gemma3's 5:1 pattern)
+  * q-head padding for TP divisibility (phi4: 24 -> 32 with output masking;
+    the real q->kv GQA map is preserved for the non-padded heads)
+  * decode against a KV cache (full or rolling-window)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .spec import LeafSpec
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Norm / RoPE
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> Dict[str, LeafSpec]:
+    return {"scale": LeafSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p: Dict[str, jax.Array], x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-jnp.log(theta) * (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rx1, rx2, x[..., 2 * half :]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def padded_heads(cfg: ModelConfig, tp: int = 16) -> int:
+    h = cfg.n_heads
+    return h if h % tp == 0 or h < tp else ((h + tp - 1) // tp) * tp
+
+
+def attn_spec(cfg: ModelConfig) -> Dict[str, LeafSpec]:
+    e, d = cfg.d_model, cfg.resolved_head_dim()
+    hp, kv = padded_heads(cfg), cfg.n_kv_heads
+    return {
+        "wq": LeafSpec((e, hp * d), ("embed", "heads")),
+        "wk": LeafSpec((e, kv * d), ("embed", "kv_heads")),
+        "wv": LeafSpec((e, kv * d), ("embed", "kv_heads")),
+        "wo": LeafSpec((hp * d, e), ("heads", "embed")),
+        "pre_norm": rmsnorm_spec(e)["scale"],
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    d = cfg.resolved_head_dim()
+    hp, kv = padded_heads(cfg), cfg.n_kv_heads
+    b, s, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, hp, d)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, kv, d)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, kv, d)
+    return q, k, v
+
+
+def _q_to_kv_map(cfg: ModelConfig) -> jax.Array:
+    """Real heads keep the true h // (n_heads//kv) grouping; padded heads
+    map to kv-head 0 (their output is masked to zero anyway)."""
+    hp, h, kv = padded_heads(cfg), cfg.n_heads, cfg.n_kv_heads
+    group = max(h // kv, 1)
+    m = [min(i // group, kv - 1) if i < h else 0 for i in range(hp)]
+    return jnp.asarray(m, jnp.int32)
+
+
+def _head_mask(cfg: ModelConfig) -> Optional[jax.Array]:
+    hp, h = padded_heads(cfg), cfg.n_heads
+    if hp == h:
+        return None
+    return (jnp.arange(hp) < h).astype(jnp.float32)[None, None, :, None]
+
+
+def grouped_kv_ok(cfg: ModelConfig) -> bool:
+    """Grouped (unexpanded-KV) attention applies when q-heads are unpadded
+    and divide evenly into kv groups — every assigned arch except phi4."""
+    return (
+        cfg.attn_kv_mode == "grouped"
+        and padded_heads(cfg) == cfg.n_heads
+        and cfg.n_heads % cfg.n_kv_heads == 0
+    )
+
+
+def _attend_grouped(q, k, v, mask, softcap: float) -> jax.Array:
+    """q: (b,sq,h,d) with h = kv*g; k,v UNEXPANDED (b,sk,kv,d);
+    mask: (b,1,sq,sk).  Avoids materializing the per-q-head KV copies the
+    gather path creates (which GSPMD reshards expensively for decode)."""
+    with jax.named_scope("attn_core"):
+        b, sq, h, d = q.shape
+        kv = k.shape[2]
+        g = h // kv
+        qg = q.reshape(b, sq, kv, g, d)
+        scores = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(d)
+        if softcap > 0.0:
+            scores = jnp.tanh(scores / softcap) * softcap
+        scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bcgqk,bkcd->bqcgd", probs, v)
+        return out.reshape(b, sq, h, d)
+
+
+def _attend(q, k, v, mask, softcap: float) -> jax.Array:
+    """q: (b,sq,h,d)  k,v: (b,skv,h,d)  mask: (b|1, 1|h, sq, skv) bool.
+
+    Wrapped in a named scope so hlo_analysis can attribute the O(S^2)
+    score/softmax HBM traffic to attention (the flash-kernel §Perf variant
+    substitutes this bucket with the Pallas kernel's analytic traffic)."""
+    with jax.named_scope("attn_core"):
+        d = q.shape[-1]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(d)
+        if softcap > 0.0:
+            scores = jnp.tanh(scores / softcap) * softcap
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attn_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    local: bool = False,
+    theta: Optional[float] = None,
+    q_chunk: int = 0,
+    want_cache_len: int = 0,
+) -> Any:
+    """Full-sequence attention (train / prefill).  x: (B,S,E).
+
+    want_cache_len > 0 (prefill): also return this layer's KV cache (k/v
+    computed once, trailing window kept for local layers)."""
+    h = rmsnorm({"scale": p["pre_norm"]}, x, cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg)
+    th = theta if theta is not None else cfg.rope_theta
+    q = rope(q, positions, th)
+    k = rope(k, positions, th)
+    grouped = grouped_kv_ok(cfg)
+    if grouped:
+        kq, vq = k, v  # unexpanded; grouped einsum handles the q->kv map
+        attend = _attend_grouped
+    else:
+        kmap = _q_to_kv_map(cfg)
+        kq = k[:, :, kmap, :]  # (B,S,Hp,D) — per-q-head KV gather
+        vq = v[:, :, kmap, :]
+        attend = _attend
+    s = x.shape[1]
+    qpos = positions[:, :, None]  # (B,S,1)
+    kpos = positions[:, None, :]  # (B,1,S)
+    if cfg.causal:
+        base = kpos <= qpos
+    else:
+        base = jnp.ones((1, s, s), dtype=bool)
+    if local and cfg.sliding_window:
+        base = base & (kpos > qpos - cfg.sliding_window)
+    mask = base[:, None, :, :]  # (B,1,S,S)
+
+    if q_chunk and s % q_chunk == 0 and s > q_chunk:
+        # flash-style query chunking: peak score memory S*q_chunk, not S^2
+        nb = s // q_chunk
+        b = x.shape[0]
+        qc = jnp.moveaxis(q.reshape(b, nb, q_chunk, *q.shape[2:]), 1, 0)
+        mfull = jnp.broadcast_to(mask, (b,) + mask.shape[1:])
+        mc = jnp.moveaxis(mfull.reshape(b, 1, nb, q_chunk, s), 2, 0)
+
+        def body(_, inp):
+            qi, mi = inp
+            return None, attend(qi, kq, vq, mi, cfg.attn_logit_softcap)
+
+        _, out = jax.lax.scan(body, None, (qc, mc))
+        out = jnp.moveaxis(out, 0, 1).reshape(q.shape)
+    else:
+        out = attend(q, kq, vq, mask, cfg.attn_logit_softcap)
+
+    hm = _head_mask(cfg)
+    if hm is not None:
+        out = out * hm.astype(out.dtype)
+    b, s_, hp, d = out.shape
+    y = x + out.reshape(b, s_, hp * d) @ p["wo"].astype(x.dtype)
+    if not want_cache_len:
+        return y
+    # prefill: keep (a window of) the already-rotated K plus V as this
+    # layer's cache, padded to the cache length.  Local layers use rolling
+    # slots (slot = pos % window), so the kept window is scattered to its
+    # residue slots — decode's writes then land consistently.
+    cache_len = want_cache_len
+    if local and cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    if s >= cache_len:
+        ck, cv = k[:, -cache_len:], v[:, -cache_len:]
+        kpos = positions[:, -cache_len:]
+        if local and cfg.sliding_window:
+            assert cache_len == cfg.sliding_window, (cache_len, cfg.sliding_window)
+            slots = (jnp.arange(s - cache_len, s, dtype=jnp.int32)
+                     % cfg.sliding_window)
+            ck = jnp.zeros_like(ck).at[:, slots].set(ck)
+            cv = jnp.zeros_like(cv).at[:, slots].set(cv)
+            kpos = jnp.full_like(kpos, -1).at[:, slots].set(kpos)
+    else:
+        pad = cache_len - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    return y, {"k": ck, "v": cv, "pos": kpos}
+
+
+def attn_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    pos: jax.Array,
+    local: bool = False,
+    theta: Optional[float] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode.  x: (B,1,E); cache k/v: (B,C,KV,D), pos: (B,) int32.
+
+    Full layers: C = max context, slot = pos.  Local layers: C = window,
+    rolling slot = pos % window.  Cached k are stored already-rotated.
+    """
+    hnorm = rmsnorm({"scale": p["pre_norm"]}, x, cfg.norm_eps)
+    q, k, v = _qkv(p, hnorm, cfg)
+    th = theta if theta is not None else cfg.rope_theta
+    q = rope(q, pos[:, None], th)
+    k = rope(k, pos[:, None], th)
+
+    C = cache["k"].shape[1]
+    if local and cfg.sliding_window:
+        slot = pos % cfg.sliding_window  # rolling window
+    else:
+        slot = pos
+    slot = jnp.minimum(slot, C - 1)
+    bidx = jnp.arange(x.shape[0])
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+    new_pos = cache["pos"].at[bidx, slot].set(pos)
+
+    grouped = grouped_kv_ok(cfg)
+    if grouped:
+        kq, vq = new_k, new_v
+        attend = _attend_grouped
+    else:
+        kmap = _q_to_kv_map(cfg)
+        kq = new_k[:, :, kmap, :]
+        vq = new_v[:, :, kmap, :]
+        attend = _attend
+    valid = (new_pos >= 0) & (new_pos <= pos[:, None])
+    if local and cfg.sliding_window:
+        valid = valid & (new_pos > (pos[:, None] - cfg.sliding_window))
+    mask = valid[:, None, None, :]  # (B,1,1,C)
+    out = attend(q, kq, vq, mask, cfg.attn_logit_softcap)
+    hm = _head_mask(cfg)
+    if hm is not None:
+        out = out * hm.astype(out.dtype)
+    b, s_, hp, d = out.shape
+    y = out.reshape(b, s_, hp * d) @ p["wo"].astype(x.dtype)
+    return x + y, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, local: bool, dtype) -> Dict[str, Any]:
+    C = min(cache_len, cfg.sliding_window) if (local and cfg.sliding_window) else cache_len
+    kv, d = cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {
+        "k": jax.ShapeDtypeStruct((batch, C, kv, d), dtype),
+        "v": jax.ShapeDtypeStruct((batch, C, kv, d), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, C), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, LeafSpec]:
+    e, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "wu": LeafSpec((e, f), ("embed", "mlp")),
+        "wd": LeafSpec((f, e), ("mlp", "embed")),
+        "pre_norm": rmsnorm_spec(e)["scale"],
+    }
+    if cfg.act == "swiglu":
+        s["wg"] = LeafSpec((e, f), ("embed", "mlp"))
+    return s
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rmsnorm({"scale": p["pre_norm"]}, x, cfg.norm_eps)
+    u = h @ p["wu"].astype(x.dtype)
+    if cfg.act == "swiglu":
+        u = jax.nn.silu(h @ p["wg"].astype(x.dtype)) * u
+    else:
+        u = jax.nn.gelu(u)
+    return x + u @ p["wd"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(cfg: ModelConfig) -> Dict[str, LeafSpec]:
+    s = {"tokens": LeafSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+    if cfg.frontend == "vision":
+        s["patch_proj"] = LeafSpec((cfg.d_model, cfg.d_model), ("embed", None))
+    if cfg.frontend == "audio":
+        s["frame_proj"] = LeafSpec((cfg.d_model, cfg.d_model), ("embed", None))
+    return s
+
+
+def unembed_spec(cfg: ModelConfig) -> Dict[str, LeafSpec]:
+    if cfg.tie_embeddings:
+        return {}
+    return {"out": LeafSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))}
+
+
+def logits_fn(params: Dict[str, Any], h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["tokens"].astype(h.dtype).T
+    else:
+        w = params["unembed"]["out"].astype(h.dtype)
+    return h @ w

@@ -1,0 +1,427 @@
+"""Unified LM assembly: param specs, forward, prefill, decode, loss.
+
+A model is a sequence of *segments* from cfg.layer_plan(); homogeneous runs
+are stacked and lax.scan'ed (small HLO, fast SPMD compile), heterogeneous
+patterns (gemma3 local/global, zamba2 mamba/shared-attn, xlstm m/s) become
+alternating segments.  zamba2's shared transformer block is stored ONCE in
+params["shared"] and referenced by every shared_attn segment.
+
+Modes:
+  forward(..., labels)        -> scalar loss (train)
+  prefill(...)                -> (logits_last, caches)
+  decode_step(...)            -> (logits, caches')
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+from .spec import LeafSpec, param_count, stacked
+
+Constrain = Callable[[jax.Array, str], jax.Array]
+_id_constrain: Constrain = lambda x, kind: x
+
+LOCAL_ROPE_THETA = 10000.0  # gemma3: local layers keep the short-context theta
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _segment_spec(kind: str, cfg: ModelConfig) -> Dict[str, Any]:
+    if kind in ("attn", "attn_local"):
+        return {"attn": L.attn_spec(cfg), "mlp": L.mlp_spec(cfg)}
+    if kind == "moe":
+        return {"attn": L.attn_spec(cfg), "moe": M.moe_spec(cfg)}
+    if kind == "mamba":
+        return S.mamba_spec(cfg)
+    if kind == "mlstm":
+        return X.mlstm_spec(cfg)
+    if kind == "slstm":
+        return X.slstm_spec(cfg)
+    raise ValueError(kind)
+
+
+def param_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    plan = cfg.layer_plan()
+    segs: List[Any] = []
+    has_shared = False
+    for kind, count in plan:
+        if kind == "shared_attn":
+            has_shared = True
+            segs.append({})  # placeholder; weights live in ["shared"]
+            continue
+        s = _segment_spec(kind, cfg)
+        segs.append(stacked(s, count) if count > 1 else s)
+    spec: Dict[str, Any] = {
+        "embed": L.embed_spec(cfg),
+        "segments": segs,
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+        "unembed": L.unembed_spec(cfg),
+    }
+    if has_shared:
+        spec["shared"] = {"attn": L.attn_spec(cfg), "mlp": L.mlp_spec(cfg)}
+    return spec
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return param_count(param_spec(cfg))
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts expert params)."""
+    total = n_params(cfg)
+    if cfg.n_experts and cfg.moe_top_k:
+        per_expert = cfg.d_model * cfg.d_ff * (3 if cfg.act == "swiglu" else 2)
+        inactive = (cfg.n_experts - cfg.moe_top_k) * per_expert
+        total -= inactive * len([1 for k, c in cfg.layer_plan() if k == "moe" for _ in range(c)])
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Segment application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    kind: str,
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    q_chunk: int,
+    want_cache_len: int,
+    constrain: Constrain,
+) -> Tuple[jax.Array, jax.Array, Any]:
+    """Returns (x, aux_loss, cache_or_None) for one layer."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("attn", "attn_local", "shared_attn"):
+        local = kind == "attn_local"
+        theta = LOCAL_ROPE_THETA if local else cfg.rope_theta
+        r = L.attn_apply(
+            p["attn"], x, cfg, positions, local=local, theta=theta,
+            q_chunk=q_chunk, want_cache_len=want_cache_len,
+        )
+        x, cache = r if want_cache_len else (r, None)
+        x = constrain(x, "act")
+        x = L.mlp_apply(p["mlp"], x, cfg)
+    elif kind == "moe":
+        r = L.attn_apply(
+            p["attn"], x, cfg, positions, q_chunk=q_chunk,
+            want_cache_len=want_cache_len,
+        )
+        x, cache = r if want_cache_len else (r, None)
+        x = constrain(x, "act")
+        x, aux = M.moe_apply(p["moe"], x, cfg, constrain=constrain)
+    elif kind == "mamba":
+        r = S.mamba_apply(p, x, cfg, want_state=bool(want_cache_len))
+        x, cache = r if want_cache_len else (r, None)
+    elif kind == "mlstm":
+        r = X.mlstm_apply(p, x, cfg, want_state=bool(want_cache_len))
+        x, cache = r if want_cache_len else (r, None)
+    elif kind == "slstm":
+        r = X.slstm_apply(p, x, cfg, want_state=bool(want_cache_len))
+        x, cache = r if want_cache_len else (r, None)
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "act")
+    return x, aux, cache
+
+
+def _run_segments(
+    params: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    q_chunk: int = 0,
+    want_cache_len: int = 0,
+    constrain: Constrain = _id_constrain,
+) -> Tuple[jax.Array, jax.Array, List[Any]]:
+    plan = cfg.layer_plan()
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: List[Any] = []
+    for si, (kind, count) in enumerate(plan):
+        p_seg = params["shared"] if kind == "shared_attn" else params["segments"][si]
+        if count == 1 or kind == "shared_attn":
+            for _ in range(count):
+                x, aux, cache = _apply_block(
+                    kind, p_seg, x, cfg, positions, q_chunk, want_cache_len, constrain
+                )
+                aux_total = aux_total + aux
+                caches.append(cache)
+        else:
+
+            def body(carry, layer_params, _kind=kind):
+                xc, auxc = carry
+                xo, aux, cache = _apply_block(
+                    _kind, layer_params, xc, cfg, positions, q_chunk,
+                    want_cache_len, constrain,
+                )
+                return (xo, auxc + aux), cache
+
+            if cfg.remat == "block":
+                body = jax.checkpoint(body)
+            (x, aux_total), seg_caches = jax.lax.scan(body, (x, aux_total), p_seg)
+            caches.append(seg_caches)
+    return x, aux_total, caches
+
+
+# ---------------------------------------------------------------------------
+# Embedding of model inputs
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig, dtype) -> jax.Array:
+    emb = params["embed"]
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(dtype) @ emb["frame_proj"].astype(dtype)
+    x = jnp.take(emb["tokens"].astype(dtype), batch["tokens"], axis=0)
+    if cfg.frontend == "vision" and "patches" in batch:
+        pe = batch["patches"].astype(dtype) @ emb["patch_proj"].astype(dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Loss (train) — optionally chunked over the sequence to avoid materializing
+# the full (B,S,V) logits (a §Perf memory lever).
+# ---------------------------------------------------------------------------
+
+
+def _ce(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # mode="clip": out-of-vocab labels must not poison the loss with the
+    # default fill=NaN gather semantics (they are masked upstream anyway)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1, mode="clip")[..., 0]
+    ce = (lse - gold) * mask
+    return jnp.sum(ce), jnp.sum(mask)
+
+
+def loss_fn(
+    params,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    q_chunk: int = 0,
+    loss_chunk: int = 0,
+    aux_weight: float = 0.01,
+    constrain: Constrain = _id_constrain,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_inputs(params, batch, cfg, dtype)
+    x = constrain(x, "act")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux, _ = _run_segments(
+        params, x, cfg, positions, q_chunk=q_chunk, constrain=constrain
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    if cfg.frontend == "vision":
+        x = x[:, -labels.shape[1] :, :]  # loss only over text positions
+
+    if loss_chunk and s % loss_chunk == 0 and labels.shape[1] == x.shape[1]:
+        nb = x.shape[1] // loss_chunk
+
+        def body(carry, inp):
+            xs, ls, ms = inp
+            lg = constrain(L.logits_fn(params, xs, cfg), "logits")
+            tot, cnt = _ce(lg, ls, ms)
+            return (carry[0] + tot, carry[1] + cnt), None
+
+        r = lambda t: jnp.moveaxis(
+            t.reshape(t.shape[0], nb, loss_chunk, *t.shape[2:]), 1, 0
+        )
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (r(x), r(labels), r(mask)),
+        )
+    else:
+        logits = constrain(L.logits_fn(params, x, cfg), "logits")
+        tot, cnt = _ce(logits, labels, mask)
+
+    ce = tot / jnp.maximum(cnt, 1.0)
+    total = ce + aux_weight * aux
+    return total, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    cache_len: int,
+    q_chunk: int = 0,
+    constrain: Constrain = _id_constrain,
+) -> Tuple[jax.Array, List[Any]]:
+    """Full forward building KV caches; returns (last-position logits, caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_inputs(params, batch, cfg, dtype)
+    x = constrain(x, "act")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _, caches = _run_segments(
+        params, x, cfg, positions, q_chunk=q_chunk,
+        want_cache_len=cache_len, constrain=constrain,
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = constrain(L.logits_fn(params, x[:, -1:, :], cfg), "logits")
+    return logits, caches
+
+
+def _decode_block(kind, p, x, cache, cfg, pos):
+    if kind in ("attn", "attn_local", "shared_attn", "moe"):
+        local = kind == "attn_local"
+        theta = LOCAL_ROPE_THETA if local else cfg.rope_theta
+        x, new_cache = L.attn_decode(p["attn"], x, cache, cfg, pos, local=local, theta=theta)
+        if kind == "moe":
+            x, _ = M.moe_apply(p["moe"], x, cfg)
+        else:
+            x = L.mlp_apply(p["mlp"], x, cfg)
+        return x, new_cache
+    if kind == "mamba":
+        return S.mamba_decode(p, x, cache, cfg)
+    if kind == "mlstm":
+        return X.mlstm_decode(p, x, cache, cfg)
+    if kind == "slstm":
+        return X.slstm_decode(p, x, cache, cfg)
+    raise ValueError(kind)
+
+
+def decode_step(
+    params,
+    caches: List[Any],
+    tokens: jax.Array,  # (B,1) int32
+    pos: jax.Array,  # (B,) int32 current absolute position
+    cfg: ModelConfig,
+    constrain: Constrain = _id_constrain,
+) -> Tuple[jax.Array, List[Any]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"]["tokens"].astype(dtype), tokens, axis=0)
+    plan = cfg.layer_plan()
+    new_caches: List[Any] = []
+    for si, (kind, count) in enumerate(plan):
+        p_seg = params["shared"] if kind == "shared_attn" else params["segments"][si]
+        cache_seg = caches[si]
+        if count == 1 or kind == "shared_attn":
+            x, nc = _decode_block(kind, p_seg, x, cache_seg, cfg, pos)
+            new_caches.append(nc)
+        else:
+
+            def body(xc, inp, _kind=kind):
+                lp, lc = inp
+                xo, nc = _decode_block(_kind, lp, xc, lc, cfg, pos)
+                return xo, nc
+
+            x, nc = jax.lax.scan(body, x, (p_seg, cache_seg))
+            new_caches.append(nc)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = constrain(L.logits_fn(params, x, cfg), "logits")
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (abstract, for dry-run + serving allocation)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> List[Any]:
+    """Concrete empty caches: states zeroed, KV positions -1 (= invalid;
+    zero-initialized positions would mark position 0 as attendable)."""
+    def one(path_key, s):
+        if path_key == "pos":
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    out = []
+    for seg in cache_spec(cfg, batch, cache_len):
+        out.append({k: one(k, v) for k, v in seg.items()})
+    return out
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int) -> List[Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    out: List[Any] = []
+    for kind, count in cfg.layer_plan():
+        if kind in ("attn", "attn_local", "shared_attn", "moe"):
+            one = L.attn_cache_spec(cfg, batch, cache_len, kind == "attn_local", dtype)
+        elif kind == "mamba":
+            one = S.mamba_cache_spec(cfg, batch, dtype)
+        elif kind == "mlstm":
+            one = X.mlstm_cache_spec(cfg, batch, dtype)
+        elif kind == "slstm":
+            one = X.slstm_cache_spec(cfg, batch, dtype)
+        else:
+            raise ValueError(kind)
+        if count > 1 and kind != "shared_attn":
+            one = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype), one
+            )
+        out.append(one)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input_specs: abstract model inputs for every (cfg, shape) cell
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+            }
+        if cfg.frontend == "vision":
+            st = s - cfg.n_patches
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, st), i32),
+                "loss_mask": jax.ShapeDtypeStruct((b, st), jnp.float32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+            "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+    if shape.kind == "prefill":
+        if cfg.frontend == "audio":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        if cfg.frontend == "vision":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s - cfg.n_patches), i32),
+                "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a cache of seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+        "caches": cache_spec(cfg, b, s),
+    }

@@ -1,0 +1,271 @@
+"""Mixture-of-Experts block (olmoe 64e/top-8, dbrx 16e/top-4).
+
+Dropless, sort-based dispatch with `jax.lax.ragged_dot` grouped GEMM:
+tokens are sorted by expert id, each expert computes its contiguous slice.
+FLOPs are the *active* FLOPs (T x top_k x d x ff), not n_experts x — this is
+what makes MODEL_FLOPS = 6 * N_active * D meaningful in the roofline.
+
+Sharding: expert weights carry ("experts", "embed", "mlp") logical axes.
+  * TP-in-expert (baseline): mlp -> model axis, experts replicated.
+  * EP          (variant)  : experts -> model axis (see distributed/moe_ep.py
+    for the shard_map all_to_all path used in hillclimbing).
+  * dbrx adds   : mlp -> data for FSDP-style storage of the 130B params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import rmsnorm, rmsnorm_spec
+from .spec import LeafSpec
+
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, LeafSpec]:
+    e, f, ne = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": LeafSpec((e, ne), ("embed", None)),
+        "wg": LeafSpec((ne, e, f), ("experts", "embed", "mlp")),
+        "wu": LeafSpec((ne, e, f), ("experts", "embed", "mlp")),
+        "wd": LeafSpec((ne, f, e), ("experts", "mlp", "embed")),
+        "pre_norm": rmsnorm_spec(e)["scale"],
+    }
+
+
+def _route(p, x, cfg: ModelConfig):
+    """Shared router: returns (flat, gate, expert_idx, aux)."""
+    b, s, e = x.shape
+    k, ne = cfg.moe_top_k, cfg.n_experts
+    h = rmsnorm({"scale": p["pre_norm"]}, x, cfg.norm_eps)
+    flat = h.reshape(b * s, e)
+    router_logits = (flat @ p["router"].astype(flat.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (T, ne)
+    gate, expert_idx = jax.lax.top_k(probs, k)  # (T,k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx, ne, dtype=jnp.float32).sum(axis=1), axis=0
+    )
+    aux = ne * jnp.sum(density * jnp.mean(probs, axis=0)) / k
+    return flat, gate, expert_idx, aux
+
+
+def moe_apply(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig, constrain=None
+) -> Tuple[jax.Array, jax.Array]:
+    impl = getattr(cfg, "moe_impl", "ragged")
+    if impl == "capacity_ep" and getattr(constrain, "mesh", None) is not None:
+        return moe_apply_capacity_ep(p, x, cfg, constrain)
+    if impl in ("capacity", "capacity_ep"):
+        return moe_apply_capacity(p, x, cfg, constrain=constrain)
+    return moe_apply_ragged(p, x, cfg)
+
+
+def moe_apply_ragged(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,E) -> (y, aux_loss).  Dropless top-k via ragged_dot.
+
+    NOTE (§Perf): on TPU ragged_dot is a native grouped GEMM; XLA:CPU's
+    fallback lowering densifies it (observed E-fold FLOPs + huge temps in
+    the dry-run HLO), which is why `capacity` is the optimized variant.
+    """
+    b, s, e = x.shape
+    k, ne = cfg.moe_top_k, cfg.n_experts
+    flat, gate, expert_idx, aux = _route(p, x, cfg)
+    t = flat.shape[0]
+
+    # sort token-slots by expert so each expert sees a contiguous run
+    flat_expert = expert_idx.reshape(t * k)
+    order = jnp.argsort(flat_expert)  # (T*k,)
+    token_of_slot = order // k
+    xs = flat[token_of_slot]  # (T*k, E) gathered, sorted by expert
+    group_sizes = jnp.bincount(flat_expert, length=ne)
+
+    dt = flat.dtype
+    up = jax.lax.ragged_dot(xs, p["wu"].astype(dt), group_sizes)
+    if cfg.act == "swiglu":
+        gact = jax.nn.silu(jax.lax.ragged_dot(xs, p["wg"].astype(dt), group_sizes))
+        inner = gact * up
+    else:
+        inner = jax.nn.gelu(up)
+    out_sorted = jax.lax.ragged_dot(inner, p["wd"].astype(dt), group_sizes)  # (T*k,E)
+
+    # unsort and combine with gates
+    inv = jnp.argsort(order)
+    out_slots = out_sorted[inv].reshape(t, k, e)
+    y = jnp.einsum("tke,tk->te", out_slots, gate.astype(dt))
+    return x + y.reshape(b, s, e), aux
+
+
+def moe_apply_capacity(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ModelConfig,
+    capacity_factor: float = 1.25,
+    constrain=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based dispatch: sort by expert, keep the first
+    cap = T*k/ne * cf slots per expert (overflow dropped — the aux loss
+    keeps routing balanced), batched (ne, cap, d) x (ne, d, f) einsums.
+
+    FLOPs are exactly ne*cap*d*f ~= active FLOPs * cf, the dispatch buffers
+    are O(ne*cap*d), and the expert axis is shardable (EP) with a sharding
+    constraint — the three properties the ragged path lost on this backend.
+    """
+    b, s, e = x.shape
+    k, ne = cfg.moe_top_k, cfg.n_experts
+    flat, gate, expert_idx, aux = _route(p, x, cfg)
+    t = flat.shape[0]
+    cap = int((t * k / ne) * capacity_factor + 0.999)
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    flat_expert = expert_idx.reshape(t * k)
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    counts = jnp.bincount(flat_expert, length=ne)
+    starts = jnp.cumsum(counts) - counts  # first slot of each expert run
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_expert]
+    valid = pos < cap
+    dst = jnp.where(valid, sorted_expert * cap + pos, ne * cap)  # drops -> spill row
+
+    dt = flat.dtype
+    xs = flat[order // k]  # (T*k, E) sorted by expert
+    buf = jnp.zeros((ne * cap + 1, e), dt).at[dst].set(xs)[:-1]
+    buf = buf.reshape(ne, cap, e)
+    if constrain is not None:
+        buf = constrain(buf, "moe_dispatch")
+
+    up = jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(dt))
+    if cfg.act == "swiglu":
+        inner = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dt))) * up
+    else:
+        inner = jax.nn.gelu(up)
+    out_buf = jnp.einsum("ecf,efd->ecd", inner, p["wd"].astype(dt))
+    if constrain is not None:
+        out_buf = constrain(out_buf, "moe_dispatch")
+    out_flat = out_buf.reshape(ne * cap, e)
+
+    # gather back per token-slot (dropped slots contribute zero), unsort
+    safe = jnp.minimum(dst, ne * cap - 1)
+    vals = out_flat[safe] * valid[:, None].astype(dt)
+    inv = jnp.argsort(order)
+    out_slots = vals[inv].reshape(t, k, e)
+    y = jnp.einsum("tke,tk->te", out_slots, gate.astype(dt))
+    return x + y.reshape(b, s, e), aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit-SPMD EP (§Perf iteration 3 for the MoE cells)
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn(buf, wg, wu, wd, act):
+    up = jnp.einsum("ecd,edf->ecf", buf, wu)
+    if act == "swiglu":
+        inner = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * up
+    else:
+        inner = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", inner, wd)
+
+
+def moe_apply_capacity_ep(p, x, cfg: ModelConfig, constrain) -> Tuple[jax.Array, jax.Array]:
+    """Expert parallelism via shard_map — no GSPMD guessing.
+
+    Key fact exploited: activations are replicated over the `model` axis in
+    this framework's sharding (batch shards over pod/data only).  So each
+    model rank already holds every local token: it routes + dispatches for
+    ITS OWN E/tp experts entirely locally, and the combine is ONE psum of
+    (T_local, d) over `model` — the same volume as a single TP all-reduce,
+    instead of GSPMD's repeated full-buffer reshards.
+
+    If the expert ff dim is additionally storage-sharded over `data` (the
+    132B dbrx config), weights are all-gathered over `data` ONCE per call —
+    the FSDP gather made explicit, paid exactly once per layer per pass.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = constrain.mesh
+    rules = constrain.rules
+    assert "model" in mesh.axis_names
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    ne, k = cfg.n_experts, cfg.moe_top_k
+    assert ne % tp == 0, (ne, tp)
+    ne_loc = ne // tp
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    mlp_rule = rules.get("mlp")
+    mlp_data = mlp_rule == "data" or (isinstance(mlp_rule, tuple) and "data" in mlp_rule)
+    f_spec = "data" if (mlp_data and cfg.d_ff % dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1) == 0) else None
+
+    b, s, e = x.shape
+    x_spec = P(batch_axes, None, None)
+    w_e = P("model", None, f_spec)
+    w_d = P("model", f_spec, None)
+
+    def local(xl, router, wg, wu, wd, pre_norm):
+        # xl: (B_loc, S, E) — every model rank sees the same local tokens
+        bl, sl, el = xl.shape
+        h = rmsnorm({"scale": pre_norm}, xl, cfg.norm_eps)
+        flat = h.reshape(bl * sl, el)
+        t = flat.shape[0]
+        logits = (flat @ router.astype(flat.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, expert_idx = jax.lax.top_k(probs, k)
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+        density = jnp.mean(jax.nn.one_hot(expert_idx, ne, dtype=jnp.float32).sum(1), 0)
+        aux = ne * jnp.sum(density * jnp.mean(probs, 0)) / k
+
+        dt0 = flat.dtype
+        wg, wu, wd = wg.astype(dt0), wu.astype(dt0), wd.astype(dt0)
+        if mlp_data and f_spec is not None:
+            # cast BEFORE gathering: the fp32 master stays sharded; only the
+            # bf16 compute copy crosses the data axis (half the bytes)
+            wg = jax.lax.all_gather(wg, "data", axis=2, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=2, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=1, tiled=True)
+
+        rank = jax.lax.axis_index("model")
+        lo = rank * ne_loc
+        # keep only slots routed to this rank's experts
+        flat_expert = expert_idx.reshape(t * k)
+        mine = (flat_expert >= lo) & (flat_expert < lo + ne_loc)
+        local_expert = jnp.where(mine, flat_expert - lo, ne_loc)  # ne_loc = spill
+        order = jnp.argsort(local_expert)
+        sorted_e = local_expert[order]
+        counts = jnp.bincount(local_expert, length=ne_loc + 1)[:ne_loc]
+        starts = jnp.cumsum(counts) - counts
+        cap = int((t * k / ne) * 1.25 + 0.999)
+        cap = max(8, ((cap + 7) // 8) * 8)
+        safe_e = jnp.minimum(sorted_e, ne_loc - 1)
+        pos = jnp.arange(t * k, dtype=jnp.int32) - starts[safe_e]
+        valid = (sorted_e < ne_loc) & (pos < cap)
+        dst = jnp.where(valid, safe_e * cap + pos, ne_loc * cap)
+        dt = flat.dtype
+        xs = flat[order // k]
+        buf = jnp.zeros((ne_loc * cap + 1, el), dt).at[dst].set(xs)[:-1]
+        out_buf = _expert_ffn(buf.reshape(ne_loc, cap, el), wg, wu, wd, cfg.act)
+        out_flat = out_buf.reshape(ne_loc * cap, el)
+        safe = jnp.minimum(dst, ne_loc * cap - 1)
+        vals = out_flat[safe] * valid[:, None].astype(dt)
+        inv = jnp.argsort(order)
+        out_slots = vals[inv].reshape(t, k, el)
+        y = jnp.einsum("tke,tk->te", out_slots, gate.astype(dt))
+        # combine across expert owners: each token's k experts live on
+        # specific ranks; partial sums add up exactly once per expert.
+        y = jax.lax.psum(y, "model")
+        # aux is identical across model ranks (replicated inputs); average
+        # over the batch shards so the scalar is globally consistent.
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return xl + y.reshape(bl, sl, el), aux
+
+    f = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_e, w_e, w_d, P(None)),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    return f(x, p["router"], p["wg"], p["wu"], p["wd"], p["pre_norm"])

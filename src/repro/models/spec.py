@@ -1,0 +1,110 @@
+"""Parameter specs: shapes + logical sharding axes declared together.
+
+A model is described once as a tree of LeafSpec; from it we derive
+  * initialized parameters            (init_params)
+  * abstract ShapeDtypeStructs        (abstract_params — dry-run, no alloc)
+  * PartitionSpecs under axis rules   (partition_specs)
+
+Logical axes (mapped to mesh axes by distributed/sharding.py rules):
+  vocab, embed, mlp, heads (fused n_heads*head_dim), kv_heads, experts,
+  ssm_inner, state, layers (stacked scan axis), frontend
+Rule values may be a mesh axis name, a tuple of names, or None.  A rule that
+does not divide the dimension falls back to replication for that dim — this
+is how e.g. kv_heads=8 on a 16-way model axis degrades safely.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Rules = Dict[str, Union[str, Tuple[str, ...], None]]
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02  # stddev for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x: Any) -> bool:
+    return isinstance(x, LeafSpec)
+
+
+def _map(spec_tree: Any, fn) -> Any:
+    return jax.tree.map(fn, spec_tree, is_leaf=is_leaf)
+
+
+def init_params(spec_tree: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_leaf)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(leaf: LeafSpec, k):
+        if leaf.init == "zeros":
+            return jnp.zeros(leaf.shape, dtype)
+        if leaf.init == "ones":
+            return jnp.ones(leaf.shape, dtype)
+        return (jax.random.normal(k, leaf.shape, jnp.float32) * leaf.scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(l, k) for l, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree: Any, dtype=jnp.float32) -> Any:
+    return _map(spec_tree, lambda l: jax.ShapeDtypeStruct(l.shape, dtype))
+
+
+def _axis_size(rule: Union[str, Tuple[str, ...]], sizes: Dict[str, int]) -> int:
+    if isinstance(rule, str):
+        return sizes.get(rule, 1)
+    return math.prod(sizes.get(r, 1) for r in rule)
+
+
+def leaf_pspec(leaf: LeafSpec, rules: Rules, sizes: Dict[str, int]) -> P:
+    parts = []
+    used: set = set()
+    for dim, ax in zip(leaf.shape, leaf.axes):
+        rule = rules.get(ax) if ax is not None else None
+        if rule is None:
+            parts.append(None)
+            continue
+        names = (rule,) if isinstance(rule, str) else tuple(rule)
+        # never reuse a mesh axis within one PartitionSpec
+        names = tuple(n for n in names if n not in used)
+        size = _axis_size(names, sizes)
+        if size <= 1 or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(names)
+        parts.append(names[0] if len(names) == 1 else names)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def partition_specs(spec_tree: Any, rules: Rules, sizes: Dict[str, int]) -> Any:
+    return _map(spec_tree, partial(leaf_pspec, rules=rules, sizes=sizes))
+
+
+def stacked(spec_tree: Any, n: int) -> Any:
+    """Prepend a `layers` axis to every leaf (for scanned segments)."""
+    return _map(
+        spec_tree,
+        lambda l: LeafSpec((n,) + l.shape, ("layers",) + l.axes, l.init, l.scale),
+    )
+
+
+def param_count(spec_tree: Any) -> int:
+    total = 0
+    for l in jax.tree.leaves(spec_tree, is_leaf=is_leaf):
+        total += math.prod(l.shape)
+    return total

@@ -1,0 +1,280 @@
+"""State-space / linear-attention machinery.
+
+`chunked_linear_recurrence` is the shared engine for Mamba2 (SSD) and mLSTM:
+
+    S_t = exp(g_t) * S_{t-1} + a_t * v_t k_t^T        # S: (B,H,P,N)
+    n_t = exp(g_t) * n_{t-1} + a_t * k_t              # optional normalizer
+    y_t = S_t q_t   [ / max(|n_t . q_t|, eps) ]
+
+computed chunkwise: quadratic attention-like math within a chunk of length
+L (masked decay matrix), lax.scan carrying (S, n) across chunks.  Memory is
+O(S*H*(P+N) + S/L * H*P*N) instead of the O(S*H*P*N) an associative scan
+would materialize.
+
+Mamba2 (SSD): q=C, k=B, v=x, g_t = dt_t*A (A<0), a_t = dt_t, no normalizer.
+mLSTM:        q=q/sqrt(N), k=k, v=v, g_t = log sigmoid(f_t), a_t = sigma(i_t),
+              with normalizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import rmsnorm, rmsnorm_spec
+from .spec import LeafSpec
+
+NEG_INF = -1e30
+
+
+def chunked_linear_recurrence(
+    q: jax.Array,  # (B,S,H,N)
+    k: jax.Array,  # (B,S,H,N)
+    v: jax.Array,  # (B,S,H,P)
+    log_g: jax.Array,  # (B,S,H) per-step log decay (<= 0)
+    a: jax.Array,  # (B,S,H) input scale
+    normalize: bool = False,
+    chunk: int = 256,
+    init_state: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (y (B,S,H,P), (S_final (B,H,P,N), n_final (B,H,N)))."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, f"seq {s} not divisible by chunk {L}"
+    nc = s // L
+    f32 = jnp.float32
+
+    def r(x):  # (B,S,...) -> (nc, B, L, ...)
+        return jnp.moveaxis(x.reshape(b, nc, L, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc = r(q), r(k), r(v)
+    gc, ac = r(log_g).astype(f32), r(a).astype(f32)
+    cum = jnp.cumsum(gc, axis=2)  # (nc,B,L,H) inclusive cumsum of log decay
+    total = cum[:, :, -1, :]  # (nc,B,H)
+
+    if init_state is None:
+        S0 = jnp.zeros((b, h, p, n), f32)
+        n0 = jnp.zeros((b, h, n), f32)
+    else:
+        S0, n0 = init_state
+        S0, n0 = S0.astype(f32), n0.astype(f32)
+
+    # intra-chunk decay matrix D[i,j] = exp(cum_i - cum_j) for j<=i else 0
+    idx = jnp.arange(L)
+    tri = idx[:, None] >= idx[None, :]  # (L,L)
+
+    def body(carry, inp):
+        S, nrm = carry
+        qi, ki, vi, cumi, gi, ai, toti = inp  # qi: (B,L,H,N) ...
+        dt = qi.dtype
+        # ---- intra-chunk (quadratic in L)
+        att = jnp.einsum("blhn,bmhn->bhlm", qi.astype(f32), ki.astype(f32))
+        dec = jnp.where(
+            tri[None, None], jnp.exp(cumi.transpose(0, 2, 1)[:, :, :, None] - cumi.transpose(0, 2, 1)[:, :, None, :]), 0.0
+        )  # (B,H,L,M)
+        w = att * dec * ai.transpose(0, 2, 1)[:, :, None, :]  # scale column j by a_j
+        y_intra = jnp.einsum("bhlm,bmhp->blhp", w, vi.astype(f32))
+        # ---- inter-chunk: contribution of carried state
+        qdec = qi.astype(f32) * jnp.exp(cumi)[..., None]  # (B,L,H,N)
+        y_inter = jnp.einsum("blhn,bhpn->blhp", qdec, S)
+        y = y_intra + y_inter
+        if normalize:
+            nr = jnp.einsum("blhn,bhn->blh", qdec, nrm)  # carried normalizer
+            # intra normalizer: sum_{j<=i} exp(cum_i - cum_j) a_j (k_j . q_i)
+            # == row-sum of the already-computed w — reusing it avoids the
+            # (B,H,L,M,N) intermediate a 3-operand einsum materializes
+            # (§Perf: cut xlstm prefill HBM traffic ~30x)
+            nr_intra = jnp.einsum("bhlm->blh", w)
+            denom = jnp.maximum(jnp.abs(nr + nr_intra), 1.0)
+            y = y / denom[..., None]
+        # ---- state update
+        kscale = ai * jnp.exp(toti[:, None, :] - cumi)  # (B,L,H)
+        S_new = S * jnp.exp(toti)[:, :, None, None] + jnp.einsum(
+            "blhp,blhn->bhpn", vi.astype(f32) * kscale[..., None], ki.astype(f32)
+        )
+        if normalize:
+            n_new = nrm * jnp.exp(toti)[:, :, None] + jnp.einsum(
+                "blhn,blh->bhn", ki.astype(f32), kscale
+            )
+        else:
+            n_new = nrm
+        return (S_new, n_new), y.astype(dt)
+
+    (Sf, nf), ys = jax.lax.scan(
+        body, (S0, n0), (qc, kc, vc, cum, gc, ac, total)
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, (Sf, nf)
+
+
+def linear_recurrence_step(
+    q: jax.Array,  # (B,H,N)
+    k: jax.Array,
+    v: jax.Array,  # (B,H,P)
+    log_g: jax.Array,  # (B,H)
+    a: jax.Array,  # (B,H)
+    state: Tuple[jax.Array, jax.Array],  # S (B,H,P,N), n (B,H,N)
+    normalize: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single decode step of the same recurrence."""
+    S, nrm = state
+    f32 = jnp.float32
+    g = jnp.exp(log_g.astype(f32))[:, :, None, None]
+    S_new = S.astype(f32) * g + (
+        a.astype(f32)[:, :, None, None]
+        * v.astype(f32)[..., None]
+        * k.astype(f32)[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", S_new, q.astype(f32))
+    if normalize:
+        n_new = (
+            nrm.astype(f32) * jnp.exp(log_g.astype(f32))[..., None]
+            + a.astype(f32)[..., None] * k.astype(f32)
+        )
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhn,bhn->bh", n_new, q.astype(f32))), 1.0
+        )
+        y = y / denom[..., None]
+    else:
+        n_new = nrm
+    return y.astype(v.dtype), (S_new, n_new)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    return dict(
+        d_inner=d_inner,
+        heads=d_inner // hd,
+        head_dim=hd,
+        state=cfg.ssm_state,
+        conv_dim=d_inner + 2 * cfg.ssm_state,  # x + B + C share the conv
+        conv_w=cfg.conv_width,
+    )
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict[str, LeafSpec]:
+    e = cfg.d_model
+    d = mamba_dims(cfg)
+    di, h, n, cd, cw = d["d_inner"], d["heads"], d["state"], d["conv_dim"], d["conv_w"]
+    return {
+        "in_proj": LeafSpec((e, 2 * di + 2 * n + h), ("embed", "ssm_inner")),
+        "conv_w": LeafSpec((cw, cd), (None, "ssm_inner")),
+        "conv_b": LeafSpec((cd,), ("ssm_inner",), init="zeros"),
+        "A_log": LeafSpec((h,), (None,), init="zeros"),
+        "D": LeafSpec((h,), (None,), init="ones"),
+        "dt_bias": LeafSpec((h,), (None,), init="zeros"),
+        "out_norm": LeafSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": LeafSpec((di, e), ("ssm_inner", "embed")),
+        "pre_norm": rmsnorm_spec(e)["scale"],
+    }
+
+
+def _split_in_proj(z, cfg: ModelConfig):
+    d = mamba_dims(cfg)
+    di, h, n = d["d_inner"], d["heads"], d["state"]
+    gate = z[..., :di]
+    x = z[..., di : 2 * di]
+    B = z[..., 2 * di : 2 * di + n]
+    C = z[..., 2 * di + n : 2 * di + 2 * n]
+    dt = z[..., 2 * di + 2 * n :]
+    return gate, x, B, C, dt
+
+
+def mamba_apply(
+    p: Dict[str, jax.Array],
+    xres: jax.Array,
+    cfg: ModelConfig,
+    chunk: int = 256,
+    want_state: bool = False,
+) -> Any:
+    """Training/prefill forward.  xres: (B,S,E).
+    want_state: also return the decode cache {conv, ssm} at the final step."""
+    d = mamba_dims(cfg)
+    h = rmsnorm({"scale": p["pre_norm"]}, xres, cfg.norm_eps)
+    z = h @ p["in_proj"].astype(h.dtype)  # (B,S,2di+2n+h)
+    gate, x, B, C, dt = _split_in_proj(z, cfg)
+    # causal depthwise conv over (x,B,C)
+    xbc = jnp.concatenate([x, B, C], axis=-1)  # (B,S,cd)
+    cw = d["conv_w"]
+    pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + xbc.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+        for i in range(cw)
+    ) + p["conv_b"].astype(x.dtype)
+    conv = jax.nn.silu(conv)
+    x = conv[..., : d["d_inner"]]
+    B = conv[..., d["d_inner"] : d["d_inner"] + d["state"]]
+    C = conv[..., d["d_inner"] + d["state"] :]
+
+    bsz, s, _ = x.shape
+    H, P, N = d["heads"], d["head_dim"], d["state"]
+    xh = x.reshape(bsz, s, H, P)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,), negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    log_g = dt * A  # (B,S,H)
+    Bq = jnp.broadcast_to(B[:, :, None, :], (bsz, s, H, N))
+    Cq = jnp.broadcast_to(C[:, :, None, :], (bsz, s, H, N))
+    y, (S_final, _) = chunked_linear_recurrence(Cq, Bq, xh, log_g, dt, chunk=chunk)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d["d_inner"])
+    y = y * jax.nn.silu(gate)
+    y = rmsnorm({"scale": p["out_norm"]}, y, cfg.norm_eps)
+    out = xres + y @ p["out_proj"].astype(y.dtype)
+    if not want_state:
+        return out
+    cw = d["conv_w"]
+    return out, {"conv": xbc[:, -(cw - 1):, :], "ssm": S_final}
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    d = mamba_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, d["conv_w"] - 1, d["conv_dim"]), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, d["heads"], d["head_dim"], d["state"]), jnp.float32
+        ),
+    }
+
+
+def mamba_decode(
+    p: Dict[str, jax.Array],
+    xres: jax.Array,  # (B,1,E)
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    d = mamba_dims(cfg)
+    h = rmsnorm({"scale": p["pre_norm"]}, xres, cfg.norm_eps)
+    z = h @ p["in_proj"].astype(h.dtype)
+    gate, x, B, C, dt = _split_in_proj(z[:, 0], cfg)  # squeeze seq dim
+    xbc = jnp.concatenate([x, B, C], axis=-1)  # (B,cd)
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,cw,cd)
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv_cache = window[:, 1:, :]
+    x = conv[:, : d["d_inner"]]
+    B = conv[:, d["d_inner"] : d["d_inner"] + d["state"]]
+    C = conv[:, d["d_inner"] + d["state"] :]
+    bsz = x.shape[0]
+    H, P, N = d["heads"], d["head_dim"], d["state"]
+    xh = x.reshape(bsz, H, P)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    Bq = jnp.broadcast_to(B[:, None, :], (bsz, H, N))
+    Cq = jnp.broadcast_to(C[:, None, :], (bsz, H, N))
+    y, (S_new, _) = linear_recurrence_step(
+        Cq, Bq, xh, dtv * A, dtv, (cache["ssm"], jnp.zeros((bsz, H, N), jnp.float32))
+    )
+    y = y + xh * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(bsz, d["d_inner"]) * jax.nn.silu(gate)
+    y = rmsnorm({"scale": p["out_norm"]}, y[:, None, :], cfg.norm_eps)
+    out = xres + y @ p["out_proj"].astype(y.dtype)
+    return out, {"conv": new_conv_cache, "ssm": S_new}

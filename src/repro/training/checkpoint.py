@@ -1,0 +1,160 @@
+"""Checkpointing: chunked, manifest-based, async, elastic.
+
+Layout:
+    <dir>/step-0000100/
+        manifest.json    # step, leaf paths/shapes/dtypes, data_state, hosts
+        host-00000.npz   # this host's leaves (full arrays in single-process
+                         # mode; per-host shards in multi-host mode)
+    <dir>/LATEST         # written last, atomically -> crash-safe
+
+Fault-tolerance contract:
+  * save is atomic (tmp dir + rename; LATEST updated after the rename), so
+    a crash mid-save never corrupts the restore point;
+  * data-pipeline state is stored IN the manifest, so restart resumes the
+    exact batch order (deterministic sampler);
+  * restore is mesh-agnostic: arrays are re-device_put with the *current*
+    mesh's shardings — elastic re-scale = restore on a different mesh.
+Async saves run on a single background thread; `wait()` joins before exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz cannot represent the ml_dtypes extension types; store them as same-width
+# unsigned views and reconstruct from the manifest's dtype string.
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _encode_arr(arr: np.ndarray) -> np.ndarray:
+    ext = _EXT_DTYPES.get(str(arr.dtype))
+    return arr.view(ext[1]) if ext else arr
+
+
+def _decode_arr(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    ext = _EXT_DTYPES.get(dtype_str)
+    return arr.view(ext[0]) if ext else arr
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, max_keep: int = 3):
+        self.dir = directory
+        self.max_keep = max_keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Future] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, data_state: Optional[Dict] = None,
+             host: int = 0, n_hosts: int = 1) -> None:
+        leaves = _flatten(state)
+        arrays = {}
+        meta = []
+        for i, (path, leaf) in enumerate(leaves):
+            arr = np.asarray(leaf)
+            key = f"leaf_{i:05d}"
+            meta.append({"path": path, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            arrays[key] = _encode_arr(arr)
+        step_dir = os.path.join(self.dir, f"step-{step:08d}")
+        tmp = step_dir + f".tmp-{host}"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"host-{host:05d}.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "leaves": meta,
+            "data_state": data_state or {},
+            "n_hosts": n_hosts,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(step_dir):
+            shutil.rmtree(step_dir)
+        os.replace(tmp, step_dir)
+        latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(f"step-{step:08d}")
+        os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def save_async(self, step: int, state: Any, data_state: Optional[Dict] = None) -> Future:
+        # snapshot to host memory NOW (donated buffers may be reused)
+        leaves = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()
+        self._pending = self._pool.submit(self.save, step, leaves, data_state)
+        return self._pending
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = sorted(d for d in os.listdir(self.dir) if d.startswith("step-"))
+        for d in steps[: -self.max_keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.dir, name)):
+            return None
+        return int(name.split("-")[1])
+
+    def restore(
+        self,
+        target_tree: Any,
+        step: Optional[int] = None,
+        shardings: Any = None,
+    ) -> Tuple[int, Any, Dict]:
+        """Restore into the structure of target_tree (abstract or concrete).
+        shardings: optional matching tree of NamedShardings for the CURRENT
+        mesh (elastic restore: the saved mesh does not matter)."""
+        if step is None:
+            step = self.latest_step()
+            assert step is not None, "no checkpoint found"
+        step_dir = os.path.join(self.dir, f"step-{step:08d}")
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        files = sorted(f for f in os.listdir(step_dir) if f.endswith(".npz"))
+        store: Dict[str, np.ndarray] = {}
+        for fn in files:
+            with np.load(os.path.join(step_dir, fn)) as z:
+                for k in z.files:
+                    store[k] = z[k]
+        leaves_meta = manifest["leaves"]
+        flat_target, treedef = jax.tree_util.tree_flatten(target_tree)
+        assert len(flat_target) == len(leaves_meta), (
+            f"checkpoint has {len(leaves_meta)} leaves, target {len(flat_target)}"
+        )
+        flat_shard = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(flat_target)
+        )
+        out = []
+        for i, (tgt, shd) in enumerate(zip(flat_target, flat_shard)):
+            arr = _decode_arr(store[f"leaf_{i:05d}"], leaves_meta[i]["dtype"])
+            expect = tuple(getattr(tgt, "shape", arr.shape))
+            assert tuple(arr.shape) == expect, (i, arr.shape, expect)
+            out.append(jax.device_put(arr, shd) if shd is not None else arr)
+        state = jax.tree_util.tree_unflatten(treedef, out)
+        return step, state, manifest.get("data_state", {})

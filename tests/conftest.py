@@ -1,0 +1,27 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device; only launch/dryrun.py (run as
+# a separate process) sets the 512-device flag.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import random
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def rnd():
+    return random.Random(0)
+
+
+def make_crawl_records(n, seed=0, content_bytes=256):
+    from repro.launch.load_data import synth_crawl_records
+
+    return list(synth_crawl_records(n, seed=seed, content_bytes=content_bytes))

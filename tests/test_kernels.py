@@ -1,0 +1,85 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle across
+shape/dtype sweeps (the kernels/ contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+@pytest.mark.parametrize("n", [128, 8192, 10_001])
+def test_bitunpack(rng, bits, n):
+    w = jnp.asarray(rng.integers(0, 2**32, size=(n,), dtype=np.uint32))
+    got = ops.bitunpack(w, bits, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.bitunpack_ref(w, bits)))
+
+
+@pytest.mark.parametrize("vdtype", [jnp.int32, jnp.float32])
+@pytest.mark.parametrize("n,v", [(4096, 16), (9000, 700)])
+def test_dict_decode(rng, n, v, vdtype):
+    codes = jnp.asarray(rng.integers(0, v, size=(n,)), jnp.int32)
+    table = jnp.asarray(rng.normal(size=(v,)) * 100, vdtype)
+    got = ops.dict_decode(codes, table, interpret=True)
+    want = ref.dict_decode_ref(codes, table)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("d", [128, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dict_embed(rng, d, dtype):
+    codes = jnp.asarray(rng.integers(0, 300, size=(2048,)), jnp.int32)
+    dict_ids = jnp.asarray(rng.integers(0, 5000, size=(300,)), jnp.int32)
+    emb = jnp.asarray(rng.normal(size=(5000, d)), dtype)
+    got = ops.dict_embed(codes, dict_ids, emb, interpret=True)
+    want = ref.dict_embed_ref(codes, dict_ids, emb)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+@pytest.mark.parametrize("density", [0.0, 0.02, 0.3, 1.0])
+@pytest.mark.parametrize("n", [1024, 5000])
+def test_filter_compact(rng, density, n):
+    mask = jnp.asarray(rng.random(n) < density)
+    idx, cnt = ops.filter_compact(mask, interpret=True)
+    ridx, rcnt = ref.filter_compact_ref(mask)
+    assert int(cnt) == int(rcnt)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+def test_late_materialize(rng):
+    mask = jnp.asarray(rng.random(2048) < 0.06)
+    col = jnp.asarray(rng.normal(size=(2048, 8)), jnp.float32)
+    rows, cnt = ops.late_materialize(mask, col, interpret=True)
+    want = np.asarray(col)[np.asarray(mask)]
+    np.testing.assert_allclose(np.asarray(rows)[: int(cnt)], want, rtol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "bh,sq,sk,d,causal,bq,bk",
+    [
+        (2, 256, 256, 64, True, 64, 64),
+        (1, 512, 512, 128, True, 256, 128),
+        (2, 128, 256, 64, False, 64, 64),
+    ],
+)
+def test_flash_attention(rng, bh, sq, sk, d, causal, bq, bk):
+    q = jnp.asarray(rng.normal(size=(bh, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, sk, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.bfloat16)
+    got = flash_attention(q, q, q, interpret=True)
+    want = flash_attention_ref(q, q, q)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+    )

@@ -1,0 +1,82 @@
+"""Mini MapReduce executor + the paper's Fig. 1 job, incl. failure handling."""
+import pytest
+
+from repro.core import CIFReader, COFWriter, ColumnFormat, urlinfo_schema
+from repro.core.mapreduce import fig1_map, fig1_reduce, run_job
+from repro.core.placement import Placement
+from conftest import make_crawl_records
+
+
+@pytest.fixture(scope="module")
+def crawl(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("crawl") / "d")
+    records = make_crawl_records(1200)
+    w = COFWriter(root, urlinfo_schema(),
+                  formats={"metadata": ColumnFormat("dcsl"),
+                           "url": ColumnFormat("skiplist")},
+                  split_records=128)
+    w.append_all(records)
+    w.close()
+    return root, records
+
+
+def _open_split_fn(root):
+    reader = CIFReader(root, columns=["url", "metadata"], lazy=True)
+    split_map = dict(reader.splits())
+
+    def open_split(sid):
+        for rec in reader.open_split(split_map[sid]).iter_lazy():
+            yield None, rec
+
+    return list(split_map), open_split
+
+
+def brute_force(records):
+    return sorted({
+        r["metadata"]["content-type"] for r in records if "ibm.com/jp" in r["url"]
+    })
+
+
+def test_fig1_job_correct(crawl):
+    root, records = crawl
+    ids, open_split = _open_split_fn(root)
+    res = run_job(ids, open_split, fig1_map(), fig1_reduce, n_hosts=4)
+    assert [v for _, v in res.output] == brute_force(records)
+    assert res.remote_reads == 0  # CPP invariant
+    assert res.splits_processed == len(ids)
+
+
+def test_job_survives_dead_hosts(crawl):
+    root, records = crawl
+    ids, open_split = _open_split_fn(root)
+    res = run_job(ids, open_split, fig1_map(), fig1_reduce,
+                  n_hosts=5, dead_hosts={1, 3})
+    assert [v for _, v in res.output] == brute_force(records)
+    assert res.splits_processed == len(ids)
+    live = {h for h in res.host_of_split.values()}
+    assert live.isdisjoint({1, 3})
+
+
+def test_job_fails_when_coverage_lost(crawl):
+    root, records = crawl
+    ids, open_split = _open_split_fn(root)
+    p = Placement(n_splits=len(ids), n_hosts=3, replication=3)
+    with pytest.raises(AssertionError):
+        run_job(ids, open_split, fig1_map(), fig1_reduce,
+                n_hosts=3, dead_hosts={0, 1, 2}, placement=p)
+
+
+def test_combiner_reduces_shuffle(crawl):
+    root, records = crawl
+    ids, open_split = _open_split_fn(root)
+
+    def combiner(key, vals, emit):
+        for v in set(vals):
+            emit(key, v)
+
+    r0 = run_job(ids, open_split, fig1_map(), fig1_reduce, n_hosts=4)
+    ids2, open_split2 = _open_split_fn(root)
+    r1 = run_job(ids2, open_split2, fig1_map(), fig1_reduce, n_hosts=4,
+                 combiner=combiner)
+    assert [v for _, v in r0.output] == [v for _, v in r1.output]
+    assert r1.map_output_records <= r0.map_output_records

@@ -1,0 +1,226 @@
+"""Per-architecture smoke tests (reduced configs, assignment requirement)
+plus decode-vs-forward consistency for the cache machinery."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_configs, get_config, reduced
+from repro.models import lm
+from repro.models.spec import init_params
+from repro.models.ssm import chunked_linear_recurrence, linear_recurrence_step
+
+ARCHS = sorted(all_configs())
+
+
+def _batch(cfg, B=2, S=64, rng=None):
+    rng = rng or np.random.default_rng(0)
+    if cfg.frontend == "audio":
+        return {
+            "frames": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+            "loss_mask": jnp.ones((B, S), jnp.float32),
+        }
+    if cfg.frontend == "vision":
+        st = S - cfg.n_patches
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, st)), jnp.int32),
+            "patches": jnp.asarray(rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.bfloat16),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, st)), jnp.int32),
+            "loss_mask": jnp.ones((B, st), jnp.float32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward/train step on CPU, shapes + no NaNs."""
+    cfg = reduced(get_config(arch))
+    params = init_params(lm.param_spec(cfg), jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    def step(p, b):
+        loss, metrics = lm.loss_fn(p, b, cfg)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(step, has_aux=True))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(metrics["tokens"]) > 0
+    gn = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_shape_applicability(arch):
+    cfg = get_config(arch)
+    shapes = cfg.applicable_shapes()
+    assert "train_4k" in shapes and "prefill_32k" in shapes
+    if not cfg.supports_decode:
+        assert "decode_32k" not in shapes
+        assert cfg.skip_reason("decode_32k")
+    if not cfg.subquadratic and cfg.supports_decode:
+        assert cfg.skip_reason("long_500k")
+    # exact assigned configs spot-check
+    full = get_config(arch)
+    assert full.n_layers >= 16 and full.vocab_size >= 504
+
+
+@pytest.mark.parametrize(
+    "arch", ["tinyllama-1.1b", "gemma3-12b", "zamba2-1.2b", "xlstm-350m", "olmoe-1b-7b"]
+)
+def test_decode_matches_forward(arch):
+    """Prefill + step-by-step decode must reproduce full-forward logits —
+    validates KV caches, rolling windows, and recurrent state threading."""
+    cfg = dataclasses.replace(reduced(get_config(arch)), dtype="float32", remat="none")
+    params = init_params(lm.param_spec(cfg), jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    B, S, T = 2, 48, 6  # prompt 48, decode 6 more
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S + T)), jnp.int32)
+
+    # reference: full forward logits at each position (teacher forcing)
+    def full_logits(p, t):
+        x = lm.embed_inputs(p, {"tokens": t}, cfg, jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(t.shape[1], dtype=jnp.int32), t.shape)
+        x, _, _ = lm._run_segments(p, x, cfg, pos)
+        from repro.models import layers as L
+
+        x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_fn(p, x, cfg)
+
+    ref = jax.jit(full_logits)(params, toks)  # (B, S+T, V)
+
+    logits0, caches = jax.jit(
+        lambda p, b: lm.prefill(p, b, cfg, cache_len=S + T)
+    )(params, {"tokens": toks[:, :S]})
+    np.testing.assert_allclose(
+        np.asarray(logits0[:, -1]), np.asarray(ref[:, S - 1]), rtol=5e-3, atol=5e-3
+    )
+    step = jax.jit(lambda p, c, t, q: lm.decode_step(p, c, t, q, cfg))
+    for i in range(T):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        logits, caches = step(params, caches, toks[:, S + i : S + i + 1], pos)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(ref[:, S + i]),
+            rtol=5e-3, atol=5e-3,
+        )
+
+
+def test_chunked_recurrence_vs_naive(rng):
+    B, S, H, N, P = 2, 64, 3, 5, 7
+    q = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    log_g = jnp.asarray(-np.abs(rng.normal(size=(B, S, H))) * 0.5, jnp.float32)
+    a = jnp.asarray(np.abs(rng.normal(size=(B, S, H))), jnp.float32)
+    for normalize in (False, True):
+        outs = []
+        for chunk in (8, 16, 64):
+            y, (Sf, nf) = chunked_linear_recurrence(
+                q, k, v, log_g, a, normalize=normalize, chunk=chunk
+            )
+            outs.append(np.asarray(y))
+        np.testing.assert_allclose(outs[0], outs[1], atol=1e-4)
+        np.testing.assert_allclose(outs[0], outs[2], atol=1e-4)
+        # continuation equivalence: chunked prefix + stepwise == full
+        y1, st = chunked_linear_recurrence(
+            q[:, :32], k[:, :32], v[:, :32], log_g[:, :32], a[:, :32],
+            normalize=normalize, chunk=16,
+        )
+        ys = []
+        for t in range(32, 40):
+            yt, st = linear_recurrence_step(
+                q[:, t], k[:, t], v[:, t], log_g[:, t], a[:, t], st,
+                normalize=normalize,
+            )
+            ys.append(np.asarray(yt))
+        np.testing.assert_allclose(
+            np.stack(ys, 1), outs[0][:, 32:40], atol=1e-4
+        )
+
+
+def test_loss_chunking_equivalent():
+    cfg = dataclasses.replace(reduced(get_config("stablelm-1.6b")), dtype="float32")
+    params = init_params(lm.param_spec(cfg), jax.random.PRNGKey(0))
+    batch = _batch(cfg, B=2, S=64)
+    l0, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg, loss_chunk=0))(params, batch)
+    l1, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg, loss_chunk=16))(params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_q_chunking_equivalent():
+    cfg = dataclasses.replace(reduced(get_config("tinyllama-1.1b")), dtype="float32")
+    params = init_params(lm.param_spec(cfg), jax.random.PRNGKey(0))
+    batch = _batch(cfg, B=2, S=64)
+    l0, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg, q_chunk=0))(params, batch)
+    l1, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg, q_chunk=16))(params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_moe_capacity_equals_ragged_when_no_drops():
+    from repro.models import moe as M
+    from repro.models.spec import init_params as ip
+
+    cfg = dataclasses.replace(reduced(get_config("olmoe-1b-7b")), dtype="float32")
+    p = ip(M.moe_spec(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    y0, _ = M.moe_apply_ragged(p, x, cfg)
+    y1, _ = M.moe_apply_capacity(p, x, cfg, capacity_factor=float(cfg.n_experts))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5)
+
+
+def test_moe_capacity_drops_bounded():
+    """With cf=1.25 the dropped fraction must be small for balanced routing
+    and the output finite regardless."""
+    from repro.models import moe as M
+    from repro.models.spec import init_params as ip
+
+    cfg = dataclasses.replace(reduced(get_config("olmoe-1b-7b")), dtype="float32")
+    p = ip(M.moe_spec(cfg), jax.random.PRNGKey(2))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 64, cfg.d_model)), jnp.float32)
+    y, aux = M.moe_apply_capacity(p, x, cfg, capacity_factor=1.25)
+    assert np.isfinite(np.asarray(y)).all() and np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma3-12b", "olmoe-1b-7b"])
+def test_grouped_kv_equals_gather(arch):
+    cfg = dataclasses.replace(reduced(get_config(arch)), dtype="float32")
+    params = init_params(lm.param_spec(cfg), jax.random.PRNGKey(1))
+    batch = _batch(cfg, B=2, S=32)
+    l0, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg))(params, batch)
+    cfg_g = dataclasses.replace(cfg, attn_kv_mode="grouped")
+    l1, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg_g))(params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-4
+    # decode path too
+    caches = lm.init_cache(cfg, 1, 16)
+    t = jnp.asarray([[3]], jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    lg0, _ = lm.decode_step(params, caches, t, pos, cfg)
+    lg1, _ = lm.decode_step(params, lm.init_cache(cfg_g, 1, 16), t, pos, cfg_g)
+    np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1), atol=1e-3)
+
+
+def test_param_counts_sane():
+    # full configs should land near their nameplate sizes
+    expect = {
+        "tinyllama-1.1b": (0.9e9, 1.3e9),
+        "stablelm-1.6b": (1.3e9, 2.0e9),
+        "olmoe-1b-7b": (6.0e9, 8.0e9),
+        "dbrx-132b": (110e9, 150e9),
+        # 9.8B: the assigned numbers give head_dim 3840/16=240 (vs. 256 in
+        # the HF release), so slightly under nameplate
+        "gemma3-12b": (9.0e9, 14e9),
+        # 4.65B: includes the 24->32 q-head TP padding (see configs file)
+        "phi4-mini-3.8b": (3.3e9, 5.0e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = lm.n_params(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+    # MoE active < total
+    assert lm.n_active_params(get_config("olmoe-1b-7b")) < lm.n_params(get_config("olmoe-1b-7b"))

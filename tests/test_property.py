@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) for the system's core invariants:
+codec roundtrips over arbitrary typed values, skip-list positional access,
+bit-packing, placement coverage, compaction kernels."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ARRAY, BOOL, BYTES, FLOAT64, INT32, INT64, MAP, RECORD, STRING
+from repro.core.colfile import ColumnFileReader, ColumnFileWriter, ColumnFormat
+from repro.core.placement import Placement
+from repro.core.schema import ColumnType, validate_value
+from repro.core.varcodec import decode_cell, encode_cell, read_varint, skip_cell, write_varint
+from repro.data.tokens import pack_bits, pack_codes, unpack_bits, unpack_codes
+
+# -- strategies -------------------------------------------------------------
+
+scalar_types = st.sampled_from(
+    [INT32(), INT64(), FLOAT64(), STRING(), BYTES(), BOOL()]
+)
+
+
+def type_strategy(depth=2):
+    if depth == 0:
+        return scalar_types
+    sub = type_strategy(depth - 1)
+    return st.one_of(
+        scalar_types,
+        sub.map(ARRAY),
+        sub.map(MAP),
+        st.lists(sub, min_size=1, max_size=3).map(
+            lambda ts: RECORD([(f"f{i}", t) for i, t in enumerate(ts)])
+        ),
+    )
+
+
+def value_for(typ: ColumnType):
+    k = typ.kind
+    if k == "int32":
+        return st.integers(-(2**31), 2**31 - 1)
+    if k == "int64":
+        return st.integers(-(2**63), 2**63 - 1)
+    if k == "float64":
+        return st.floats(allow_nan=False, width=64)
+    if k == "string":
+        return st.text(max_size=40)
+    if k == "bytes":
+        return st.binary(max_size=60)
+    if k == "bool":
+        return st.booleans()
+    if k == "array":
+        return st.lists(value_for(typ.elem), max_size=5)
+    if k == "map":
+        return st.dictionaries(st.text(max_size=8), value_for(typ.value), max_size=5)
+    if k == "record":
+        return st.fixed_dictionaries({f: value_for(t) for f, t in typ.fields})
+    raise AssertionError(k)
+
+
+typed_values = type_strategy().flatmap(
+    lambda t: st.tuples(st.just(t), value_for(t))
+)
+
+
+# -- properties ---------------------------------------------------------------
+
+
+@given(st.integers(-(2**63), 2**63 - 1))
+def test_varint_roundtrip(n):
+    buf = bytearray()
+    write_varint(buf, n)
+    got, off = read_varint(bytes(buf), 0)
+    assert got == n and off == len(buf)
+
+
+@given(typed_values)
+@settings(max_examples=200, deadline=None)
+def test_cell_roundtrip_and_skip(tv):
+    typ, v = tv
+    assert validate_value(typ, v)
+    buf = bytearray()
+    encode_cell(typ, v, buf)
+    got, end = decode_cell(typ, bytes(buf), 0)
+    assert end == len(buf)
+    skipped_end = skip_cell(typ, bytes(buf), 0)
+    assert skipped_end == len(buf)
+    if typ.kind == "float64":
+        assert got == v or (np.isclose(got, v))
+    else:
+        assert got == v
+
+
+@given(
+    st.lists(st.integers(0, 10**6), min_size=1, max_size=300),
+    st.data(),
+)
+@settings(max_examples=50, deadline=None)
+def test_skiplist_positional_access(vals, data):
+    w = ColumnFileWriter(INT64(), ColumnFormat("skiplist"))
+    for v in vals:
+        w.append(v)
+    r = ColumnFileReader(w.finish(), INT64())
+    # any monotone access pattern must return exact values
+    idxs = sorted(
+        data.draw(st.sets(st.integers(0, len(vals) - 1), max_size=20))
+    )
+    for i in idxs:
+        assert r.value_at(i) == vals[i]
+
+
+@given(st.lists(st.integers(0, 2**16 - 1), min_size=1, max_size=500),
+       st.sampled_from([4, 8, 16]))
+def test_pack_unpack_codes(codes, bits):
+    codes = [c % (1 << bits) for c in codes]
+    arr = np.asarray(codes, np.uint32)
+    raw = pack_codes(arr, bits)
+    back = unpack_codes(raw, bits, len(codes))
+    assert back.tolist() == codes
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=300))
+def test_pack_unpack_bits(bits):
+    arr = np.asarray(bits, bool)
+    assert unpack_bits(pack_bits(arr), len(bits)).astype(bool).tolist() == bits
+
+
+@given(st.integers(1, 200), st.integers(1, 32), st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_placement_total_coverage(n_splits, n_hosts, repl):
+    p = Placement(n_splits, n_hosts, repl)
+    r = min(repl, n_hosts)
+    for s in range(n_splits):
+        reps = p.replicas(s)
+        assert len(reps) == r and len(set(reps)) == r
+        assert all(0 <= h < n_hosts for h in reps)
+    # union of per-host primary sets covers all splits exactly once
+    seen = []
+    for h in range(n_hosts):
+        seen.extend(p.splits_of(h))
+    assert sorted(seen) == list(range(n_splits))

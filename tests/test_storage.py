@@ -1,0 +1,234 @@
+"""Storage engine behaviour: every format kind, laziness, skip lists,
+compression, schema evolution, placement — the paper's §4-§5 machinery."""
+import os
+
+import pytest
+
+from repro.core import (
+    ARRAY, BYTES, CIFReader, COFWriter, ColumnFileReader, ColumnFileWriter,
+    ColumnFormat, FLOAT32, INT32, INT64, MAP, STRING, Placement, Schema,
+    WorkQueue, add_column, urlinfo_schema,
+)
+from repro.core.colfile import CBLOCK_RECORDS
+from repro.core.dcsl import DICT_BLOCK
+from repro.core.rowgroup import RCFileReader, RCFileWriter
+from repro.core.seqfile import SeqReader, write_seq
+from repro.core.textfile import TextReader, write_text
+from conftest import make_crawl_records
+
+KINDS = [
+    ColumnFormat("plain"),
+    ColumnFormat("skiplist"),
+    ColumnFormat("cblock", codec="lzo"),
+    ColumnFormat("cblock", codec="zlib"),
+]
+
+
+@pytest.mark.parametrize("fmt", KINDS, ids=lambda f: f"{f.kind}-{f.codec}")
+def test_column_file_roundtrip_map(fmt, rnd):
+    typ = MAP(INT32())
+    vals = [
+        {f"k{rnd.randint(0, 20)}": rnd.randint(-1000, 1000) for _ in range(rnd.randint(0, 8))}
+        for _ in range(2500)
+    ]
+    w = ColumnFileWriter(typ, fmt)
+    for v in vals:
+        w.append(v)
+    r = ColumnFileReader(w.finish(), typ)
+    assert [r.value_at(i) for i in range(len(vals))] == vals
+
+
+def test_dcsl_roundtrip_and_lookup(rnd):
+    typ = MAP(STRING())
+    vals = [
+        {f"key{rnd.randint(0, 15)}": f"v{rnd.randint(0, 99)}" for _ in range(5)}
+        for _ in range(3 * DICT_BLOCK + 17)  # multiple dictionary blocks
+    ]
+    w = ColumnFileWriter(typ, ColumnFormat("dcsl"))
+    for v in vals:
+        w.append(v)
+    raw = w.finish()
+    r = ColumnFileReader(raw, typ)
+    assert [r.value_at(i) for i in range(len(vals))] == vals
+    # single-key lookup decodes only the requested entry, across dict blocks
+    r2 = ColumnFileReader(raw, typ)
+    for i in range(0, len(vals), 97):
+        key = sorted(vals[i])[0]
+        assert r2.lookup(i, key) == vals[i][key]
+    assert r2.lookup(len(vals) - 1, "missing-key") is None
+
+
+def test_skiplist_jumps_skip_work(rnd):
+    typ = STRING()
+    vals = [("x" * 50) + str(i) for i in range(5000)]
+    w = ColumnFileWriter(typ, ColumnFormat("skiplist"))
+    for v in vals:
+        w.append(v)
+    raw = w.finish()
+    # sparse access: big jumps should touch far less than the full file
+    r = ColumnFileReader(raw, typ)
+    for i in range(0, 5000, 1000):
+        assert r.value_at(i) == vals[i]
+    sparse_touched = r.counters.bytes_touched
+    r2 = ColumnFileReader(raw, typ)
+    for i in range(5000):
+        assert r2.value_at(i) == vals[i]
+    dense_touched = r2.counters.bytes_touched
+    assert sparse_touched < dense_touched / 20, (sparse_touched, dense_touched)
+
+
+def test_cblock_lazy_decompression(rnd):
+    typ = BYTES()
+    vals = [bytes([i % 251]) * 300 for i in range(CBLOCK_RECORDS * 8)]
+    w = ColumnFileWriter(typ, ColumnFormat("cblock", codec="zlib"))
+    for v in vals:
+        w.append(v)
+    r = ColumnFileReader(w.finish(), typ)
+    # touch one value per 2 blocks -> half the blocks stay compressed
+    for i in range(0, len(vals), CBLOCK_RECORDS * 2):
+        assert r.value_at(i) == vals[i]
+    assert r.counters.blocks_decompressed == 4
+    assert r.counters.blocks_skipped >= 3
+
+
+def test_cif_projection_pushdown(tmp_path):
+    records = make_crawl_records(300)
+    root = str(tmp_path / "d")
+    w = COFWriter(root, urlinfo_schema(), split_records=128)
+    w.append_all(records)
+    w.close()
+    r = CIFReader(root, columns=["url"])
+    urls = [rec.get("url") for rec in r.scan()]
+    assert urls == [x["url"] for x in records]
+    # only url.col opened (3 splits x 1 file)
+    assert r.stats.files_opened == 3
+    full = CIFReader(root)
+    list(full.scan())
+    assert full.stats.bytes_io > 3 * r.stats.bytes_io
+
+
+def test_lazy_record_skips_decode(tmp_path):
+    records = make_crawl_records(400)
+    root = str(tmp_path / "d")
+    w = COFWriter(
+        root, urlinfo_schema(),
+        formats={"metadata": ColumnFormat("skiplist")},
+        split_records=400,
+    )
+    w.append_all(records)
+    w.close()
+    r = CIFReader(root, columns=["url", "metadata"], lazy=True)
+    hits = 0
+    for rec in r.scan():
+        if "ibm.com/jp" in rec.get("url"):
+            rec.get("metadata")
+            hits += 1
+    # url decoded for all records, metadata ONLY for matches
+    assert r.stats.cells_decoded == 400 + hits
+    assert hits < 100  # ~6% selectivity
+
+
+def test_lazy_record_memoizes_repeated_get(tmp_path):
+    records = make_crawl_records(50)
+    root = str(tmp_path / "d")
+    w = COFWriter(root, urlinfo_schema(), split_records=50)
+    w.append_all(records)
+    w.close()
+    r = CIFReader(root, columns=["url"], lazy=True)
+    for rec in r.scan():
+        assert rec.get("url") == rec.get("url")
+
+
+def test_eager_equals_lazy(tmp_path):
+    records = make_crawl_records(200)
+    root = str(tmp_path / "d")
+    w = COFWriter(root, urlinfo_schema(), split_records=64)
+    w.append_all(records)
+    w.close()
+    lazy = [
+        {n: rec.get(n) for n in urlinfo_schema().names()}
+        for rec in CIFReader(root, lazy=True).scan()
+    ]
+    eager = [
+        {n: rec.get(n) for n in urlinfo_schema().names()}
+        for rec in CIFReader(root, lazy=False).scan()
+    ]
+    assert lazy == eager == records
+
+
+def test_add_column_cheap_schema_evolution(tmp_path):
+    records = make_crawl_records(100)
+    root = str(tmp_path / "d")
+    w = COFWriter(root, urlinfo_schema(), split_records=40)
+    w.append_all(records)
+    w.close()
+    sizes_before = {
+        s: os.path.getsize(os.path.join(d, "content.col"))
+        for s, d in CIFReader(root).splits()
+    }
+    add_column(root, "pagerank", FLOAT32(), lambda si, n: [float(si)] * n)
+    r = CIFReader(root, columns=["pagerank"])
+    vals = [rec.get("pagerank") for rec in r.scan()]
+    assert len(vals) == 100
+    # existing column files were NOT rewritten (CIF's win over RCFile, §4.3)
+    for s, d in CIFReader(root).splits():
+        assert os.path.getsize(os.path.join(d, "content.col")) == sizes_before[s]
+
+
+@pytest.mark.parametrize("mode", ["plain", "record", "block"])
+def test_seq_roundtrip(tmp_path, mode):
+    records = make_crawl_records(120)
+    p = str(tmp_path / "f.seq")
+    write_seq(p, urlinfo_schema(), records, mode=mode)
+    assert list(SeqReader(p).scan()) == records
+
+
+def test_text_roundtrip(tmp_path):
+    records = make_crawl_records(60)
+    p = str(tmp_path / "f.jsonl")
+    write_text(p, urlinfo_schema(), records)
+    assert list(TextReader(p, urlinfo_schema()).scan()) == records
+
+
+@pytest.mark.parametrize("codec", ["none", "zlib"])
+def test_rcfile_roundtrip_and_projection(tmp_path, codec):
+    records = make_crawl_records(200)
+    p = str(tmp_path / "f.rc")
+    w = RCFileWriter(p, urlinfo_schema(), rowgroup_bytes=64 * 1024, codec=codec)
+    for r in records:
+        w.append(r)
+    w.close()
+    assert list(RCFileReader(p).scan()) == records
+    rr = RCFileReader(p, columns=["url"])
+    assert [x["url"] for x in rr.scan()] == [x["url"] for x in records]
+    assert rr.stats.bytes_io <= os.path.getsize(p) + rr.io_unit
+
+
+def test_placement_invariants():
+    p = Placement(n_splits=97, n_hosts=13, replication=3)
+    loads = [0] * 13
+    for s in range(97):
+        reps = p.replicas(s)
+        assert len(set(reps)) == 3  # distinct hosts
+        loads[p.primary(s)] += 1
+    assert max(loads) - min(loads) <= 1  # round-robin balanced
+    # determinism
+    assert [p.replicas(s) for s in range(97)] == [p.replicas(s) for s in range(97)]
+
+
+def test_workqueue_handles_dead_hosts():
+    p = Placement(n_splits=40, n_hosts=8, replication=3)
+    dead = {2, 5}
+    wq = WorkQueue(p, dead_hosts=dead)
+    assert wq.coverage_possible()
+    live = [h for h in range(8) if h not in dead]
+    while not wq.all_done():
+        progressed = False
+        for h in live:
+            s = wq.next_split(h)
+            if s is not None:
+                assert p.is_local(s, h)  # CPP invariant: never a remote read
+                wq.complete(s)
+                progressed = True
+        assert progressed
+    assert len(wq.done) == 40

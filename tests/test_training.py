@@ -1,0 +1,142 @@
+"""Training substrate: optimizer math, checkpoint atomicity/resume,
+fault-tolerant restart determinism, gradient compression numerics."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import HostPipeline
+from repro.data.tokens import TokenCorpus, TokenCorpusWriter
+from repro.distributed.sharding import default_sharding
+from repro.launch.load_data import synth_token_docs
+from repro.launch.mesh import make_host_mesh
+from repro.training.checkpoint import Checkpointer
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, schedule
+from repro.training.train_loop import TrainLoopConfig, fit
+
+
+def _mk_corpus(path, n_docs=120, seq_len=64):
+    w = TokenCorpusWriter(str(path), seq_len=seq_len, split_records=32)
+    for toks, meta in synth_token_docs(n_docs, vocab=512):
+        w.add_document(toks, meta)
+    w.close()
+    return TokenCorpus(str(path))
+
+
+def _cfg(corpus):
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    return dataclasses.replace(cfg, vocab_size=corpus.vocab_size, n_layers=2, d_model=32,
+                               n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64)
+
+
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = init_opt_state(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+        params, opt, m = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 1.0) < 1e-6
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-3)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), max_keep=2)
+    state = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    for step in (5, 10, 15):
+        ck.save(step, state, data_state={"cursor": step})
+    assert ck.latest_step() == 15
+    # gc kept only 2
+    kept = [d for d in os.listdir(tmp_path) if d.startswith("step-")]
+    assert len(kept) == 2
+    step, restored, ds = ck.restore(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+    assert step == 15 and ds == {"cursor": 15}
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(state["a"]))
+    assert str(restored["b"]["c"].dtype) == "bfloat16"
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A half-written step dir must not be visible via LATEST."""
+    ck = Checkpointer(str(tmp_path))
+    state = {"a": jnp.zeros(3)}
+    ck.save(1, state)
+    # simulate crash: partial tmp dir left behind
+    os.makedirs(os.path.join(str(tmp_path), "step-00000002.tmp-0"), exist_ok=True)
+    assert ck.latest_step() == 1
+
+
+def test_restart_resumes_identically(tmp_path):
+    """Gold-standard fault tolerance test: an interrupted-and-resumed run
+    must produce the SAME final loss as an uninterrupted run."""
+    corpus = _mk_corpus(tmp_path / "corpus")
+    cfg = _cfg(corpus)
+    mesh = make_host_mesh()
+    sh = default_sharding(cfg)
+    shape = ShapeConfig("t", 64, 4, "train")
+
+    def run(ckpt_dir, steps):
+        pipe = HostPipeline(corpus, batch_per_host=4, prefetch=0)
+        loop = TrainLoopConfig(steps=steps, ckpt_every=5, log_every=1,
+                               ckpt_dir=str(ckpt_dir))
+        return fit(cfg, mesh, sh, shape, pipe, loop)
+
+    # uninterrupted 20 steps
+    full = run(tmp_path / "ckpt_full", 20)
+    # interrupted: 10 steps, then "crash", then resume to 20
+    run(tmp_path / "ckpt_int", 10)
+    resumed = run(tmp_path / "ckpt_int", 20)
+    f = {m["step"]: m["loss"] for m in full["history"]}
+    r = {m["step"]: m["loss"] for m in resumed["history"]}
+    for s in range(11, 21):
+        assert f[s] == pytest.approx(r[s], rel=1e-4), (s, f[s], r[s])
+
+
+def test_elastic_restore_changes_sharding(tmp_path):
+    """Restore the same checkpoint under a different mesh layout."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ck.save(3, state)
+    mesh = make_host_mesh(model=1)  # 1 device; layout change is structural
+    shardings = {"w": NamedSharding(mesh, P("data", None))}
+    step, restored, _ = ck.restore(
+        {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}, shardings=shardings
+    )
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+    assert restored["w"].sharding == shardings["w"]
+
+
+def test_grad_compression_error_feedback():
+    from repro.training.compression import ef_compress_tree, init_error
+
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(256,)), jnp.float32)}
+    err = init_error(g)
+    # accumulate compressed means over steps: with error feedback the
+    # cumulative dequantized sum tracks the true sum closely
+    true_sum = np.zeros(256)
+    deq_sum = np.zeros(256)
+    for step in range(50):
+        gs = {"w": g["w"] * (1 + 0.01 * step)}
+        q, s, err = ef_compress_tree(gs, err)
+        true_sum += np.asarray(gs["w"])
+        deq_sum += np.asarray(q["w"]).astype(np.float32) * float(s["w"])
+    rel = np.abs(deq_sum - true_sum).max() / np.abs(true_sum).max()
+    assert rel < 0.01, rel
