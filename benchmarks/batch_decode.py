@@ -1,0 +1,153 @@
+"""batch_decode — scalar `value_at` loop vs `read_range` vs device decode.
+
+Quantifies the tentpole win of the batch decode API: a full-projection eager
+scan that pulls whole column spans into NumPy arrays (one vectorized pass)
+instead of materializing one cell at a time through `value_at` (the paper's
+Fig. 8 "object churn" world).  Covers int/float/string columns across plain
+and cblock layouts plus the token pipeline's three decode worlds
+(scalar record loop, `record_batch`, Pallas device decode).
+
+Emits `BENCH_batch_decode.json` next to the repo root so the perf
+trajectory is tracked from this PR onward:
+
+    {"results": {name: {"scalar_s": .., "batch_s": .., "speedup": ..}}, ...}
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Dict
+
+import numpy as np
+
+from repro.core import FLOAT32, INT32, INT64, STRING, Schema
+from repro.core.colfile import ColumnFileReader, ColumnFileWriter, ColumnFormat
+
+from .common import Csv, timeit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_batch_decode.json")
+
+
+def _column(typ, fmt, n, seed=0):
+    rng = np.random.default_rng(seed)
+    k = typ.kind
+    if k in ("int32", "int64"):
+        vals = rng.integers(-(10**6), 10**6, size=n).tolist()
+    elif k == "float32":
+        vals = [float(np.float32(x)) for x in rng.random(n)]
+    else:
+        vals = ["payload-" + "x" * int(l) + str(i) for i, l in enumerate(rng.integers(5, 60, n))]
+    w = ColumnFileWriter(typ, fmt)
+    for v in vals:
+        w.append(v)
+    return w.finish(), vals
+
+
+def _compare(csv, results, name, raw, typ, n, repeat=3):
+    def scalar():
+        r = ColumnFileReader(raw, typ)
+        for i in range(n):
+            r.value_at(i)
+        return r
+
+    def batch():
+        r = ColumnFileReader(raw, typ)
+        r.read_range(0, n)
+        return r
+
+    t_s, _ = timeit(scalar, repeat=repeat)
+    t_b, _ = timeit(batch, repeat=repeat)
+    speedup = t_s / t_b
+    csv.add(f"batch_decode/{name}/scalar", t_s / n, "")
+    csv.add(f"batch_decode/{name}/read_range", t_b / n, f"speedup={speedup:.1f}x")
+    results[name] = {"scalar_s": t_s, "batch_s": t_b, "speedup": round(speedup, 2)}
+
+
+def columns(csv: Csv, results: Dict, n: int = 50_000) -> None:
+    for name, typ, fmt in [
+        ("int64-plain", INT64(), ColumnFormat("plain")),
+        ("int32-plain", INT32(), ColumnFormat("plain")),
+        ("float32-plain", FLOAT32(), ColumnFormat("plain")),
+        ("string-plain", STRING(), ColumnFormat("plain")),
+        ("int64-cblock-lzo", INT64(), ColumnFormat("cblock", codec="lzo")),
+        ("float32-cblock-zlib", FLOAT32(), ColumnFormat("cblock", codec="zlib")),
+        ("int64-skiplist", INT64(), ColumnFormat("skiplist")),
+    ]:
+        raw, _ = _column(typ, fmt, n)
+        _compare(csv, results, name, raw, typ, n)
+
+
+def tokens(csv: Csv, results: Dict, n_docs: int = 300, seq_len: int = 256) -> None:
+    """Token path: scalar record() loop vs one record_batch vs device decode
+    (Pallas bitunpack + dict_decode; interpret mode off-TPU, so the device
+    row measures the correctness path there, not TPU perf)."""
+    from repro.data.tokens import TokenCorpus, TokenCorpusWriter
+    from repro.launch.load_data import synth_token_docs
+
+    tmp = tempfile.mkdtemp(prefix="bench-batchdec-")
+    try:
+        w = TokenCorpusWriter(os.path.join(tmp, "c"), seq_len=seq_len, split_records=128)
+        for toks, meta in synth_token_docs(n_docs, vocab=250):
+            w.add_document(toks, meta)
+        w.close()
+        corpus = TokenCorpus(os.path.join(tmp, "c"))
+        sid = corpus.split_ids()[0]
+        n = len(corpus.open_split(sid))
+        ids = list(range(n))
+
+        def scalar():
+            sp = corpus.open_split(sid)
+            return [sp.record(i, decode="np") for i in ids]
+
+        def batch():
+            sp = corpus.open_split(sid)
+            return sp.record_batch(ids, decode="np")
+
+        def device():
+            sp = corpus.open_split(sid)
+            return sp.record_batch(ids, decode="device")
+
+        t_s, _ = timeit(scalar, repeat=3)
+        t_b, _ = timeit(batch, repeat=3)
+        t_d, _ = timeit(device, repeat=2)
+        csv.add("batch_decode/tokens/scalar-record", t_s / n, "")
+        csv.add("batch_decode/tokens/record_batch", t_b / n, f"speedup={t_s/t_b:.1f}x")
+        csv.add("batch_decode/tokens/device", t_d / n, "(interpret off-TPU)")
+        results["tokens-np"] = {
+            "scalar_s": t_s, "batch_s": t_b, "speedup": round(t_s / t_b, 2),
+        }
+        results["tokens-device"] = {
+            "scalar_s": t_s, "batch_s": t_d, "speedup": round(t_s / t_d, 2),
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def batch_decode(csv: Csv, n: int = 50_000) -> None:
+    results: Dict[str, Dict[str, float]] = {}
+    columns(csv, results, n=n)
+    tokens(csv, results)
+    payload = {
+        "bench": "batch_decode",
+        "n_cells": n,
+        "results": results,
+        "floor": {"int_float_min_speedup": min(
+            results[k]["speedup"]
+            for k in results
+            if k.split("-")[0] in ("int32", "int64", "float32")
+        )},
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    csv.add("batch_decode/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+    c = Csv()
+    batch_decode(c)

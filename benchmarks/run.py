@@ -16,12 +16,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger datasets")
     ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
-                    "fig9,fig10,fig11,table2,kernels,pipeline")
+                    "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     mul = 4 if args.full else 1
 
     from .common import Csv
+    from . import batch_decode as bd
     from . import deser_and_kernels as dk
     from . import storage_formats as sf
 
@@ -37,6 +38,7 @@ def main() -> None:
         ("table2", lambda: sf.table2(csv, n=8000 * mul)),
         ("kernels", lambda: dk.kernels(csv)),
         ("pipeline", lambda: dk.pipeline(csv, n_docs=400 * mul)),
+        ("batch_decode", lambda: bd.batch_decode(csv, n=50_000 * mul)),
     ]
     failures = []
     for name, fn in jobs:

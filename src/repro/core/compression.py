@@ -2,8 +2,15 @@
 
 The paper uses LZO (fast, modest ratio) and ZLIB (slow, high ratio).  LZO is
 GPL-encumbered and not installed; zstd level-1 has the same engineering
-profile (cheap decode, modest ratio) and stands in for it.  The codec is
-recorded by name in the column-file header, so files are self-describing.
+profile (cheap decode, modest ratio) and stands in for it when available.
+``zstandard`` is an optional dependency: without it, zlib level-1 (cheap
+decode, modest ratio) is the "lzo" stand-in.  Files stay self-describing
+either way: the codec name in the column-file header selects the decode
+family, and "lzo" blocks carry their backend in-band (zstd frames are
+recognized by magic, everything else is a zlib stream).  zlib-written
+files therefore read anywhere; zstd-written files read wherever zstandard
+is installed and fail with a clear RuntimeError (naming the missing dep)
+on zlib-only hosts instead of a cryptic decode error.
 
 A *compressed block* is:  [uvarint n_records][uvarint payload_len][payload]
 — the header alone lets a reader skip the whole block without decompressing
@@ -14,20 +21,39 @@ from __future__ import annotations
 import zlib
 from typing import Callable, Dict, List, Tuple
 
-import zstandard
+try:  # optional: zstd-1 is the preferred LZO analog when installed
+    import zstandard
+except ImportError:
+    zstandard = None
 
 from .varcodec import read_uvarint, write_uvarint
 
-_ZSTD_C = zstandard.ZstdCompressor(level=1)
-_ZSTD_D = zstandard.ZstdDecompressor()
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+if zstandard is not None:
+    _ZSTD_C = zstandard.ZstdCompressor(level=1)
+    _ZSTD_D = zstandard.ZstdDecompressor()
+
+    def _lzo_c(b: bytes) -> bytes:
+        return _ZSTD_C.compress(b)
+
+else:  # zlib level-1: same engineering profile (fast, modest ratio)
+
+    def _lzo_c(b: bytes) -> bytes:
+        return zlib.compress(b, 1)
 
 
-def _zstd_c(b: bytes) -> bytes:
-    return _ZSTD_C.compress(b)
-
-
-def _zstd_d(b: bytes) -> bytes:
-    return _ZSTD_D.decompress(b)
+def _lzo_d(b: bytes) -> bytes:
+    # "lzo" payloads stay self-describing across backends: zstd frames are
+    # recognized by magic, anything else is a zlib stream.
+    if b[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "column block was written with zstd ('lzo' codec) but "
+                "zstandard is not installed; pip install zstandard to read it"
+            )
+        return _ZSTD_D.decompress(b)
+    return zlib.decompress(b)
 
 
 def _zlib_c(b: bytes) -> bytes:
@@ -44,7 +70,7 @@ def _none(b: bytes) -> bytes:
 
 CODECS: Dict[str, Tuple[Callable[[bytes], bytes], Callable[[bytes], bytes]]] = {
     "none": (_none, _none),
-    "lzo": (_zstd_c, _zstd_d),  # zstd-1 as the LZO analog (see DESIGN.md §8)
+    "lzo": (_lzo_c, _lzo_d),  # zstd-1 (or zlib-1 fallback) as the LZO analog
     "zlib": (_zlib_c, _zlib_d),
 }
 

@@ -130,6 +130,20 @@ class DCSLColumnReader:
     def value_at(self, index: int) -> Dict[str, Any]:
         return self._slr.value_at(index)
 
+    def read_range(self, start: int, stop: int) -> List[Dict[str, Any]]:
+        """Bulk forward decode: jump to ``start``, then decode forward.
+        Dictionary blocks sit on chunk boundaries (DICT_BLOCK is a multiple
+        of every skip level), so the boundary hook keeps ``_keys`` current
+        exactly as in the scalar path."""
+        out: List[Dict[str, Any]] = []
+        for chunk in self._slr.read_range(start, stop):
+            out.extend(chunk)
+        return out
+
+    @property
+    def position(self) -> int:
+        return self._slr.pos
+
     def lookup(self, index: int, key: str) -> Optional[Any]:
         """Decode ONLY the entry for `key` at record `index` (others skipped)."""
         slr = self._slr

@@ -158,3 +158,76 @@ class SkipListReader:
         """Monotone access used by LazyRecord within a split."""
         self.skip_to(index)
         return self.read()
+
+    def _read_chunk(
+        self,
+        stop: int,
+        range_decode_fn: Optional[Callable[[bytes, int, int], Tuple[Any, int]]],
+    ) -> Any:
+        """Decode one boundary-to-boundary run starting at the current
+        position (cells are back-to-back between skip-group boundaries)."""
+        content = self._content_off()
+        k = min(stop, (self.pos // min(self.levels) + 1) * min(self.levels)) - self.pos
+        if range_decode_fn is not None:
+            vals, end = range_decode_fn(self.data, content, k)
+        else:
+            vals, end = [], content
+            for _ in range(k):
+                v, end = self.decode_fn(self.data, end)
+                vals.append(v)
+        self.cells_decoded += k
+        self.bytes_decoded += end - content
+        self.pos += k
+        self.off = end
+        return vals
+
+    def read_range(
+        self,
+        start: int,
+        stop: int,
+        range_decode_fn: Optional[Callable[[bytes, int, int], Tuple[Any, int]]] = None,
+    ) -> List[Any]:
+        """Bulk forward decode of records ``[start, stop)``.
+
+        Jumps to ``start`` via the skip list, then bulk-decodes forward.
+        Without a boundary hook the smallest-level skip pointers give every
+        boundary's byte offset WITHOUT decoding cells, so the cell bytes of
+        all full runs are excised into one contiguous buffer and decoded in
+        a single ``range_decode_fn`` pass; partial head/tail runs (and the
+        hook case, e.g. DCSL dictionaries) decode run-by-run.  Counters are
+        updated in aggregate and match a scalar ``value_at`` loop over the
+        same records exactly.  Returns a list of per-run value chunks
+        (caller concatenates with type knowledge).
+        """
+        assert self.pos <= start <= stop <= self.n, (self.pos, start, stop, self.n)
+        self.skip_to(start)
+        m = min(self.levels)
+        chunks: List[Any] = []
+        if range_decode_fn is not None and self.boundary_hook is None:
+            if self.pos % m and self.pos < stop:
+                chunks.append(self._read_chunk(stop, range_decode_fn))  # partial head
+            # pointer-walk: collect the cell-byte segment of each full run
+            segs: List[Tuple[int, int]] = []  # (content_off, end_off)
+            count = 0
+            while self.pos % m == 0 and self.pos + m <= stop:
+                lv = levels_at(self.pos, self.levels)
+                content = self.off + 8 * len(lv)
+                (nxt,) = _U64.unpack_from(self.data, self.off + 8 * lv.index(m))
+                self.bytes_entries += content - self.off
+                segs.append((content, nxt))
+                count += m
+                self.pos += m
+                self.off = nxt
+            if segs:
+                mv = memoryview(self.data)
+                joined = bytes(mv[segs[0][0] : segs[0][1]]) if len(segs) == 1 else b"".join(
+                    [mv[a:b] for a, b in segs]
+                )
+                vals, end = range_decode_fn(joined, 0, count)
+                assert end == len(joined), "segment walk out of sync with cells"
+                self.cells_decoded += count
+                self.bytes_decoded += len(joined)
+                chunks.append(vals)
+        while self.pos < stop:
+            chunks.append(self._read_chunk(stop, range_decode_fn))
+        return chunks

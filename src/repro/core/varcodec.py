@@ -6,17 +6,29 @@ This is the binary wire format shared by every storage format in core/
 UTF-8 for strings, count-prefixed entries for arrays/maps, field-sequential
 records.
 
-Two decode paths exist on purpose:
+Three decode paths exist on purpose:
   * ``decode_cell``       — builds Python objects (the "Java object churn"
-                            path the paper measures in Fig. 8), and
+                            path the paper measures in Fig. 8),
   * ``skip_cell``         — advances the offset WITHOUT building objects,
                             which is what makes LazyRecord's skip() cheap
-                            when a column file has no skip blocks.
+                            when a column file has no skip blocks, and
+  * ``decode_range``      — the batch fast path.  Fixed-width types decode
+                            in a single ``np.frombuffer``; varints in a
+                            few vectorized passes (terminator-scan +
+                            segmented reduction); string/bytes walk length
+                            prefixes in a tight scalar loop to produce a
+                            ``(starts, lengths)`` offset pair over the raw
+                            buffer (``decode_ragged_range``) so consumers
+                            can gather payloads without copying them
+                            per-cell (offset walking itself is NOT
+                            vectorized — see ROADMAP open items).
 """
 from __future__ import annotations
 
 import struct
-from typing import Any, Tuple
+from typing import Any, List, Tuple
+
+import numpy as np
 
 from .schema import ColumnType
 
@@ -183,3 +195,153 @@ def skip_cell(typ: ColumnType, data: bytes, off: int) -> int:
             off = skip_cell(ftyp, data, off)
         return off
     raise ValueError(k)
+
+
+# ---------------------------------------------------------------------------
+# batch (range) decode — vectorized over N consecutive cells
+# ---------------------------------------------------------------------------
+
+_FIXED_DTYPE = {"float32": "<f4", "float64": "<f8", "bool": "u1"}
+_MAX_VARINT = 10  # 64 payload bits / 7 bits-per-byte, rounded up
+
+
+def _uvarint_ends(data: bytes, off: int, count: int) -> np.ndarray:
+    """Byte positions (relative to ``off``) of the final byte of each of the
+    next ``count`` uvarints.  Valid only when ``data[off:]`` starts with at
+    least ``count`` back-to-back varints (plain bodies / cblock payloads)."""
+    window = min(len(data), off + _MAX_VARINT * count) - off
+    b = np.frombuffer(data, np.uint8, window, off)
+    ends = np.flatnonzero((b & 0x80) == 0)[:count]
+    if len(ends) != count:
+        raise ValueError(f"expected {count} varints at offset {off}")
+    return ends
+
+
+def decode_uvarint_range(data: bytes, off: int, count: int) -> Tuple[np.ndarray, int]:
+    """Decode ``count`` consecutive uvarints -> (uint64 array, end offset)."""
+    if count == 0:
+        return np.empty(0, np.uint64), off
+    ends = _uvarint_ends(data, off, count)
+    last = int(ends[-1])
+    w = np.frombuffer(data, np.uint8, last + 1, off)
+    starts = np.empty(count, np.int64)
+    starts[0] = 0
+    starts[1:] = ends[:-1] + 1
+    # segment-relative 7-bit shifts; contributions occupy disjoint bit ranges
+    # so the segmented sum equals the bitwise OR of the shifted groups.
+    cell = np.repeat(np.arange(count), ends - starts + 1)
+    shifts = ((np.arange(last + 1) - starts[cell]) * 7).astype(np.uint64)
+    contrib = (w & 0x7F).astype(np.uint64) << shifts
+    return np.add.reduceat(contrib, starts), off + last + 1
+
+
+def decode_varint_range(data: bytes, off: int, count: int) -> Tuple[np.ndarray, int]:
+    """Decode ``count`` zigzag varints -> (int64 array, end offset)."""
+    u, end = decode_uvarint_range(data, off, count)
+    vals = (u >> np.uint64(1)).astype(np.int64) ^ -((u & np.uint64(1)).astype(np.int64))
+    return vals, end
+
+
+def decode_fixed_range(kind: str, data: bytes, off: int, count: int) -> Tuple[np.ndarray, int]:
+    """float32/float64/bool cells are fixed width: one ``np.frombuffer``."""
+    dt = np.dtype(_FIXED_DTYPE[kind])
+    arr = np.frombuffer(data, dt, count, off).copy()
+    if kind == "bool":
+        arr = arr != 0
+    return arr, off + count * dt.itemsize
+
+
+def decode_ragged_range(data: bytes, off: int, count: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Walk ``count`` length-prefixed cells (string/bytes) -> payload
+    ``(starts, lengths)`` int64 arrays into ``data`` plus the end offset.
+    The payload bytes are never copied — consumers gather straight from the
+    file buffer (one fancy-index for equal-length cells)."""
+    starts = np.empty(count, np.int64)
+    lengths = np.empty(count, np.int64)
+    o = off
+    for i in range(count):
+        n = data[o]
+        if n < 0x80:
+            o += 1
+        else:
+            n, o = read_uvarint(data, o)
+        starts[i] = o
+        lengths[i] = n
+        o += n
+    return starts, lengths, o
+
+
+def skip_range(typ: ColumnType, data: bytes, off: int, count: int) -> int:
+    """Advance past ``count`` cells without materializing values (the batch
+    analog of ``skip_cell``; same traversal, aggregated)."""
+    if count == 0:
+        return off
+    k = typ.kind
+    if k in ("int32", "int64"):
+        return off + int(_uvarint_ends(data, off, count)[-1]) + 1
+    if k in _FIXED_DTYPE:
+        return off + count * np.dtype(_FIXED_DTYPE[k]).itemsize
+    if k in ("string", "bytes"):
+        _, _, end = decode_ragged_range(data, off, count)
+        return end
+    for _ in range(count):
+        off = skip_cell(typ, data, off)
+    return off
+
+
+def decode_range(typ: ColumnType, data: bytes, off: int, count: int) -> Tuple[Any, int]:
+    """Decode ``count`` consecutive cells of ``typ`` starting at ``off``.
+
+    Returns ``(values, end_offset)`` where values is a NumPy array for
+    numeric/bool columns (int32 -> int32, int64 -> int64, floats/bool
+    native, decoded in a few vectorized passes), a list of str/bytes for
+    string columns (offsets from ``decode_ragged_range``, then one slice
+    per cell), and a list of Python objects for complex types (loop
+    fallback).
+    """
+    k = typ.kind
+    if count == 0:
+        return empty_values(typ), off
+    if k in ("int32", "int64"):
+        vals, end = decode_varint_range(data, off, count)
+        return (vals.astype(np.int32) if k == "int32" else vals), end
+    if k in _FIXED_DTYPE:
+        return decode_fixed_range(k, data, off, count)
+    if k in ("string", "bytes"):
+        starts, lengths, end = decode_ragged_range(data, off, count)
+        s, l = starts.tolist(), lengths.tolist()
+        if k == "string":
+            return [data[a : a + n].decode("utf-8") for a, n in zip(s, l)], end
+        return [bytes(data[a : a + n]) for a, n in zip(s, l)], end
+    out: List[Any] = []
+    for _ in range(count):
+        v, off = decode_cell(typ, data, off)
+        out.append(v)
+    return out, off
+
+
+def empty_values(typ: ColumnType) -> Any:
+    """The zero-length result ``decode_range`` would produce for ``typ``."""
+    k = typ.kind
+    if k == "int32":
+        return np.empty(0, np.int32)
+    if k == "int64":
+        return np.empty(0, np.int64)
+    if k == "bool":
+        return np.empty(0, bool)
+    if k in _FIXED_DTYPE:
+        return np.empty(0, np.dtype(_FIXED_DTYPE[k]))
+    return []
+
+
+def concat_values(typ: ColumnType, chunks: List[Any]) -> Any:
+    """Concatenate per-chunk ``decode_range`` results into one batch."""
+    chunks = [c for c in chunks if len(c)]
+    if not chunks:
+        return empty_values(typ)
+    if isinstance(chunks[0], np.ndarray):
+        return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+    out: List[Any] = []
+    for c in chunks:
+        out.extend(c)
+    return out

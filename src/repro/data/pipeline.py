@@ -4,6 +4,16 @@ The paper's storage wins land here: projection pushdown (only the token +
 mask columns are opened), lazy decode, split->host co-location (CPP analog),
 and a prefetch thread so storage decode overlaps the train step.
 
+Batches are built on the columnar fast path: sampled ``(split, record)`` ids
+are grouped by split and sorted within each split (respecting the
+forward-only monotone readers — no reopen-on-AssertionError churn), each
+group is fetched with ONE ``TokenSplit.record_batch`` call (bulk column
+decode + one unpack + one dictionary gather), and rows land in preallocated
+``(B, S)`` arrays.  ``decode`` selects the token decode world: "np" (host
+vectorized), "py" (per-element loop, Fig. 8's slow world), "packed" (raw
+words, caller decodes), or "device" (packed words are shipped as-is and the
+Pallas ``bitunpack``/``dict_decode`` kernels expand them on-accelerator).
+
 Batch layout: {"tokens": (B,S) int32, "labels": (B,S) int32,
                "loss_mask": (B,S) float32} — labels are next-token shifted,
 with the final position masked.
@@ -63,31 +73,44 @@ class HostPipeline:
         self._stop = threading.Event()
 
     # -- core synchronous iteration ----------------------------------------
+    MAX_OPEN_SPLITS = 3
+
     def _split(self, sid: int) -> TokenSplit:
-        if sid not in self._open:
-            # keep at most 2 splits open (forward-only readers)
-            if len(self._open) > 2:
-                self._open.clear()
-            self._open[sid] = self.corpus.open_split(sid)
-        return self._open[sid]
+        sp = self._open.pop(sid, None)
+        if sp is None:
+            # oldest-first eviction; the requested split is never evicted
+            # (it is inserted last) and live splits survive until the cap.
+            while len(self._open) >= self.MAX_OPEN_SPLITS:
+                del self._open[next(iter(self._open))]
+            sp = self.corpus.open_split(sid)
+        self._open[sid] = sp  # (re-)insert last == most recently used
+        return sp
 
     def _make_batch(self) -> Dict[str, np.ndarray]:
-        toks, masks = [], []
         it = iter(self.sampler)
-        for _ in range(self.batch):
-            sid, rid = next(it)
+        draws = [next(it) for _ in range(self.batch)]
+        by_split: Dict[int, list] = {}
+        for slot, (sid, rid) in enumerate(draws):
+            by_split.setdefault(sid, []).append((rid, slot))
+        tokens = mask = None
+        for sid, rid_slots in by_split.items():
+            # sorted ids keep the forward-only monotone readers happy; the
+            # whole group decodes in one record_batch call.
+            rid_slots.sort()
+            uniq = sorted({r for r, _ in rid_slots})
             sp = self._split(sid)
-            try:
-                t, m = sp.record(rid, decode=self.decode)
-            except AssertionError:
-                # forward-only reader was past rid (resume case): reopen
-                self._open.pop(sid, None)
+            if sp.position > uniq[0]:
+                # reader already past the lowest id (resume / new epoch): reopen
+                del self._open[sid]
                 sp = self._split(sid)
-                t, m = sp.record(rid, decode=self.decode)
-            toks.append(t)
-            masks.append(m)
-        tokens = np.stack(toks)
-        mask = np.stack(masks)
+            t, m = sp.record_batch(uniq, decode=self.decode)
+            row_of = {r: i for i, r in enumerate(uniq)}
+            if tokens is None:
+                tokens = np.empty((self.batch,) + t.shape[1:], t.dtype)
+                mask = np.empty((self.batch,) + m.shape[1:], m.dtype)
+            for rid, slot in rid_slots:
+                tokens[slot] = t[row_of[rid]]
+                mask[slot] = m[row_of[rid]]
         labels = np.concatenate(
             [tokens[:, 1:], np.zeros((tokens.shape[0], 1), np.int32)], axis=1
         )

@@ -11,10 +11,18 @@ token streams:
       tokens.dict.npy int32 dictionary for this split (sorted unique ids)
 
 Decode paths (Fig. 8's three worlds):
-  * decode_py       — per-element Python loop      ("Java object churn")
-  * decode_np       — vectorized numpy shifts      ("C++ cast the buffer")
-  * kernels.bitunpack + dict_decode — on-device VPU unpack (beyond-paper:
-    the compressed codes travel host->HBM, saving PCIe bandwidth)
+  * decode="py"     — per-element Python loop      ("Java object churn")
+  * decode="np"     — vectorized numpy shifts      ("C++ cast the buffer")
+  * decode="packed" — raw packed words, caller decodes
+  * decode="device" — kernels.bitunpack + dict_decode: on-device VPU unpack
+    (beyond-paper: the compressed codes travel host->HBM, saving PCIe
+    bandwidth; the gather runs as a Pallas kernel)
+
+Batch fast path: ``TokenSplit.record_batch(ids)`` fetches every packed-code
+cell of the batch via ``ColumnFileReader.read_many`` (bulk columnar decode),
+then does ONE ``unpack_codes``-style vectorized unpack and ONE dictionary
+gather for the whole batch — no per-record Python loop in front of the
+training step.
 """
 from __future__ import annotations
 
@@ -62,6 +70,34 @@ def unpack_codes(raw: bytes, bits: int, n: int) -> np.ndarray:
     mask = np.uint32((1 << bits) - 1)
     lanes = (words[:, None] >> shifts) & mask
     return lanes.reshape(-1)[:n].astype(np.int32)
+
+
+def unpack_codes_batch(words: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """words: (B, W) uint32 -> (B, n) int32 codes, one vectorized pass for
+    the whole batch (per-cell pad lanes are sliced off per row)."""
+    r = 32 // bits
+    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, None, :]
+    mask = np.uint32((1 << bits) - 1)
+    lanes = (words[:, :, None] >> shifts) & mask
+    return lanes.reshape(words.shape[0], -1)[:, :n].astype(np.int32)
+
+
+def device_decode_batch(words: np.ndarray, bits: int, n: int, dictionary: np.ndarray) -> np.ndarray:
+    """decode="device": ship packed words to the accelerator as-is; the
+    Pallas kernels bit-unpack (VPU shifts) and dictionary-gather (MXU
+    one-hot matmul) there.  Interpret mode runs the same kernels on CPU."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    interp = jax.default_backend() != "tpu"
+    b = words.shape[0]
+    codes = ops.bitunpack(jnp.asarray(words.reshape(-1)), bits, interpret=interp)
+    codes = codes.reshape(b, -1)[:, :n]
+    table = jnp.asarray(dictionary.astype(np.int32))
+    toks = ops.dict_decode(codes.reshape(-1), table, interpret=interp)
+    return np.asarray(toks.reshape(b, n), np.int32)
 
 
 def pack_bits(mask: np.ndarray) -> bytes:
@@ -185,6 +221,9 @@ class TokenSplit:
         return self.reader.n_records
 
     def record(self, i: int, decode: str = "np") -> Tuple[np.ndarray, np.ndarray]:
+        if decode == "device":
+            t, m = self.record_batch([i], decode="device")
+            return t[0], m[0]
         raw = self.reader.readers["tokens"].value_at(i)
         n = self.reader.readers["n_tokens"].value_at(i)
         msk = unpack_bits(self.reader.readers["loss_mask"].value_at(i), n)
@@ -196,6 +235,50 @@ class TokenSplit:
         else:
             toks = self.dictionary[codes]
         return toks.astype(np.int32), msk
+
+    def record_batch(self, ids, decode: str = "np") -> Tuple[np.ndarray, np.ndarray]:
+        """Batch fetch of sorted, strictly-increasing record ids.
+
+        All three columns are pulled through the bulk ``read_many`` path,
+        then the whole batch gets ONE vectorized unpack and ONE dictionary
+        gather (or one kernel launch for decode="device").  Returns
+        ``(tokens, loss_mask)`` shaped ``(B, seq_len)`` int32 — or
+        ``(B, W)`` uint32 packed words for decode="packed".
+        """
+        ids = list(ids)
+        assert all(b > a for a, b in zip(ids, ids[1:])), "ids must be strictly increasing"
+        rd = self.reader.readers
+        raws = rd["tokens"].read_many(ids)
+        ns = np.asarray(rd["n_tokens"].read_many(ids))
+        msk_raw = rd["loss_mask"].read_many(ids)
+        b = len(ids)
+        if b == 0:
+            z = np.empty((0, self.seq_len), np.int32)
+            return z, z.copy()
+        n = int(ns[0])
+        assert (ns == n).all(), "sequences in one split share seq_len"
+        mask = np.unpackbits(
+            np.frombuffer(b"".join(msk_raw), np.uint8).reshape(b, -1),
+            axis=1, bitorder="little",
+        )[:, :n].astype(np.int32)
+        words = np.frombuffer(b"".join(raws), dtype="<u4").reshape(b, -1)
+        if decode == "packed":
+            return words.copy(), mask
+        if decode == "device":
+            return device_decode_batch(words, self.bits, n, self.dictionary), mask
+        codes = unpack_codes_batch(words, self.bits, n)
+        if decode == "py":  # the "Java" path, for Fig. 8 benchmarks
+            toks = np.asarray(
+                [[int(self.dictionary[c]) for c in row] for row in codes], np.int32
+            )
+        else:
+            toks = self.dictionary[codes].astype(np.int32)
+        return toks, mask
+
+    @property
+    def position(self) -> int:
+        """Lowest record id still readable by the forward-only readers."""
+        return self.reader.readers["tokens"].position
 
 
 class TokenCorpus:

@@ -2,6 +2,9 @@
 codec roundtrips over arbitrary typed values, skip-list positional access,
 bit-packing, placement coverage, compaction kernels."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ARRAY, BOOL, BYTES, FLOAT64, INT32, INT64, MAP, RECORD, STRING
