@@ -16,7 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger datasets")
     ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
-                    "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode")
+                    "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode,"
+                    "sharded_scan")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     mul = 4 if args.full else 1
@@ -24,6 +25,7 @@ def main() -> None:
     from .common import Csv
     from . import batch_decode as bd
     from . import deser_and_kernels as dk
+    from . import sharded_scan as ss
     from . import storage_formats as sf
 
     csv = Csv()
@@ -39,6 +41,7 @@ def main() -> None:
         ("kernels", lambda: dk.kernels(csv)),
         ("pipeline", lambda: dk.pipeline(csv, n_docs=400 * mul)),
         ("batch_decode", lambda: bd.batch_decode(csv, n=50_000 * mul)),
+        ("sharded_scan", lambda: ss.sharded_scan(csv, n=24_000 * mul)),
     ]
     failures = []
     for name, fn in jobs:

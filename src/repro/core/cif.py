@@ -12,23 +12,33 @@ granularity — CIF's headline win over SEQ/RCFile in Fig. 7).
 
 Batch fast path: ``SplitReader.read_range``/``read_batch`` and
 ``CIFReader.scan_batches`` return *columnar* dicts of arrays (NumPy for
-numeric/bool columns, lists otherwise) decoded via the vectorized
-``ColumnFileReader.read_range`` — no per-record Python object churn.
-``iter_eager`` is implemented on top of it: records are materialized from
-column chunks, so eager scans decode whole spans per column in one pass.
+numeric/bool columns, zero-copy ``RaggedColumn`` views for string/bytes,
+lists otherwise) decoded via the vectorized ``ColumnFileReader.read_range``
+— no per-record Python object churn.  ``iter_eager`` is implemented on top
+of it: records are materialized from column chunks, so eager scans decode
+whole spans per column in one pass.
+
+Sharded scans: ``scan``/``scan_batches`` accept ``host=``/``n_hosts=``
+(or an explicit ``placement=``) and then visit only the splits that host
+*primarily* owns under the ColumnPlacementPolicy analog — the union of all
+hosts' shards covers every split exactly once, and every read is CPP-local.
+``ScanStats`` updates are lock-protected so per-host shards may be scanned
+from concurrent threads against one reader.
 """
 from __future__ import annotations
 
 import json
 import os
+import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .colfile import ColumnFileReader, ReadCounters
 from .cof import is_split_dir
 from .lazy import EagerRecord, LazyRecord, Record
+from .placement import Placement
 from .schema import Schema
 
 EAGER_CHUNK = 1024  # records decoded per column pass in iter_eager
@@ -121,6 +131,74 @@ class SplitReader:
         stats.records_scanned += self.n_records
 
 
+class BatchColumns:
+    """Column-lazy view of one record span ``[start, stop)`` of a split —
+    the ``columns`` argument handed to batch map functions.
+
+    Acts like a ``Dict[str, array]``: ``cols["url"]`` bulk-decodes that
+    column's span on FIRST access (projection pushdown at column-batch
+    granularity — a column a map function never touches is never decoded),
+    returning a NumPy array / ``RaggedColumn`` / list per the ``read_range``
+    contract.  ``sparse(name, rows[, key])`` point-reads a row subset of an
+    untouched column through ``read_many`` (and the DCSL single-key
+    ``lookup`` when ``key`` is given) — the lazy-materialization analog for
+    batch mode: decode the predicate column vectorized, then fetch the
+    payload column only where the predicate hit.
+    """
+
+    __slots__ = ("_sr", "start", "stop", "_cache")
+
+    def __init__(self, sr: "SplitReader", start: int, stop: int):
+        self._sr = sr
+        self.start = start
+        self.stop = stop
+        self._cache: Dict[str, Any] = {}
+
+    @property
+    def n_rows(self) -> int:
+        return self.stop - self.start
+
+    def keys(self):
+        return list(self._sr.columns)
+
+    def __iter__(self):
+        return iter(self._sr.columns)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._sr.columns
+
+    def __getitem__(self, name: str) -> Any:
+        v = self._cache.get(name)
+        if v is None:
+            r = self._sr.readers[name]
+            assert r.position <= self.start, (
+                f"column {name!r} already read past this span "
+                "(sparse() then full access is not supported)"
+            )
+            v = r.read_range(self.start, self.stop)
+            self._cache[name] = v
+        return v
+
+    def get(self, name: str, default: Any = None) -> Any:
+        return self[name] if name in self._sr.columns else default
+
+    def sparse(self, name: str, rows: Sequence[int], key: Optional[str] = None) -> List[Any]:
+        """Fetch ``rows`` (span-relative, strictly increasing) of ``name``.
+
+        With ``key`` on a DCSL map column only that key's entry is decoded
+        per row (the paper's §5.3 fast path); otherwise the rows decode via
+        ``read_many``.  Skipped rows cost skip-list jumps, not decodes.
+        """
+        ids = [self.start + int(r) for r in rows]
+        assert all(b > a for a, b in zip(ids, ids[1:])), "rows must be strictly increasing"
+        assert not ids or (self.start <= ids[0] and ids[-1] < self.stop), "rows outside span"
+        r = self._sr.readers[name]
+        if key is not None:
+            return r.lookup_many(ids, key)
+        vals = r.read_many(ids)
+        return vals.tolist() if isinstance(vals, np.ndarray) else list(vals)
+
+
 class CIFReader:
     """Scans a COF dataset with projection pushdown.
 
@@ -141,6 +219,7 @@ class CIFReader:
             assert c in self.schema, f"unknown column {c}"
         self.lazy = lazy
         self.stats = ScanStats()
+        self._stats_lock = threading.Lock()
 
     # getSplits() analog — optionally restricted to an assigned subset so a
     # distributed scan can honor the placement policy (placement.py).
@@ -151,28 +230,118 @@ class CIFReader:
         want = set(split_ids)
         return [(i, d) for i, d in all_splits if i in want]
 
+    def shard_splits(
+        self,
+        host: int,
+        n_hosts: Optional[int] = None,
+        placement: Optional[Placement] = None,
+    ) -> List[Tuple[int, str]]:
+        """The splits ``host`` primarily owns under the CPP analog.
+
+        Disjoint across hosts and jointly exhaustive: the union of every
+        host's shard is the full split list, each split exactly once, and
+        each shard is local to its host by Placement's construction.
+        """
+        all_splits = list_splits(self.root)
+        placement = placement or Placement(
+            n_splits=len(all_splits), n_hosts=n_hosts if n_hosts is not None else 1
+        )
+        assert placement.n_splits == len(all_splits), "placement/dataset mismatch"
+        assert 0 <= host < placement.n_hosts, (
+            f"host {host} outside placement of {placement.n_hosts} hosts "
+            "(a miswired host id would silently scan an empty shard)"
+        )
+        own = set(placement.splits_of(host))
+        return [sd for idx, sd in enumerate(all_splits) if idx in own]
+
+    def _scan_splits(
+        self,
+        split_ids: Optional[Sequence[int]],
+        host: Optional[int],
+        n_hosts: Optional[int],
+        placement: Optional[Placement],
+    ) -> List[Tuple[int, str]]:
+        if host is None:
+            return self.splits(split_ids)
+        assert split_ids is None, "pass either split_ids or host/n_hosts, not both"
+        return self.shard_splits(host, n_hosts, placement)
+
     def open_split(self, split_dir: str) -> SplitReader:
         return SplitReader(split_dir, self.schema, self.columns)
 
-    def scan(self, split_ids: Optional[Sequence[int]] = None) -> Iterator[Record]:
-        for _, sdir in self.splits(split_ids):
+    def absorb_stats(self, sr: SplitReader) -> None:
+        """Fold a finished split's counters into ``stats`` (thread-safe, so
+        concurrent per-host shard scans may share this reader)."""
+        with self._stats_lock:
+            sr.finish_stats(self.stats)
+
+    def scan(
+        self,
+        split_ids: Optional[Sequence[int]] = None,
+        *,
+        host: Optional[int] = None,
+        n_hosts: Optional[int] = None,
+        placement: Optional[Placement] = None,
+    ) -> Iterator[Record]:
+        for _, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
             sr = self.open_split(sdir)
             it = sr.iter_lazy() if self.lazy else sr.iter_eager()
             for rec in it:
                 yield rec
-            sr.finish_stats(self.stats)
+            self.absorb_stats(sr)
 
     def scan_batches(
         self,
         batch_size: int = EAGER_CHUNK,
         split_ids: Optional[Sequence[int]] = None,
+        *,
+        host: Optional[int] = None,
+        n_hosts: Optional[int] = None,
+        placement: Optional[Placement] = None,
     ) -> Iterator[Dict[str, Any]]:
         """Columnar scan: yields ``{column: values}`` dicts of up to
-        ``batch_size`` records (arrays for numeric/bool columns, lists
-        otherwise), with projection pushdown and ``ScanStats`` accounting
-        identical to a record-at-a-time eager scan."""
-        for _, sdir in self.splits(split_ids):
+        ``batch_size`` records (arrays for numeric/bool columns, zero-copy
+        ``RaggedColumn`` views for string/bytes, lists otherwise), with
+        projection pushdown and ``ScanStats`` accounting identical to a
+        record-at-a-time eager scan.  With ``host=`` (plus ``n_hosts=`` or
+        ``placement=``) the scan covers only that host's CPP-local shard —
+        per-host iterators partition the dataset exactly."""
+        for _, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
             sr = self.open_split(sdir)
             for start in range(0, sr.n_records, batch_size):
                 yield sr.read_range(start, min(start + batch_size, sr.n_records))
-            sr.finish_stats(self.stats)
+            self.absorb_stats(sr)
+
+    # -- MapReduce adapters (run_job inputs) ---------------------------------
+    def job_inputs(
+        self, batch_size: int = EAGER_CHUNK
+    ) -> Tuple[List[int], Callable[[int], Iterator[BatchColumns]]]:
+        """``(split_ids, open_split_batches)`` for batch-mode ``run_job``.
+
+        Each task opens its own ``SplitReader`` (no shared mutable reader
+        state between concurrent map tasks) and yields lazy ``BatchColumns``
+        spans; stats absorption is serialized via ``absorb_stats``.
+        """
+        split_map = dict(self.splits())
+
+        def open_split_batches(split_id: int) -> Iterator[BatchColumns]:
+            sr = self.open_split(split_map[split_id])
+            for start in range(0, sr.n_records, batch_size):
+                yield BatchColumns(sr, start, min(start + batch_size, sr.n_records))
+            self.absorb_stats(sr)
+
+        return sorted(split_map), open_split_batches
+
+    def job_records(self) -> Tuple[List[int], Callable[[int], Iterator[Tuple[Any, Record]]]]:
+        """``(split_ids, open_split)`` for record-at-a-time ``run_job`` —
+        the compatibility path (lazy or eager per this reader's flag)."""
+        split_map = dict(self.splits())
+
+        def open_split(split_id: int) -> Iterator[Tuple[Any, Record]]:
+            sr = self.open_split(split_map[split_id])
+            it = sr.iter_lazy() if self.lazy else sr.iter_eager()
+            for rec in it:
+                yield None, rec
+            self.absorb_stats(sr)
+
+        return sorted(split_map), open_split

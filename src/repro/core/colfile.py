@@ -33,9 +33,11 @@ from .dcsl import DICT_BLOCK, DCSLColumnReader, DCSLColumnWriter
 from .schema import ColumnType
 from .skiplist import SkipListReader, SkipListWriter
 from .varcodec import (
+    RaggedColumn,
     concat_values,
     decode_cell,
     decode_range,
+    decode_ragged_lanes,
     empty_values,
     encode_cell,
     read_uvarint,
@@ -326,7 +328,8 @@ class ColumnFileReader:
     def read_range(self, start: int, stop: int) -> Any:
         """Bulk-decode records ``[start, stop)`` — the batch fast path.
 
-        Values come back as a NumPy array for numeric/bool columns and a
+        Values come back as a NumPy array for numeric/bool columns, a
+        zero-copy ``RaggedColumn`` view for string/bytes columns, and a
         Python list otherwise (see ``varcodec.decode_range``).  Access must
         be monotone, exactly like ``value_at``; counters advance by the same
         aggregate amounts a scalar loop over the span would produce.
@@ -338,8 +341,18 @@ class ColumnFileReader:
         if k == "plain":
             return self._plain_range(start, stop)
         if k == "skiplist":
+            lanes = None
+            if self.typ.kind in ("string", "bytes"):
+                kind = self.typ.kind
+
+                def lanes(d, offs, counts):
+                    s, l, ends = decode_ragged_lanes(d, offs, counts)
+                    return RaggedColumn(d, s, l, kind), ends
+
             chunks = self._slr.read_range(
-                start, stop, lambda d, o, n: decode_range(self.typ, d, o, n)
+                start, stop,
+                lambda d, o, n: decode_range(self.typ, d, o, n),
+                range_decode_lanes=lanes,
             )
             self._sync_sl_counters()
             return concat_values(self.typ, chunks)
@@ -390,6 +403,17 @@ class ColumnFileReader:
             return v
         m = self.value_at(index)
         return m.get(key) if isinstance(m, dict) else None
+
+    def lookup_many(self, indices: Sequence[int], key: str) -> List[Optional[Any]]:
+        """Batched sparse single-key access over a strictly-increasing index
+        set.  DCSL hops its skip-pointer chain between groups (O(1) per gap
+        instead of per-cell walking); other kinds fall back to a lookup
+        loop."""
+        if self.kind == "dcsl":
+            vals = self._dcsl.lookup_many(indices, key)
+            self._sync_dcsl_counters()
+            return vals
+        return [self.lookup(i, key) for i in indices]
 
     def _sync_sl_counters(self, slr: Optional[SkipListReader] = None) -> None:
         s = slr if slr is not None else self._slr

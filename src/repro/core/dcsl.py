@@ -13,11 +13,14 @@ with the top skip level so every monotone skip visits it (see skiplist.py).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import struct
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .schema import ColumnType
-from .skiplist import LEVELS, SkipListReader, SkipListWriter
+from .skiplist import LEVELS, SkipListReader, SkipListWriter, levels_at
 from .varcodec import decode_cell, encode_cell, read_uvarint, skip_cell, write_uvarint
+
+_U64 = struct.Struct("<Q")
 
 DICT_BLOCK = 1000
 assert DICT_BLOCK % max(LEVELS) == 0 or DICT_BLOCK == max(LEVELS)
@@ -85,6 +88,7 @@ class DCSLColumnReader:
         self._keys: List[str] = []
         self._dict_index = -1
         self.dicts_loaded = 0
+        self._chain: Optional[List[int]] = None  # per-group start offsets
         self._slr = SkipListReader(
             data, n_records, self._decode, self._skip, boundary_hook=self._hook
         )
@@ -120,9 +124,26 @@ class DCSLColumnReader:
         return out, off
 
     def _skip(self, data: bytes, off: int) -> int:
-        n, off = read_uvarint(data, off)
+        b = data[off]
+        n, off = (b, off + 1) if b < 0x80 else read_uvarint(data, off)
+        if self.typ.value.kind in ("string", "bytes"):
+            # inline hot path: key codes and payload lengths are almost
+            # always single-byte uvarints, so skip without call overhead.
+            for _ in range(n):
+                while data[off] & 0x80:  # key code
+                    off += 1
+                off += 1
+                b = data[off]  # payload length
+                if b < 0x80:
+                    off += 1 + b
+                else:
+                    ln, off = read_uvarint(data, off)
+                    off += ln
+            return off
         for _ in range(n):
-            _, off = read_uvarint(data, off)
+            while data[off] & 0x80:
+                off += 1
+            off += 1
             off = skip_cell(self.typ.value, data, off)
         return off
 
@@ -144,10 +165,10 @@ class DCSLColumnReader:
     def position(self) -> int:
         return self._slr.pos
 
-    def lookup(self, index: int, key: str) -> Optional[Any]:
-        """Decode ONLY the entry for `key` at record `index` (others skipped)."""
+    def _lookup_here(self, key: str) -> Optional[Any]:
+        """Decode ONLY the entry for ``key`` at the reader's current record
+        (others skipped); advances the reader past the cell."""
         slr = self._slr
-        slr.skip_to(index)
         data, off = slr.data, slr._content_off()
         try:
             code = self._keys.index(key)
@@ -166,6 +187,121 @@ class DCSLColumnReader:
         slr.off = off
         slr.cells_decoded += 1
         return found
+
+    def lookup(self, index: int, key: str) -> Optional[Any]:
+        """Decode ONLY the entry for `key` at record `index` (others skipped)."""
+        self._slr.skip_to(index)
+        return self._lookup_here(key)
+
+    def _nlv(self, pos: int) -> int:
+        """Number of skip entries at boundary ``pos``."""
+        if self._slr.levels == LEVELS:
+            return 3 if pos % 1000 == 0 else (2 if pos % 100 == 0 else 1)
+        return len(levels_at(pos, self._slr.levels))
+
+    def _ensure_chain(self) -> bool:
+        """Build the per-group start-offset table by following the
+        smallest-level skip pointers once (one 8-byte read per group, zero
+        cell parsing).  Only possible from a fresh reader; returns False if
+        the reader already advanced (callers fall back to ``lookup``)."""
+        if self._chain is not None:
+            return True
+        slr = self._slr
+        if slr.pos != 0 or slr.n == 0:
+            return False
+        m = min(slr.levels)
+        fast = slr.levels == LEVELS
+        u64 = _U64.unpack_from
+        data = slr.data
+        n_groups = (slr.n + m - 1) // m
+        chain = [0] * n_groups
+        off = 0
+        entry_bytes = 0
+        for g in range(n_groups - 1):
+            pos = g * m
+            if fast:
+                nlv = 3 if pos % 1000 == 0 else (2 if pos % 100 == 0 else 1)
+            else:
+                lv = levels_at(pos, slr.levels)
+                nlv = len(lv)
+            # the min level is the last entry slot (levels are descending)
+            slot = nlv - 1 if fast else lv.index(m)
+            (off,) = u64(data, off + 8 * slot)
+            entry_bytes += 8 * nlv
+            chain[g + 1] = off
+        slr.bytes_entries += entry_bytes  # skip-entry bytes the walk touched
+        self._chain = chain
+        return True
+
+    def _ensure_dict(self, idx: int) -> None:
+        """Load the key dictionary of ``idx``'s block straight from the
+        chain (blocks are chain-aligned), skipping intermediate blocks no
+        lookup lands in."""
+        blk = idx - idx % self.block
+        if self._dict_index == blk:
+            return
+        slr = self._slr
+        start = self._chain[blk // min(slr.levels)]
+        self._hook(blk, slr.data, start + 8 * self._nlv(blk))
+
+    def lookup_many(self, indices: Sequence[int], key: str) -> List[Optional[Any]]:
+        """Sparse single-key fetch over strictly-increasing ``indices``.
+
+        The batch analog of ``lookup``: the smallest-level skip POINTER
+        CHAIN is materialized once per reader (``_ensure_chain`` — an
+        8-byte read per ``min(LEVELS)`` records, zero cell parsing), so
+        every index costs one direct jump to its group boundary plus an
+        in-group tail walk of fewer than ``min(LEVELS)`` cells, with zero
+        value decodes except the requested key's.  Dictionary blocks are
+        chain-aligned and load on demand per block.
+        """
+        if not self._ensure_chain():
+            return [self.lookup(i, key) for i in indices]
+        slr = self._slr
+        data = slr.data
+        m = min(slr.levels)
+        vtyp = self.typ.value
+        skip = self._skip
+        chain = self._chain
+        out: List[Optional[Any]] = []
+        for idx in indices:
+            assert slr.pos <= idx < slr.n, (slr.pos, idx, slr.n)
+            group = idx - idx % m
+            if slr.pos <= group:
+                # direct jump: land on the group boundary and consume it
+                self._ensure_dict(idx)
+                off = chain[group // m] + 8 * self._nlv(group)
+                if group % self.block == 0:
+                    off = self._hook(group, data, off)
+                slr.pos = group
+            else:
+                self._ensure_dict(idx)
+                off = slr.off
+            gap = idx - slr.pos
+            if gap:  # in-group tail: < m flat cell skips
+                o0 = off
+                for _ in range(gap):
+                    off = skip(data, off)
+                slr.bytes_skipped += off - o0
+                slr.cells_skipped += gap
+            # decode ONLY `key` at idx (same scan as _lookup_here)
+            try:
+                code = self._keys.index(key)
+            except ValueError:
+                code = -1
+            n, off = read_uvarint(data, off)
+            found = None
+            for _ in range(n):
+                c, off = read_uvarint(data, off)
+                if c == code and found is None:
+                    found, off = decode_cell(vtyp, data, off)
+                else:
+                    off = skip_cell(vtyp, data, off)
+            slr.pos = idx + 1
+            slr.off = off
+            slr.cells_decoded += 1
+            out.append(found)
+        return out
 
     @property
     def counters(self) -> "SkipListReader":

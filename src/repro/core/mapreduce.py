@@ -5,20 +5,44 @@ phase-level timing so benchmarks can report the paper's "map time" vs "total
 time" split (Table 1).  Hosts process splits per the ColumnPlacementPolicy
 analog; a WorkQueue provides speculative re-execution of dead hosts' splits.
 
-This executor is intentionally single-process (the container has one core);
-`map_time` aggregates per-split wall time exactly like the paper divides
-total map-task time by slots.
+Two map-side execution modes share one scheduler:
+
+  * record mode (compatibility) — ``open_split(split_id)`` yields
+    ``(key, value)`` pairs and ``map_fn`` runs once per record (the paper's
+    RecordReader world, incl. lazy records).
+  * batch mode (the fast path) — ``open_split_batches(split_id)`` yields
+    columnar ``BatchColumns`` spans straight off ``SplitReader.read_range``
+    and ``map_batch_fn(split_id, columns, emit)`` runs once per span, so
+    map functions consume whole NumPy arrays / ``RaggedColumn`` views with
+    no per-record ``Record`` objects at all.
+
+Concurrency: ``n_workers > 1`` drives the WorkQueue from a
+``ThreadPoolExecutor`` with one worker per live host, so work stealing,
+dead-host takeover, and straggler mitigation actually overlap and
+``JobResult.total_time`` reflects wall-clock concurrency (``map_time``
+stays the aggregate per-slot time, like the paper divides total map-task
+time by slots).  Map outputs are folded into the shuffle in split order
+AFTER the barrier, so job output is bit-identical to a serial run no matter
+how the claim/completion race resolves.  Reducer partitioning routes
+through ``placement.stable_partition`` (sha256), not the builtin
+PYTHONHASHSEED-salted ``hash``, so partition assignment is reproducible
+across processes.
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
-from .placement import Placement, WorkQueue
+import numpy as np
+
+from .placement import Placement, WorkQueue, stable_partition
 
 MapFn = Callable[[Any, Any, Callable[[Any, Any], None]], None]
+MapBatchFn = Callable[[int, Any, Callable[[Any, Any], None]], None]
 ReduceFn = Callable[[Any, List[Any], Callable[[Any, Any], None]], None]
 
 
@@ -33,66 +57,133 @@ class JobResult:
     map_output_records: int
     host_of_split: Dict[int, int] = field(default_factory=dict)
     remote_reads: int = 0
+    mode: str = "records"  # "records" | "batches"
+    n_workers: int = 1
 
 
 def run_job(
     split_ids: List[int],
-    open_split: Callable[[int], Iterator[Tuple[Any, Any]]],
-    map_fn: MapFn,
+    open_split: Optional[Callable[[int], Iterator[Tuple[Any, Any]]]] = None,
+    map_fn: Optional[MapFn] = None,
     reduce_fn: Optional[ReduceFn] = None,
     n_reducers: int = 1,
     combiner: Optional[ReduceFn] = None,
     n_hosts: int = 1,
     dead_hosts: Optional[set] = None,
     placement: Optional[Placement] = None,
+    *,
+    open_split_batches: Optional[Callable[[int], Iterator[Any]]] = None,
+    map_batch_fn: Optional[MapBatchFn] = None,
+    n_workers: int = 1,
 ) -> JobResult:
     """Execute a MapReduce job.
 
-    open_split(split_id) yields (key, value) pairs — the RecordReader.
+    Record mode: ``open_split(split_id)`` yields (key, value) pairs — the
+    RecordReader — and ``map_fn(key, value, emit)`` runs per record.
+
+    Batch mode: pass ``open_split_batches`` (yielding columnar batches,
+    e.g. from ``CIFReader.job_inputs``) plus
+    ``map_batch_fn(split_id, columns, emit)`` instead.
+
+    ``n_workers > 1`` executes the simulated hosts concurrently (one worker
+    thread per live host, capped at ``n_workers``); output is bit-identical
+    to a serial run of the same mode.
     """
     t0 = time.perf_counter()
+    batch_mode = map_batch_fn is not None or open_split_batches is not None
+    if batch_mode:
+        assert map_batch_fn is not None and open_split_batches is not None, (
+            "batch mode needs both open_split_batches and map_batch_fn"
+        )
+        assert map_fn is None and open_split is None, "pick ONE map-side mode"
+    else:
+        assert map_fn is not None and open_split is not None, (
+            "record mode needs both open_split and map_fn"
+        )
     placement = placement or Placement(n_splits=len(split_ids), n_hosts=n_hosts)
     wq = WorkQueue(placement, dead_hosts=dead_hosts)
     assert wq.coverage_possible(), "a split lost all replicas — job cannot run"
 
+    live_hosts = [h for h in range(placement.n_hosts) if h not in (dead_hosts or set())]
+
+    def run_split(sidx: int) -> Tuple[List[Tuple[Any, Any]], float]:
+        split_id = split_ids[sidx]
+        local_out: List[Tuple[Any, Any]] = []
+        emit = lambda k, v: local_out.append((k, v))
+        t_map = time.perf_counter()
+        if batch_mode:
+            for columns in open_split_batches(split_id):
+                map_batch_fn(split_id, columns, emit)
+        else:
+            for key, value in open_split(split_id):
+                map_fn(key, value, emit)
+        dt = time.perf_counter() - t_map
+        if combiner is not None:
+            grouped: Dict[Any, List[Any]] = defaultdict(list)
+            for k, v in local_out:
+                grouped[k].append(v)
+            local_out = []
+            emit_c = lambda k, v: local_out.append((k, v))
+            for k, vs in grouped.items():
+                combiner(k, vs, emit_c)
+        return local_out, dt
+
+    # Task = (sidx, host, local_out, map_seconds).  Each split is claimed and
+    # processed exactly once; the post-barrier fold below is ordered by sidx,
+    # which is what makes serial and concurrent output identical.
+    def host_loop(host: int) -> List[Tuple[int, int, List[Tuple[Any, Any]], float]]:
+        done: List[Tuple[int, int, List[Tuple[Any, Any]], float]] = []
+        while True:
+            sidx = wq.next_split(host)
+            if sidx is None:
+                return done
+            local_out, dt = run_split(sidx)
+            wq.complete(sidx)
+            done.append((sidx, host, local_out, dt))
+
+    tasks: List[Tuple[int, int, List[Tuple[Any, Any]], float]] = []
+    # pool size: one thread per live host, capped by the request and by the
+    # hardware — more threads than cores only adds GIL/scheduler thrash in a
+    # single-process simulated cluster.  Every live host's loop still runs.
+    pool_size = min(n_workers, len(live_hosts), os.cpu_count() or n_workers)
+    if pool_size > 1:
+        with ThreadPoolExecutor(max_workers=pool_size) as pool:
+            for fut in [pool.submit(host_loop, h) for h in live_hosts]:
+                tasks.extend(fut.result())
+    else:
+        # serial: round-robin the live hosts (the original simulated cluster)
+        pending = True
+        while pending:
+            pending = False
+            for h in live_hosts:
+                sidx = wq.next_split(h)
+                if sidx is None:
+                    continue
+                pending = True
+                local_out, dt = run_split(sidx)
+                wq.complete(sidx)
+                tasks.append((sidx, h, local_out, dt))
+    assert len(tasks) == len(split_ids), "scheduler lost or duplicated a split"
+
+    # deterministic fold: split order, stable partitioning
     shuffle: List[Dict[Any, List[Any]]] = [defaultdict(list) for _ in range(n_reducers)]
     map_time = 0.0
     n_map_out = 0
     host_of_split: Dict[int, int] = {}
     remote_reads = 0
-
-    live_hosts = [h for h in range(placement.n_hosts) if h not in (dead_hosts or set())]
-    # round-robin the live hosts over the work queue (simulated cluster)
-    pending = True
-    while pending:
-        pending = False
-        for h in live_hosts:
-            sidx = wq.next_split(h)
-            if sidx is None:
-                continue
-            pending = True
-            split_id = split_ids[sidx]
-            host_of_split[split_id] = h
-            if not placement.is_local(sidx, h):
-                remote_reads += 1  # CPP makes this impossible; counted to prove it
-            local_out: List[Tuple[Any, Any]] = []
-            emit = lambda k, v: local_out.append((k, v))
-            t_map = time.perf_counter()
-            for key, value in open_split(split_id):
-                map_fn(key, value, emit)
-            map_time += time.perf_counter() - t_map
-            if combiner is not None:
-                grouped: Dict[Any, List[Any]] = defaultdict(list)
-                for k, v in local_out:
-                    grouped[k].append(v)
-                local_out = []
-                emit_c = lambda k, v: local_out.append((k, v))
-                for k, vs in grouped.items():
-                    combiner(k, vs, emit_c)
-            n_map_out += len(local_out)
+    for sidx, h, local_out, dt in sorted(tasks, key=lambda t: t[0]):
+        host_of_split[split_ids[sidx]] = h
+        if not placement.is_local(sidx, h):
+            remote_reads += 1  # CPP makes this impossible; counted to prove it
+        map_time += dt
+        n_map_out += len(local_out)
+        if n_reducers == 1:
+            part = shuffle[0]
             for k, v in local_out:
-                shuffle[hash(k) % n_reducers][k].append(v)
-            wq.complete(sidx)
+                part[k].append(v)
+        else:
+            for k, v in local_out:
+                shuffle[stable_partition(k, n_reducers)][k].append(v)
 
     t_shuffle = time.perf_counter()
     # sort phase (keys sorted per reducer, as Hadoop does)
@@ -120,6 +211,8 @@ def run_job(
         map_output_records=n_map_out,
         host_of_split=host_of_split,
         remote_reads=remote_reads,
+        mode="batches" if batch_mode else "records",
+        n_workers=max(1, pool_size),
     )
 
 
@@ -137,6 +230,32 @@ def fig1_map(pattern: str = "ibm.com/jp") -> MapFn:
                 emit(None, ct)
 
     return map_fn
+
+
+def fig1_map_batch(pattern: str = "ibm.com/jp") -> MapBatchFn:
+    """Batch-mode Fig. 1: vectorized substring predicate over the url
+    ``RaggedColumn``, then a SPARSE single-key DCSL fetch of content-type
+    for just the matching rows — the batch analog of lazy materialization
+    (the metadata column is never bulk-decoded)."""
+
+    def map_batch(split_id: int, cols: Any, emit: Callable[[Any, Any], None]) -> None:
+        urls = cols["url"]
+        if hasattr(urls, "contains"):
+            mask = urls.contains(pattern)
+        else:  # plain list fallback (non-ragged readers)
+            mask = np.fromiter((pattern in u for u in urls), bool, count=len(urls))
+        rows = np.flatnonzero(mask)
+        if not len(rows):
+            return
+        if hasattr(cols, "sparse"):
+            cts = cols.sparse("metadata", rows, key="content-type")
+        else:
+            cts = [cols["metadata"][int(i)].get("content-type") for i in rows]
+        for ct in cts:
+            if ct is not None:
+                emit(None, ct)
+
+    return map_batch
 
 
 def fig1_reduce(key: Any, vals: List[Any], emit: Callable[[Any, Any], None]) -> None:

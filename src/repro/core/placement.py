@@ -21,17 +21,31 @@ analog of CPP's guarantee).  What remains of the placement problem is the
 
 ``WorkQueue`` adds straggler mitigation: hosts that finish their primary
 splits steal replica splits of slow hosts — the paper's speculative
-execution, restricted to co-located replicas.
+execution, restricted to co-located replicas.  The queue is thread-safe:
+``run_job`` drives one worker thread per live host, so claim/complete
+transitions are serialized under an internal lock.
 """
 from __future__ import annotations
 
 import hashlib
+import threading
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Any, Dict, List, Optional, Sequence, Set
 
 
 def _stable_hash(s: str) -> int:
     return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8], "little")
+
+
+def stable_partition(key: Any, n_partitions: int) -> int:
+    """Reducer partition for ``key``, reproducible across processes.
+
+    The builtin ``hash`` is salted by ``PYTHONHASHSEED`` for str/bytes, so
+    shuffle assignment would differ between runs; this routes through the
+    same sha256-based hash the placement policy uses (keys are rendered via
+    ``repr``, which is stable for the plain-data keys map functions emit).
+    """
+    return _stable_hash(repr(key)) % n_partitions
 
 
 @dataclass(frozen=True)
@@ -84,26 +98,29 @@ class WorkQueue:
         self.dead = dead_hosts or set()
         self.done: Set[int] = set()
         self.claimed: Dict[int, int] = {}  # split -> host
+        self._lock = threading.Lock()
 
     def next_split(self, host: int) -> Optional[int]:
         assert host not in self.dead
-        # primaries first
-        for s in self.p.splits_of(host):
-            if s not in self.done and s not in self.claimed:
-                self.claimed[s] = host
-                return s
-        # then steal: any unfinished split whose replica set includes us
-        for s in self.p.splits_of(host, include_replicas=True):
-            if s in self.done:
-                continue
-            owner = self.claimed.get(s)
-            if owner is None or owner in self.dead:
-                self.claimed[s] = host
-                return s
-        return None
+        with self._lock:
+            # primaries first
+            for s in self.p.splits_of(host):
+                if s not in self.done and s not in self.claimed:
+                    self.claimed[s] = host
+                    return s
+            # then steal: any unfinished split whose replica set includes us
+            for s in self.p.splits_of(host, include_replicas=True):
+                if s in self.done:
+                    continue
+                owner = self.claimed.get(s)
+                if owner is None or owner in self.dead:
+                    self.claimed[s] = host
+                    return s
+            return None
 
     def complete(self, split_id: int) -> None:
-        self.done.add(split_id)
+        with self._lock:
+            self.done.add(split_id)
 
     def all_done(self) -> bool:
         return len(self.done) == self.p.n_splits

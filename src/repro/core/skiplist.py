@@ -23,6 +23,8 @@ from __future__ import annotations
 import struct
 from typing import Any, Callable, List, Optional, Tuple
 
+import numpy as np
+
 LEVELS = (1000, 100, 10)
 _U64 = struct.Struct("<Q")
 
@@ -186,18 +188,22 @@ class SkipListReader:
         start: int,
         stop: int,
         range_decode_fn: Optional[Callable[[bytes, int, int], Tuple[Any, int]]] = None,
+        range_decode_lanes: Optional[Callable[[bytes, Any, Any], Tuple[Any, Any]]] = None,
     ) -> List[Any]:
         """Bulk forward decode of records ``[start, stop)``.
 
         Jumps to ``start`` via the skip list, then bulk-decodes forward.
         Without a boundary hook the smallest-level skip pointers give every
-        boundary's byte offset WITHOUT decoding cells, so the cell bytes of
-        all full runs are excised into one contiguous buffer and decoded in
-        a single ``range_decode_fn`` pass; partial head/tail runs (and the
-        hook case, e.g. DCSL dictionaries) decode run-by-run.  Counters are
-        updated in aggregate and match a scalar ``value_at`` loop over the
-        same records exactly.  Returns a list of per-run value chunks
-        (caller concatenates with type knowledge).
+        boundary's byte offset WITHOUT decoding cells.  With
+        ``range_decode_lanes`` (ragged string/bytes columns) the full runs
+        decode in vectorized LOCKSTEP — one lane per run, offsets straight
+        from the skip entries, zero-copy views into the body.  Otherwise
+        the cell bytes of all full runs are excised into one contiguous
+        buffer and decoded in a single ``range_decode_fn`` pass.  Partial
+        head/tail runs (and the hook case, e.g. DCSL dictionaries) decode
+        run-by-run.  Counters are updated in aggregate and match a scalar
+        ``value_at`` loop over the same records exactly.  Returns a list of
+        per-run value chunks (caller concatenates with type knowledge).
         """
         assert self.pos <= start <= stop <= self.n, (self.pos, start, stop, self.n)
         self.skip_to(start)
@@ -209,16 +215,39 @@ class SkipListReader:
             # pointer-walk: collect the cell-byte segment of each full run
             segs: List[Tuple[int, int]] = []  # (content_off, end_off)
             count = 0
-            while self.pos % m == 0 and self.pos + m <= stop:
-                lv = levels_at(self.pos, self.levels)
-                content = self.off + 8 * len(lv)
-                (nxt,) = _U64.unpack_from(self.data, self.off + 8 * lv.index(m))
-                self.bytes_entries += content - self.off
-                segs.append((content, nxt))
+            pos_, off_, entry_bytes = self.pos, self.off, 0
+            data, unpack = self.data, _U64.unpack_from
+            fastlv = self.levels == LEVELS  # m is the LAST slot of each group
+            append = segs.append
+            while pos_ % m == 0 and pos_ + m <= stop:
+                if fastlv:
+                    nlv = 3 if pos_ % 1000 == 0 else (2 if pos_ % 100 == 0 else 1)
+                    content = off_ + 8 * nlv
+                    (nxt,) = unpack(data, content - 8)
+                else:
+                    lv = levels_at(pos_, self.levels)
+                    content = off_ + 8 * len(lv)
+                    (nxt,) = unpack(data, off_ + 8 * lv.index(m))
+                entry_bytes += content - off_
+                append((content, nxt))
                 count += m
-                self.pos += m
-                self.off = nxt
-            if segs:
+                pos_ += m
+                off_ = nxt
+            self.pos, self.off = pos_, off_
+            self.bytes_entries += entry_bytes
+            if segs and range_decode_lanes is not None:
+                offs = np.array([a for a, _ in segs], np.int64)
+                seg_ends = np.array([b for _, b in segs], np.int64)
+                vals, ends = range_decode_lanes(
+                    self.data, offs, np.full(len(segs), m, np.int64)
+                )
+                assert (np.asarray(ends) == seg_ends).all(), (
+                    "segment walk out of sync with cells"
+                )
+                self.cells_decoded += count
+                self.bytes_decoded += int((seg_ends - offs).sum())
+                chunks.append(vals)
+            elif segs:
                 mv = memoryview(self.data)
                 joined = bytes(mv[segs[0][0] : segs[0][1]]) if len(segs) == 1 else b"".join(
                     [mv[a:b] for a, b in segs]

@@ -18,15 +18,28 @@ Three decode paths exist on purpose:
                             segmented reduction); string/bytes walk length
                             prefixes in a tight scalar loop to produce a
                             ``(starts, lengths)`` offset pair over the raw
-                            buffer (``decode_ragged_range``) so consumers
-                            can gather payloads without copying them
-                            per-cell (offset walking itself is NOT
-                            vectorized — see ROADMAP open items).
+                            buffer (``decode_ragged_range``), returned as a
+                            ``RaggedColumn`` view so consumers can run
+                            vectorized predicates / gathers straight off
+                            the file buffer without materializing one
+                            Python object per cell (offset walking itself
+                            is NOT vectorized — see ROADMAP open items).
+
+``RaggedColumn`` contract: ``decode_range`` (and therefore every
+``read_range``/``read_many``/``read_batch``/``scan_batches`` above it)
+returns string/bytes columns as a ``RaggedColumn`` — a zero-copy
+``(buffer, starts, lengths)`` view.  Integer/boolean/slice/fancy indexing,
+``len``, iteration, ``==`` against lists, and ``tolist()`` all behave like
+the list of decoded cells it replaces; slicing and fancy indexing return
+new views over the SAME buffer (no payload copies), ``tolist()`` is the
+single lazy materialization point, ``contains()`` is a vectorized substring
+predicate, and ``as_matrix()`` gathers equal-length cells with one fancy
+index.
 """
 from __future__ import annotations
 
 import struct
-from typing import Any, List, Tuple
+from typing import Any, Iterator, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -271,6 +284,246 @@ def decode_ragged_range(data: bytes, off: int, count: int) -> Tuple[np.ndarray, 
     return starts, lengths, o
 
 
+class RaggedColumn:
+    """Zero-copy columnar view over length-prefixed (string/bytes) cells.
+
+    Holds the raw file/payload ``buffer`` plus int64 ``starts``/``lengths``
+    offset arrays (one entry per cell, in any order — gathered views may
+    repeat or reorder cells).  Individual
+    cells decode on access; ``tolist()`` materializes (and caches) the whole
+    column; slicing and fancy indexing return new views over the same
+    buffer.  This is the end-to-end form of ``decode_ragged_range`` so batch
+    map functions can run NumPy predicates over string columns without a
+    per-cell Python object in sight.
+    """
+
+    __slots__ = ("buffer", "starts", "lengths", "kind", "_list")
+
+    def __init__(self, buffer: bytes, starts: np.ndarray, lengths: np.ndarray,
+                 kind: str = "bytes"):
+        assert kind in ("string", "bytes"), kind
+        self.buffer = buffer
+        self.starts = starts
+        self.lengths = lengths
+        self.kind = kind
+        self._list = None
+
+    # -- sizing / access -----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.starts)
+
+    def _cell(self, i: int) -> Union[str, bytes]:
+        a = int(self.starts[i])
+        raw = self.buffer[a : a + int(self.lengths[i])]
+        return raw.decode("utf-8") if self.kind == "string" else bytes(raw)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return RaggedColumn(self.buffer, self.starts[i], self.lengths[i], self.kind)
+        if isinstance(i, (list, np.ndarray)):
+            idx = np.asarray(i)
+            if idx.dtype == bool:
+                idx = np.flatnonzero(idx)
+            return RaggedColumn(self.buffer, self.starts[idx], self.lengths[idx], self.kind)
+        return self._cell(int(i))
+
+    def __iter__(self) -> Iterator[Union[str, bytes]]:
+        for i in range(len(self.starts)):
+            yield self._cell(i)
+
+    def tolist(self) -> List[Union[str, bytes]]:
+        """Materialize all cells (cached — the ONE place Python objects are
+        built, and only if a consumer actually asks for them)."""
+        if self._list is None:
+            self._list = [self._cell(i) for i in range(len(self.starts))]
+        return self._list
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, RaggedColumn):
+            other = other.tolist()
+        if isinstance(other, (list, tuple)):
+            return self.tolist() == list(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"RaggedColumn(kind={self.kind!r}, n={len(self)})"
+
+    # -- vectorized consumers ------------------------------------------------
+    def nbytes(self) -> np.ndarray:
+        """Per-cell payload byte lengths (the ``lengths`` array itself)."""
+        return self.lengths
+
+    def contains(self, pattern: Union[str, bytes]) -> np.ndarray:
+        """Boolean mask: which cells contain ``pattern`` as a substring.
+
+        One ``bytes.find`` sweep over the covering buffer span locates every
+        occurrence; a searchsorted maps occurrences back to cells.  No cell
+        is ever decoded.  (For string columns the match is on UTF-8 bytes,
+        which is equivalent for substring containment.)
+        """
+        pat = pattern.encode("utf-8") if isinstance(pattern, str) else bytes(pattern)
+        n = len(self)
+        if n == 0:
+            return np.zeros(0, bool)
+        if len(pat) == 0:
+            return np.ones(n, bool)
+        ends = self.starts + self.lengths
+        lo, hi = int(self.starts.min()), int(ends.max())
+        buf = self.buffer if isinstance(self.buffer, bytes) else bytes(self.buffer)
+        p = buf.find(pat, lo, hi)
+        hits = []
+        while p != -1:
+            hits.append(p)
+            p = buf.find(pat, p + 1, hi)
+        if not hits:
+            return np.zeros(n, bool)
+        hp = np.asarray(hits, np.int64)  # increasing (find() walks forward)
+        # Per cell, the smallest hit at/after its start decides: later hits
+        # are only further right, so if that one overruns the payload every
+        # other one does too.  Works for views in ANY index order, including
+        # duplicated cells from fancy indexing.
+        j = np.searchsorted(hp, self.starts, side="left")
+        cand = hp[np.minimum(j, len(hp) - 1)]
+        return (j < len(hp)) & (cand + len(pat) <= ends)
+
+    def as_matrix(self) -> np.ndarray:
+        """Equal-length cells -> contiguous ``(n, L)`` uint8 matrix (the
+        fixed-stride fast path the PR-1 docstring promised).
+
+        Equal-length cells written back-to-back also sit at a constant
+        byte stride (identical length prefixes), so the common case is a
+        single strided view + one memcpy; ragged gaps (e.g. ``read_many``
+        across runs) fall back to a span join."""
+        n = len(self)
+        if n == 0:
+            return np.empty((0, 0), np.uint8)
+        length = int(self.lengths[0])
+        assert (self.lengths == length).all(), "as_matrix needs equal-length cells"
+        buf = np.frombuffer(self.buffer, np.uint8)
+        if n == 1:
+            a = int(self.starts[0])
+            return buf[a : a + length].reshape(1, length).copy()
+        d = np.diff(self.starts)
+        if (d == d[0]).all():
+            view = np.lib.stride_tricks.as_strided(
+                buf[int(self.starts[0]) :], (n, length), (int(d[0]), 1)
+            )
+            return np.ascontiguousarray(view)
+        mv = memoryview(self.buffer)
+        joined = b"".join([mv[a : a + length] for a in self.starts.tolist()])
+        return np.frombuffer(joined, np.uint8).reshape(n, length)
+
+    # -- assembly ------------------------------------------------------------
+    @staticmethod
+    def concat(chunks: Sequence["RaggedColumn"]) -> "RaggedColumn":
+        """Concatenate views.  Same-buffer chunks stay zero-copy; mixed
+        buffers copy each chunk's covering SPAN once (never per cell) and
+        rebase the offset arrays vectorized."""
+        chunks = [c for c in chunks if len(c)]
+        if not chunks:
+            return RaggedColumn(b"", np.empty(0, np.int64), np.empty(0, np.int64))
+        kind = chunks[0].kind
+        if len(chunks) == 1:
+            return chunks[0]
+        first_buf = chunks[0].buffer
+        if all(c.buffer is first_buf for c in chunks):
+            return RaggedColumn(
+                first_buf,
+                np.concatenate([c.starts for c in chunks]),
+                np.concatenate([c.lengths for c in chunks]),
+                kind,
+            )
+        parts, starts, lengths, base = [], [], [], 0
+        for c in chunks:
+            lo = int(c.starts.min())
+            hi = int((c.starts + c.lengths).max())
+            parts.append(memoryview(c.buffer)[lo:hi])
+            starts.append(c.starts - lo + base)
+            lengths.append(c.lengths)
+            base += hi - lo
+        return RaggedColumn(
+            b"".join(parts), np.concatenate(starts), np.concatenate(lengths), kind
+        )
+
+
+def decode_ragged_lanes(
+    data: bytes, offs: np.ndarray, counts: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized ragged walk across many independent LANES.
+
+    ``decode_ragged_range`` is inherently sequential (each cell's offset
+    depends on the previous length prefix) — but when a caller knows many
+    independent start offsets (skip-list group boundaries come for free
+    from the skip entries), the walk runs in lockstep across all lanes:
+    one NumPy pass per cell position reads every lane's length prefix at
+    once, so the Python-level iteration count drops from ``total cells`` to
+    ``max cells per lane``.  Multi-byte prefixes are handled by a masked
+    continuation loop (rare for typical payloads).
+
+    Returns ``(starts, lengths, ends)``: lane-major concatenated payload
+    offsets (lane 0's cells first — record order when lanes are consecutive
+    groups) and each lane's final end offset.
+    """
+    b = np.frombuffer(data, np.uint8)
+    offs = np.asarray(offs, np.int64)
+    counts = np.asarray(counts, np.int64)
+    if len(counts) and (counts == counts[0]).all():
+        # equal-count lanes (the skip-list case: every full run holds
+        # min(LEVELS) cells) — no per-lane completion bookkeeping at all.
+        k = int(counts[0])
+        starts = np.empty((len(offs), k), np.int64)
+        lengths = np.empty((len(offs), k), np.int64)
+        pos = offs.copy()
+        for j in range(k):
+            first = b[pos].astype(np.int64)
+            val = first & 0x7F
+            q = pos + 1
+            cont = first >= 0x80
+            shift = 7
+            while cont.any():  # multi-byte length prefixes (rare)
+                ci = np.flatnonzero(cont)
+                nb = b[q[ci]].astype(np.int64)
+                val[ci] |= (nb & 0x7F) << shift
+                q[ci] += 1
+                shift += 7
+                cont[ci] = nb >= 0x80
+            starts[:, j] = q
+            lengths[:, j] = val
+            pos = q + val
+        return starts.ravel(), lengths.ravel(), pos
+    total = int(counts.sum())
+    starts = np.empty(total, np.int64)
+    lengths = np.empty(total, np.int64)
+    write = np.zeros(len(offs), np.int64)
+    write[1:] = np.cumsum(counts)[:-1]
+    pos = offs.copy()
+    left = counts.copy()
+    active = left > 0
+    while active.any():
+        ai = np.flatnonzero(active)
+        p = pos[ai]
+        first = b[p].astype(np.int64)
+        val = first & 0x7F
+        q = p + 1
+        cont = first >= 0x80
+        shift = np.full(len(ai), 7, np.int64)
+        while cont.any():  # multi-byte length prefixes
+            ci = np.flatnonzero(cont)
+            nb = b[q[ci]].astype(np.int64)
+            val[ci] |= (nb & 0x7F) << shift[ci]
+            q[ci] += 1
+            shift[ci] += 7
+            cont[ci] = nb >= 0x80
+        w = write[ai]
+        starts[w] = q
+        lengths[w] = val
+        pos[ai] = q + val
+        write[ai] = w + 1
+        left[ai] -= 1
+        active[ai] = left[ai] > 0
+    return starts, lengths, pos
+
+
 def skip_range(typ: ColumnType, data: bytes, off: int, count: int) -> int:
     """Advance past ``count`` cells without materializing values (the batch
     analog of ``skip_cell``; same traversal, aggregated)."""
@@ -294,10 +547,10 @@ def decode_range(typ: ColumnType, data: bytes, off: int, count: int) -> Tuple[An
 
     Returns ``(values, end_offset)`` where values is a NumPy array for
     numeric/bool columns (int32 -> int32, int64 -> int64, floats/bool
-    native, decoded in a few vectorized passes), a list of str/bytes for
-    string columns (offsets from ``decode_ragged_range``, then one slice
-    per cell), and a list of Python objects for complex types (loop
-    fallback).
+    native, decoded in a few vectorized passes), a ``RaggedColumn``
+    zero-copy view for string/bytes columns (offsets from
+    ``decode_ragged_range``; cells decode lazily on access), and a list of
+    Python objects for complex types (loop fallback).
     """
     k = typ.kind
     if count == 0:
@@ -309,10 +562,7 @@ def decode_range(typ: ColumnType, data: bytes, off: int, count: int) -> Tuple[An
         return decode_fixed_range(k, data, off, count)
     if k in ("string", "bytes"):
         starts, lengths, end = decode_ragged_range(data, off, count)
-        s, l = starts.tolist(), lengths.tolist()
-        if k == "string":
-            return [data[a : a + n].decode("utf-8") for a, n in zip(s, l)], end
-        return [bytes(data[a : a + n]) for a, n in zip(s, l)], end
+        return RaggedColumn(data, starts, lengths, k), end
     out: List[Any] = []
     for _ in range(count):
         v, off = decode_cell(typ, data, off)
@@ -331,6 +581,8 @@ def empty_values(typ: ColumnType) -> Any:
         return np.empty(0, bool)
     if k in _FIXED_DTYPE:
         return np.empty(0, np.dtype(_FIXED_DTYPE[k]))
+    if k in ("string", "bytes"):
+        return RaggedColumn(b"", np.empty(0, np.int64), np.empty(0, np.int64), k)
     return []
 
 
@@ -341,6 +593,8 @@ def concat_values(typ: ColumnType, chunks: List[Any]) -> Any:
         return empty_values(typ)
     if isinstance(chunks[0], np.ndarray):
         return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+    if isinstance(chunks[0], RaggedColumn):
+        return RaggedColumn.concat(chunks)
     out: List[Any] = []
     for c in chunks:
         out.extend(c)

@@ -60,7 +60,9 @@ class HostPipeline:
         self.batch = batch_per_host
         self.decode = decode
         ids = corpus.split_ids()
-        sizes = {sid: len(corpus.open_split(sid)) for sid in ids}
+        # size the corpus from split metadata only — opening every split
+        # would read every column file on every host (anti-CPP startup scan)
+        sizes = corpus.split_sizes()
         placement = Placement(n_splits=len(ids), n_hosts=n_hosts)
         self.sampler = ShardedSampler(
             sizes, placement, host, seed=seed,

@@ -257,11 +257,12 @@ class TokenSplit:
             return z, z.copy()
         n = int(ns[0])
         assert (ns == n).all(), "sequences in one split share seq_len"
+        # read_many hands back RaggedColumn views: equal-length cells gather
+        # with one fancy index straight off the column-file buffer.
         mask = np.unpackbits(
-            np.frombuffer(b"".join(msk_raw), np.uint8).reshape(b, -1),
-            axis=1, bitorder="little",
+            msk_raw.as_matrix(), axis=1, bitorder="little"
         )[:, :n].astype(np.int32)
-        words = np.frombuffer(b"".join(raws), dtype="<u4").reshape(b, -1)
+        words = raws.as_matrix().view("<u4")
         if decode == "packed":
             return words.copy(), mask
         if decode == "device":
@@ -302,3 +303,27 @@ class TokenCorpus:
 
     def split_ids(self) -> List[int]:
         return [i for i, _ in self.splits]
+
+    def split_sizes(self) -> Dict[int, int]:
+        """``split_id -> n_records`` from each split's ``_meta.json`` only —
+        no column file is opened or read (a host sizing the corpus must not
+        pull every split's data; CPP locality starts at metadata)."""
+        sizes: Dict[int, int] = {}
+        for sid, sdir in self.splits:
+            with open(os.path.join(sdir, "_meta.json")) as f:
+                sizes[sid] = json.load(f)["n_records"]
+        return sizes
+
+    def scan_batches(
+        self,
+        columns: Optional[List[str]] = None,
+        batch_size: int = 1024,
+        host: Optional[int] = None,
+        n_hosts: Optional[int] = None,
+    ) -> Iterator[Dict]:
+        """Sharded columnar scan over the corpus (CIF batch path): with
+        ``host``/``n_hosts`` each host iterates only its CPP-local shard,
+        and the union of all hosts' batches covers every sequence exactly
+        once."""
+        reader = CIFReader(self.root, columns=columns or ["tokens", "n_tokens"])
+        yield from reader.scan_batches(batch_size=batch_size, host=host, n_hosts=n_hosts)

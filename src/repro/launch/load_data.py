@@ -4,10 +4,19 @@ one-time load cost, Table 2).
 Two modes:
   --kind crawl   synthetic intranet-crawl records (URLInfo schema, Fig. 2)
   --kind tokens  synthetic token documents -> packed token corpus
+
+``--verify-hosts N`` re-reads the freshly written dataset through the
+SHARDED batch scan path: N simulated hosts each iterate only their
+CPP-local shard via ``CIFReader.scan_batches(host=, n_hosts=)``,
+concurrently (one thread per host), and the row counts must add up to
+exactly what was written — the same multi-host eager-scan machinery
+training startup uses.
 """
 from __future__ import annotations
 
 import argparse
+import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -57,6 +66,31 @@ def synth_token_docs(n_docs: int, vocab: int = 50000, seed: int = 0):
         yield toks.astype(np.int32), {"doc": str(i), "source": f"s{i % 7}"}
 
 
+def sharded_verify(root: str, columns: list, n_hosts: int, expect_rows: int) -> float:
+    """Concurrent sharded read-back: each simulated host scans its CPP-local
+    shard on the columnar batch path; asserts the shards partition the
+    dataset (counts sum to what was written).  Returns rows/second."""
+    from ..core import CIFReader
+
+    reader = CIFReader(root, columns=columns)
+
+    def host_rows(host: int) -> int:
+        rows = 0
+        for batch in reader.scan_batches(batch_size=1024, host=host, n_hosts=n_hosts):
+            rows += len(next(iter(batch.values())))
+        return rows
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=n_hosts) as pool:
+        per_host = list(pool.map(host_rows, range(n_hosts)))
+    dt = time.perf_counter() - t0
+    total = sum(per_host)
+    assert total == expect_rows, f"sharded scan saw {total} rows, wrote {expect_rows}"
+    print(f"verified {total} rows across {n_hosts} hosts "
+          f"({per_host} per host) in {dt:.2f}s = {total/dt:,.0f} rows/s")
+    return total / dt
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--kind", choices=["crawl", "tokens"], required=True)
@@ -67,6 +101,9 @@ def main() -> None:
     ap.add_argument("--metadata-format", default="dcsl",
                     choices=["plain", "skiplist", "dcsl"])
     ap.add_argument("--content-codec", default="lzo", choices=["none", "lzo", "zlib"])
+    ap.add_argument("--verify-hosts", type=int, default=0, metavar="N",
+                    help="after writing, re-read via N concurrent sharded "
+                         "batch scans and check the row count")
     args = ap.parse_args()
 
     if args.kind == "crawl":
@@ -85,6 +122,9 @@ def main() -> None:
         w.append_all(synth_crawl_records(args.n))
         w.close()
         print(f"wrote {w.total_records} crawl records to {args.out}")
+        if args.verify_hosts:
+            sharded_verify(args.out, ["url", "fetchTime"], args.verify_hosts,
+                           w.total_records)
     else:
         from ..data.tokens import TokenCorpusWriter
 
@@ -94,6 +134,9 @@ def main() -> None:
             w.add_document(toks, meta)
         w.close()
         print(f"wrote {w.n_sequences} sequences to {args.out}")
+        if args.verify_hosts:
+            sharded_verify(args.out, ["n_tokens"], args.verify_hosts,
+                           w.n_sequences)
 
 
 if __name__ == "__main__":

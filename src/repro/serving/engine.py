@@ -6,11 +6,18 @@ slots; finished slots (EOS or max_len) free immediately and the next queued
 request takes over — decode work is never blocked on stragglers within the
 batch.  Greedy sampling (argmax) keeps tests deterministic; temperature
 sampling is a flag.
+
+Feature fetch: requests may reference their prompt by ``(split_id,
+record_id)`` into a columnar token corpus instead of carrying tokens
+inline.  ``PromptStore`` resolves those refs on the COLUMNAR batch path —
+each admit step groups the refs of all admitted requests by split and
+issues ONE ``TokenSplit.record_batch`` (``SplitReader.read_batch``
+underneath) per split, instead of one scalar ``value_at`` chain per slot.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,11 +30,60 @@ from ..models import lm
 @dataclass
 class Request:
     rid: int
-    prompt: List[int]
+    prompt: Optional[List[int]] = None
     max_new: int = 16
     eos: Optional[int] = None
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # columnar prompt reference: (split_id, record_id) resolved by the
+    # engine's PromptStore at admit time (batched per step)
+    prompt_ref: Optional[Tuple[int, int]] = None
+
+
+class PromptStore:
+    """Columnar feature store for serving: maps ``(split_id, record_id)``
+    refs to prompt token lists.
+
+    ``fetch`` batches an admit step's slot fetches: refs are grouped by
+    split, sorted (monotone readers), and pulled with one
+    ``TokenSplit.record_batch`` call per split — the bulk
+    ``read_batch``/``read_many`` path — then the loss-mask trims padding.
+    Splits are cached; a split whose forward-only readers are already past
+    the lowest requested id is reopened (same policy as the training
+    pipeline).
+    """
+
+    def __init__(self, corpus, max_prompt: int = 32, decode: str = "np"):
+        self.corpus = corpus
+        self.max_prompt = max_prompt
+        self.decode = decode
+        self._open: Dict[int, Any] = {}
+
+    def _split(self, sid: int):
+        sp = self._open.get(sid)
+        if sp is None:
+            sp = self._open[sid] = self.corpus.open_split(sid)
+        return sp
+
+    def fetch(self, refs: Sequence[Tuple[int, int]]) -> List[List[int]]:
+        """Resolve refs to prompts; one columnar batch read per split."""
+        by_split: Dict[int, List[Tuple[int, int]]] = {}
+        for slot, (sid, rid) in enumerate(refs):
+            by_split.setdefault(sid, []).append((rid, slot))
+        out: List[Optional[List[int]]] = [None] * len(refs)
+        for sid, rid_slots in by_split.items():
+            uniq = sorted({r for r, _ in rid_slots})
+            sp = self._split(sid)
+            if sp.position > uniq[0]:  # forward-only readers: reopen
+                del self._open[sid]
+                sp = self._split(sid)
+            toks, mask = sp.record_batch(uniq, decode=self.decode)
+            row_of = {r: i for i, r in enumerate(uniq)}
+            for rid, slot in rid_slots:
+                row = row_of[rid]
+                n = min(int(mask[row].sum()), self.max_prompt)
+                out[slot] = [int(t) for t in toks[row, : max(n, 1)]]
+        return out  # type: ignore[return-value]
 
 
 class ServeEngine:
@@ -37,11 +93,13 @@ class ServeEngine:
         params: Any,
         max_batch: int = 8,
         max_seq: int = 512,
+        prompt_store: Optional[PromptStore] = None,
     ):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.prompt_store = prompt_store
         self.caches = lm.init_cache(cfg, max_batch, max_seq)
         # per-slot bookkeeping
         self.slot_req: List[Optional[Request]] = [None] * max_batch
@@ -83,16 +141,32 @@ class ServeEngine:
         self.caches = new_caches
 
     def _admit(self) -> None:
-        for slot in range(self.max_batch):
-            if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                assert len(req.prompt) >= 1
-                self._reset_slot(slot)
-                self.slot_req[slot] = req
-                self.slot_pos[slot] = 0
-                # prompt tokens are fed one at a time through decode steps
-                # (token-level prefill; fine for short prompts / tests)
-                self.slot_pending[slot] = list(req.prompt)
+        free = [s for s in range(self.max_batch) if self.slot_req[s] is None]
+        admitted = self.queue[: len(free)]
+        if not admitted:
+            return
+        del self.queue[: len(admitted)]
+        # batched feature fetch: resolve every admitted ref in ONE columnar
+        # read per split (read_batch), not one scalar chain per slot
+        need = [r for r in admitted if r.prompt is None]
+        if need:
+            assert all(r.prompt_ref is not None for r in need), (
+                "request needs either an inline prompt or a prompt_ref"
+            )
+            assert self.prompt_store is not None, (
+                "request carries prompt_ref but the engine has no PromptStore"
+            )
+            prompts = self.prompt_store.fetch([r.prompt_ref for r in need])
+            for r, p in zip(need, prompts):
+                r.prompt = p
+        for slot, req in zip(free, admitted):
+            assert len(req.prompt) >= 1
+            self._reset_slot(slot)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = 0
+            # prompt tokens are fed one at a time through decode steps
+            # (token-level prefill; fine for short prompts / tests)
+            self.slot_pending[slot] = list(req.prompt)
 
     @property
     def active(self) -> int:

@@ -1,0 +1,348 @@
+"""Sharded vectorized scan engine (PR 2).
+
+(a) batch-mode and concurrent `run_job` must be bit-identical to the serial
+    record path — output, `remote_reads`, and `ScanStats` — including with
+    dead hosts and work stealing;
+(b) the union of per-host `scan_batches` shards equals the unsharded scan
+    with every row exactly once;
+plus RaggedColumn view semantics, stable reducer partitioning, DCSL sparse
+lookup_many, and WorkQueue thread-safety under a concurrency hammer.
+"""
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CIFReader,
+    COFWriter,
+    ColumnFormat,
+    Placement,
+    RaggedColumn,
+    WorkQueue,
+    stable_partition,
+    urlinfo_schema,
+)
+from repro.core.colfile import ColumnFileReader, ColumnFileWriter
+from repro.core.mapreduce import (
+    fig1_map,
+    fig1_map_batch,
+    fig1_reduce,
+    run_job,
+)
+from repro.core.schema import MAP, STRING
+from repro.core.varcodec import decode_range, encode_cell
+from conftest import make_crawl_records
+
+
+@pytest.fixture(scope="module")
+def crawl(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("crawl-sharded") / "d")
+    records = make_crawl_records(1500)
+    w = COFWriter(root, urlinfo_schema(),
+                  formats={"metadata": ColumnFormat("dcsl"),
+                           "url": ColumnFormat("skiplist"),
+                           "fetchTime": ColumnFormat("skiplist"),
+                           "content": ColumnFormat("cblock", codec="zlib")},
+                  split_records=128)
+    w.append_all(records)
+    w.close()
+    return root, records
+
+
+def brute_force(records):
+    return sorted({
+        r["metadata"]["content-type"] for r in records if "ibm.com/jp" in r["url"]
+    })
+
+
+# -- (a) batch & concurrent run_job == serial record path --------------------
+
+
+def _full_map_record(key, rec, emit):
+    emit(None, (rec.get("fetchTime"), len(rec.get("content"))))
+
+
+def _full_map_batch(split_id, cols, emit):
+    ft = cols["fetchTime"]
+    lens = cols["content"].lengths
+    for t, l in zip(ft.tolist(), lens.tolist()):
+        emit(None, (t, int(l)))
+
+
+def test_batch_job_bit_identical_to_serial_records(crawl):
+    """Full-decode job: identical output AND identical ScanStats (the batch
+    path must report exactly the decode work the record path does)."""
+    root, records = crawl
+    r_rec = CIFReader(root, columns=["fetchTime", "content"], lazy=False)
+    ids, open_split = r_rec.job_records()
+    serial = run_job(ids, open_split, _full_map_record, n_hosts=4)
+
+    r_b = CIFReader(root, columns=["fetchTime", "content"])
+    ids_b, open_batches = r_b.job_inputs(batch_size=128)
+    batch = run_job(ids_b, n_hosts=4,
+                    open_split_batches=open_batches, map_batch_fn=_full_map_batch)
+
+    r_c = CIFReader(root, columns=["fetchTime", "content"])
+    ids_c, open_batches_c = r_c.job_inputs(batch_size=128)
+    conc = run_job(ids_c, n_hosts=4, n_workers=4,
+                   open_split_batches=open_batches_c, map_batch_fn=_full_map_batch)
+
+    assert batch.output == serial.output == conc.output
+    assert batch.remote_reads == serial.remote_reads == conc.remote_reads == 0
+    assert batch.splits_processed == serial.splits_processed == conc.splits_processed
+    assert vars(r_b.stats) == vars(r_rec.stats) == vars(r_c.stats)
+    assert batch.map_output_records == serial.map_output_records == len(records)
+
+
+def test_fig1_batch_matches_serial_with_dead_hosts(crawl):
+    """Fig. 1 (sparse DCSL fetch) with failures: outputs identical across
+    serial record, serial batch, and concurrent batch with dead hosts."""
+    root, records = crawl
+    expect = brute_force(records)
+
+    r1 = CIFReader(root, columns=["url", "metadata"], lazy=True)
+    ids, open_split = r1.job_records()
+    serial = run_job(ids, open_split, fig1_map(), fig1_reduce, n_hosts=5)
+    assert [v for _, v in serial.output] == expect
+
+    for workers, dead in [(1, None), (3, {1, 3}), (4, {0, 4})]:
+        r = CIFReader(root, columns=["url", "metadata"])
+        ids_b, open_batches = r.job_inputs(batch_size=100)
+        res = run_job(ids_b, reduce_fn=fig1_reduce, n_hosts=5, dead_hosts=dead,
+                      open_split_batches=open_batches,
+                      map_batch_fn=fig1_map_batch(), n_workers=workers)
+        assert res.output == serial.output
+        assert res.remote_reads == 0  # CPP invariant survives stealing
+        assert res.splits_processed == len(ids_b)
+        if dead:
+            assert set(res.host_of_split.values()).isdisjoint(dead)
+
+
+def test_concurrent_record_mode_identical(crawl):
+    """The compatibility (record) path is also safe under n_workers > 1."""
+    root, records = crawl
+    outs = []
+    for workers in (1, 4):
+        r = CIFReader(root, columns=["url", "metadata"], lazy=True)
+        ids, open_split = r.job_records()
+        outs.append(run_job(ids, open_split, fig1_map(), fig1_reduce,
+                            n_hosts=4, n_workers=workers))
+    assert outs[0].output == outs[1].output == [
+        (None, v) for v in brute_force(records)
+    ]
+
+
+# -- (b) sharded scan partition ----------------------------------------------
+
+
+def test_sharded_scan_batches_partition_exactly(crawl):
+    root, records = crawl
+    r_all = CIFReader(root, columns=["url"])
+    unsharded = []
+    for batch in r_all.scan_batches(batch_size=64):
+        unsharded.extend(batch["url"])
+
+    n_hosts = 4
+    placement = Placement(n_splits=len(r_all.splits()), n_hosts=n_hosts)
+    sharded = []
+    for host in range(n_hosts):
+        r_h = CIFReader(root, columns=["url"])
+        own = [sid for sid, _ in r_h.shard_splits(host, n_hosts)]
+        for batch in r_h.scan_batches(batch_size=64, host=host, n_hosts=n_hosts):
+            sharded.extend(batch["url"])
+        # every shard is CPP-local to its host
+        assert all(placement.is_local(s, host) for s in own)
+    # exactly once per row: same multiset, and same set of rows
+    assert sorted(sharded) == sorted(unsharded)
+    assert len(sharded) == len(records)
+    # a miswired host id must fail loudly, not scan an empty shard
+    with pytest.raises(AssertionError):
+        next(iter(CIFReader(root, columns=["url"]).scan_batches(host=4, n_hosts=4)))
+    with pytest.raises(AssertionError):
+        next(iter(CIFReader(root, columns=["url"]).scan_batches(host=2)))  # n_hosts=1
+
+
+def test_sharded_scan_concurrent_threads(crawl):
+    """Per-host shards scanned from concurrent threads against ONE reader:
+    stats lock keeps the totals exactly equal to an unsharded scan."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    root, records = crawl
+    r_ref = CIFReader(root, columns=["url", "fetchTime"])
+    for _ in r_ref.scan_batches(batch_size=64):
+        pass
+
+    r = CIFReader(root, columns=["url", "fetchTime"])
+    counts = [0] * 3
+
+    def scan_host(h):
+        for batch in r.scan_batches(batch_size=64, host=h, n_hosts=3):
+            counts[h] += len(batch["fetchTime"])
+
+    with ThreadPoolExecutor(max_workers=3) as pool:
+        list(pool.map(scan_host, range(3)))
+    assert sum(counts) == len(records)
+    assert vars(r.stats) == vars(r_ref.stats)
+
+
+# -- satellites ---------------------------------------------------------------
+
+
+def test_stable_partition_reproducible_across_processes(crawl):
+    """Reducer partitioning must not depend on PYTHONHASHSEED."""
+    code = (
+        "import sys; sys.path.insert(0, 'src');"
+        "from repro.core import stable_partition;"
+        "print([stable_partition(k, 7) for k in"
+        " ['a', 'text/html', 42, None, ('x', 1)]])"
+    )
+    outs = set()
+    for seed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
+        assert p.returncode == 0, p.stderr
+        outs.add(p.stdout.strip())
+    assert len(outs) == 1, f"partitioning varied across processes: {outs}"
+    expect = [stable_partition(k, 7) for k in ["a", "text/html", 42, None, ("x", 1)]]
+    assert outs.pop() == str(expect)
+
+
+def test_ragged_column_views(rnd):
+    vals = ["x" * rnd.randint(0, 200) + f"needle{i % 3}" for i in range(500)]
+    buf = bytearray()
+    for v in vals:
+        encode_cell(STRING(), v, buf)
+    col, end = decode_range(STRING(), bytes(buf), 0, len(vals))
+    assert isinstance(col, RaggedColumn) and end == len(buf)
+    assert col == vals and col.tolist() == vals and len(col) == 500
+    # vectorized predicate == python predicate
+    np.testing.assert_array_equal(
+        col.contains("needle1"), np.array(["needle1" in v for v in vals])
+    )
+    np.testing.assert_array_equal(
+        col.contains("absent-pattern"), np.zeros(500, bool)
+    )
+    # zero-copy slicing and fancy indexing: same underlying buffer
+    view = col[100:200]
+    assert view.buffer is col.buffer and view == vals[100:200]
+    idx = np.array([3, 77, 421])
+    assert col[idx].buffer is col.buffer and col[idx] == [vals[i] for i in idx]
+    mask = col.contains("needle2")
+    assert col[mask] == [v for v in vals if "needle2" in v]
+    # contains stays correct on duplicated / unsorted gathered views
+    dup = col[[1, 1, 0]]
+    np.testing.assert_array_equal(
+        dup.contains("needle1"),
+        np.array(["needle1" in vals[i] for i in (1, 1, 0)]),
+    )
+    shuffled = col[np.array([421, 3, 77, 3])]
+    np.testing.assert_array_equal(
+        shuffled.contains("needle0"),
+        np.array(["needle0" in vals[i] for i in (421, 3, 77, 3)]),
+    )
+    # concat across different buffers rebases offsets without per-cell work
+    other, _ = decode_range(STRING(), bytes(buf), 0, len(vals))
+    cat = RaggedColumn.concat([col[:10], other[490:]])
+    assert cat == vals[:10] + vals[490:]
+
+
+def test_ragged_as_matrix_fixed_stride(rnd):
+    from repro.core.schema import BYTES
+
+    blobs = [bytes([rnd.randrange(256) for _ in range(8)]) for _ in range(64)]
+    buf = bytearray()
+    for b in blobs:
+        encode_cell(BYTES(), b, buf)
+    col, _ = decode_range(BYTES(), bytes(buf), 0, 64)
+    m = col.as_matrix()
+    assert m.shape == (64, 8)
+    assert [bytes(row) for row in m] == blobs
+
+
+def test_dcsl_lookup_many_matches_scalar(rnd):
+    typ = MAP(STRING())
+    vals = [
+        {f"k{rnd.randint(0, 15)}": f"v{rnd.randint(0, 99)}"
+         for _ in range(rnd.randint(0, 6))}
+        for _ in range(2600)
+    ]
+    w = ColumnFileWriter(typ, ColumnFormat("dcsl"))
+    for v in vals:
+        w.append(v)
+    raw = w.finish()
+    for size in (1, 37, 400):
+        idx = sorted(rnd.sample(range(2600), size))
+        batch = ColumnFileReader(raw, typ)
+        scalar = ColumnFileReader(raw, typ)
+        assert (
+            batch.lookup_many(idx, "k5")
+            == [scalar.lookup(i, "k5") for i in idx]
+            == [vals[i].get("k5") for i in idx]
+        )
+
+
+def test_batch_columns_lazy_and_sparse(crawl):
+    """Projection at column-batch granularity: untouched columns never
+    decode; sparse() fetches only the requested rows."""
+    root, records = crawl
+    r = CIFReader(root, columns=["url", "metadata", "content"])
+    ids, open_batches = r.job_inputs(batch_size=128)
+    cols = next(open_batches(ids[0]))
+    urls = cols["url"]
+    assert urls == [rec["url"] for rec in records[:128]]
+    sr = cols._sr
+    assert sr.readers["content"].counters.cells_decoded == 0  # never touched
+    got = cols.sparse("metadata", [0, 5, 17], key="content-type")
+    assert got == [records[i]["metadata"]["content-type"] for i in (0, 5, 17)]
+    # full read after sparse on the same column is rejected (forward-only)
+    with pytest.raises(AssertionError):
+        cols["metadata"]
+
+
+def test_workqueue_thread_safety_hammer():
+    """Many threads racing next_split/complete: every split claimed exactly
+    once, all complete, and stealing never hands out a duplicate."""
+    p = Placement(n_splits=60, n_hosts=6)
+    wq = WorkQueue(p, dead_hosts={2})
+    claimed = []
+    lock = threading.Lock()
+
+    def worker(host):
+        while True:
+            s = wq.next_split(host)
+            if s is None:
+                return
+            with lock:
+                claimed.append(s)
+            wq.complete(s)
+
+    threads = [threading.Thread(target=worker, args=(h,))
+               for h in range(6) if h != 2 for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(claimed) == list(range(60)), "split claimed twice or lost"
+    assert wq.all_done()
+
+
+@pytest.mark.slow
+def test_concurrent_run_job_stress(crawl):
+    """Repeated concurrent jobs (stealing + dead hosts) stay bit-identical."""
+    root, records = crawl
+    base = None
+    for trial in range(6):
+        r = CIFReader(root, columns=["url", "metadata"])
+        ids, open_batches = r.job_inputs(batch_size=64)
+        res = run_job(ids, reduce_fn=fig1_reduce, n_hosts=6, dead_hosts={trial % 6},
+                      open_split_batches=open_batches,
+                      map_batch_fn=fig1_map_batch(), n_workers=5)
+        if base is None:
+            base = res.output
+        assert res.output == base
+        assert res.remote_reads == 0
