@@ -126,7 +126,7 @@ def tokens(csv: Csv, results: Dict, n_docs: int = 300, seq_len: int = 256) -> No
         shutil.rmtree(tmp, ignore_errors=True)
 
 
-def batch_decode(csv: Csv, n: int = 50_000) -> None:
+def batch_decode(csv: Csv, n: int = 50_000, write_json: bool = True) -> None:
     results: Dict[str, Dict[str, float]] = {}
     columns(csv, results, n=n)
     tokens(csv, results)
@@ -140,6 +140,9 @@ def batch_decode(csv: Csv, n: int = 50_000) -> None:
             if k.split("-")[0] in ("int32", "int64", "float32")
         )},
     }
+    if not write_json:  # smoke runs must not clobber the full-size artifact
+        csv.add("batch_decode/json", 0.0, "(skipped: smoke)")
+        return
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     csv.add("batch_decode/json", 0.0, JSON_PATH)

@@ -1,0 +1,157 @@
+"""encodings — decode throughput of the per-block encoding layer.
+
+Measures full-column ``read_range`` throughput for each lightweight
+encoding against a plain-encoded copy of the SAME data (low-cardinality
+strings for dict, sorted ints for delta-bitpack, run-heavy ints for RLE),
+plus a Fig.-1-style predicate job over a low-cardinality string column where
+the dict encoding's code-level pushdown (``DictRaggedColumn.eq`` evaluates
+once per DICTIONARY entry) replaces per-cell string predicates.
+
+Emits ``BENCH_encodings.json``:
+
+    {"results": {name: {"plain_s": .., "enc_s": .., "speedup": ..}},
+     "floor": {"dict_speedup": .., "delta_speedup": ..}}
+
+The floor entries back the acceptance gate: dict on low-cardinality strings
+and delta on sorted ints must decode >= 2x faster than plain.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+from typing import Dict
+
+import numpy as np
+
+from repro.core import INT64, STRING, Schema
+from repro.core.colfile import ColumnFileReader, ColumnFileWriter, ColumnFormat
+from repro.core.cof import COFWriter
+from repro.core.cif import CIFReader
+from repro.core.mapreduce import run_job
+
+from .common import Csv, timeit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_encodings.json")
+
+CONTENT_TYPES = ["text/html", "application/pdf", "text/plain", "image/png",
+                 "application/json", "text/xml"]
+
+
+def _datasets(n: int, seed: int = 0):
+    rnd = random.Random(seed)
+    rng = np.random.default_rng(seed)
+    return {
+        "lowcard-string": (STRING(), [rnd.choice(CONTENT_TYPES) for _ in range(n)],
+                           "dict"),
+        "sorted-int": (INT64(), np.cumsum(rng.integers(0, 50, n)).tolist(), "delta"),
+        "runs-int": (INT64(), [int(v) for v in np.repeat(rng.integers(0, 9, n // 40 + 1),
+                                                         40)[:n]], "rle"),
+    }
+
+
+def _col(typ, vals, encoding):
+    w = ColumnFileWriter(typ, ColumnFormat("plain", encoding=encoding))
+    for v in vals:
+        w.append(v)
+    return w.finish()
+
+
+def decode_throughput(csv: Csv, results: Dict, n: int) -> None:
+    for name, (typ, vals, enc) in _datasets(n).items():
+        raw_plain = _col(typ, vals, "plain")
+        raw_enc = _col(typ, vals, enc)
+        t_p, _ = timeit(lambda: ColumnFileReader(raw_plain, typ).read_range(0, n), repeat=3)
+        t_e, _ = timeit(lambda: ColumnFileReader(raw_enc, typ).read_range(0, n), repeat=3)
+        speedup = t_p / t_e
+        csv.add(f"encodings/{name}/plain", t_p / n, f"bytes={len(raw_plain)}")
+        csv.add(f"encodings/{name}/{enc}", t_e / n,
+                f"speedup={speedup:.1f}x bytes={len(raw_enc)}")
+        results[f"{name}-{enc}"] = {
+            "plain_s": t_p, "enc_s": t_e, "speedup": round(speedup, 2),
+            "plain_bytes": len(raw_plain), "enc_bytes": len(raw_enc),
+        }
+
+
+def predicate_job(csv: Csv, results: Dict, n: int) -> None:
+    """Fig.-1-shaped job on a low-cardinality column: count matching rows of
+    ``language == "jp"`` in batch mode — auto (dict-encoded, code pushdown)
+    vs forced-plain storage of the same records."""
+    import shutil
+    import tempfile
+
+    rnd = random.Random(1)
+    schema = Schema([("language", STRING()), ("fetchTime", INT64())])
+    records = [{"language": rnd.choice(["en", "jp", "de", "fr", "es"]),
+                "fetchTime": 1300000000 + i} for i in range(n)]
+
+    def map_batch(split_id, cols, emit):
+        lang = cols["language"]
+        if hasattr(lang, "eq"):
+            hits = int(lang.eq("jp").sum())
+        else:
+            hits = sum(1 for v in lang if v == "jp")
+        if hits:
+            emit(None, hits)
+
+    tmp = tempfile.mkdtemp(prefix="bench-encodings-")
+    try:
+        times = {}
+        for mode, encoding in [("dict", "auto"), ("plain", "plain")]:
+            root = os.path.join(tmp, mode)
+            w = COFWriter(root, schema,
+                          formats={"language": ColumnFormat("plain", encoding=encoding)},
+                          split_records=4096)
+            w.append_all(records)
+            w.close()
+
+            def job():
+                r = CIFReader(root, columns=["language"])
+                ids, open_batches = r.job_inputs(batch_size=4096)
+                return run_job(ids, n_hosts=2, open_split_batches=open_batches,
+                               map_batch_fn=map_batch)
+
+            t, res = timeit(job, repeat=3)
+            expect = sum(1 for r_ in records if r_["language"] == "jp")
+            assert sum(sum(vs) for _, vs in res.output) == expect
+            times[mode] = t
+            csv.add(f"encodings/fig1-lowcard/{mode}", t / n, "")
+        results["fig1-lowcard"] = {
+            "plain_s": times["plain"], "enc_s": times["dict"],
+            "speedup": round(times["plain"] / times["dict"], 2),
+        }
+        csv.add("encodings/fig1-lowcard/speedup", 0.0,
+                f"{results['fig1-lowcard']['speedup']}x")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def encodings(csv: Csv, n: int = 200_000, write_json: bool = True) -> None:
+    results: Dict[str, Dict[str, float]] = {}
+    decode_throughput(csv, results, n=n)
+    predicate_job(csv, results, n=max(n // 4, 4096))
+    payload = {
+        "bench": "encodings",
+        "n_cells": n,
+        "results": results,
+        "floor": {
+            "dict_speedup": results["lowcard-string-dict"]["speedup"],
+            "delta_speedup": results["sorted-int-delta"]["speedup"],
+            "rle_speedup": results["runs-int-rle"]["speedup"],
+        },
+    }
+    if not write_json:  # smoke runs must not clobber the full-size artifact
+        csv.add("encodings/json", 0.0, "(skipped: smoke)")
+        return
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    csv.add("encodings/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+    c = Csv()
+    encodings(c)

@@ -15,33 +15,48 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger datasets")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-fast sizes for every benchmark, so the "
+                         "whole suite doubles as a tier-2 check")
     ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
                     "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode,"
-                    "sharded_scan")
+                    "sharded_scan,encodings")
     args = ap.parse_args()
+    assert not (args.full and args.smoke), "pick one of --full / --smoke"
     only = set(args.only.split(",")) if args.only else None
     mul = 4 if args.full else 1
 
     from .common import Csv
     from . import batch_decode as bd
     from . import deser_and_kernels as dk
+    from . import encodings as ec
     from . import sharded_scan as ss
     from . import storage_formats as sf
 
     csv = Csv()
     print("name,us_per_call,derived")
+
+    def size(full_n: int, smoke_n: int) -> int:
+        return smoke_n if args.smoke else full_n * mul
+
     jobs = [
-        ("fig7", lambda: sf.fig7(csv, n=8000 * mul)),
-        ("table1", lambda: sf.table1(csv, n=6000 * mul)),
-        ("fig8", lambda: dk.fig8(csv, n=200_000 * mul)),
-        ("fig9", lambda: sf.fig9(csv, n=8000 * mul)),
-        ("fig10", lambda: sf.fig10(csv, n=20000 * mul)),
-        ("fig11", lambda: sf.fig11(csv, n=4000 * mul)),
-        ("table2", lambda: sf.table2(csv, n=8000 * mul)),
+        ("fig7", lambda: sf.fig7(csv, n=size(8000, 800))),
+        ("table1", lambda: sf.table1(csv, n=size(6000, 600))),
+        ("fig8", lambda: dk.fig8(csv, n=size(200_000, 20_000))),
+        ("fig9", lambda: sf.fig9(csv, n=size(8000, 800))),
+        ("fig10", lambda: sf.fig10(csv, n=size(20000, 2000))),
+        ("fig11", lambda: sf.fig11(csv, n=size(4000, 800))),
+        ("table2", lambda: sf.table2(csv, n=size(8000, 800))),
         ("kernels", lambda: dk.kernels(csv)),
-        ("pipeline", lambda: dk.pipeline(csv, n_docs=400 * mul)),
-        ("batch_decode", lambda: bd.batch_decode(csv, n=50_000 * mul)),
-        ("sharded_scan", lambda: ss.sharded_scan(csv, n=24_000 * mul)),
+        ("pipeline", lambda: dk.pipeline(csv, n_docs=size(400, 60))),
+        # smoke runs skip the BENCH_*.json writes: the committed artifacts
+        # hold full-size numbers and must not be clobbered by tiny-n runs
+        ("batch_decode", lambda: bd.batch_decode(csv, n=size(50_000, 8000),
+                                                 write_json=not args.smoke)),
+        ("sharded_scan", lambda: ss.sharded_scan(csv, n=size(24_000, 4000),
+                                                 write_json=not args.smoke)),
+        ("encodings", lambda: ec.encodings(csv, n=size(200_000, 20_000),
+                                           write_json=not args.smoke)),
     ]
     failures = []
     for name, fn in jobs:

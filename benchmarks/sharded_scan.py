@@ -132,7 +132,7 @@ def _agg_batch(root: str, workers: int = 1):
     )
 
 
-def sharded_scan(csv: Csv, n: int = 24_000) -> None:
+def sharded_scan(csv: Csv, n: int = 24_000, write_json: bool = True) -> None:
     results: Dict[str, Dict] = {}
     split_records = 2048
     tmp = tempfile.mkdtemp(prefix="bench-shardedscan-")
@@ -200,6 +200,9 @@ def sharded_scan(csv: Csv, n: int = 24_000) -> None:
             "workers_speedup": results["scan_agg"]["workers_speedup"],
         },
     }
+    if not write_json:  # smoke runs must not clobber the full-size artifact
+        csv.add("sharded_scan/json", 0.0, "(skipped: smoke)")
+        return
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     csv.add("sharded_scan/json", 0.0, JSON_PATH)

@@ -9,13 +9,17 @@ Public API:
     run_job, fig1_map, fig1_reduce          (mapreduce)
 Baselines: seqfile (SEQ), textfile (TXT), rowgroup (RCFile).
 """
-from .cif import BatchColumns, CIFReader, ScanStats, list_splits, read_schema
+from .cif import (
+    BatchColumns, CIFReader, ScanStats, format_storage_report, list_splits,
+    read_schema, storage_report,
+)
 from .cof import COFWriter, add_column, split_name
 from .colfile import CBLOCK_RECORDS, ColumnFileReader, ColumnFileWriter, ColumnFormat
+from .encodings import ENCODINGS, DictPage, encode_block, plain_size
 from .lazy import EagerRecord, LazyRecord, Record
 from .mapreduce import JobResult, fig1_map, fig1_map_batch, fig1_reduce, run_job
 from .placement import Placement, WorkQueue, stable_partition
-from .varcodec import RaggedColumn
+from .varcodec import DictRaggedColumn, RaggedColumn
 from .schema import (
     ARRAY,
     BOOL,
@@ -35,10 +39,11 @@ from .schema import (
 __all__ = [
     "ARRAY", "BOOL", "BYTES", "BatchColumns", "CBLOCK_RECORDS", "CIFReader",
     "COFWriter", "ColumnFileReader", "ColumnFileWriter", "ColumnFormat",
-    "ColumnType", "EagerRecord", "FLOAT32", "FLOAT64", "INT32", "INT64",
-    "JobResult", "LazyRecord", "MAP", "Placement", "RECORD", "Record",
-    "RaggedColumn", "STRING", "ScanStats", "Schema", "WorkQueue",
-    "add_column", "fig1_map", "fig1_map_batch", "fig1_reduce", "list_splits",
-    "read_schema", "run_job", "split_name", "stable_partition",
-    "urlinfo_schema",
+    "ColumnType", "DictPage", "DictRaggedColumn", "EagerRecord", "ENCODINGS",
+    "FLOAT32", "FLOAT64", "INT32", "INT64", "JobResult", "LazyRecord", "MAP",
+    "Placement", "RECORD", "Record", "RaggedColumn", "STRING", "ScanStats",
+    "Schema", "WorkQueue", "add_column", "encode_block", "fig1_map",
+    "fig1_map_batch", "fig1_reduce", "format_storage_report", "list_splits",
+    "plain_size", "read_schema", "run_job", "split_name", "stable_partition",
+    "storage_report", "urlinfo_schema",
 ]

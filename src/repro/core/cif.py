@@ -57,6 +57,52 @@ def read_schema(root: str) -> Schema:
         return Schema.from_json(f.read())
 
 
+def storage_report(root: str) -> Dict[str, Dict[str, Any]]:
+    """Aggregate each column's write-time encoding stats across all splits.
+
+    Returns ``{column: {"kind", "blocks": {encoding: count}, "raw_bytes",
+    "encoded_bytes", "file_bytes", "ratio"}}`` from the ``_meta.json``
+    sidecars only (no column file is opened).  Splits written before the
+    encoding layer carry no ``encodings`` entry and report what is known
+    (file bytes, kind).
+    """
+    report: Dict[str, Dict[str, Any]] = {}
+    for _, sdir in list_splits(root):
+        with open(os.path.join(sdir, "_meta.json")) as f:
+            meta = json.load(f)
+        for name, fmt in meta.get("columns", {}).items():
+            col = report.setdefault(name, {
+                "kind": fmt.get("kind", "plain"), "blocks": {},
+                "raw_bytes": 0, "encoded_bytes": 0, "file_bytes": 0,
+            })
+            col["file_bytes"] += meta.get("bytes", {}).get(name, 0)
+            enc = meta.get("encodings", {}).get(name)
+            if enc:
+                for k, v in enc.get("blocks", {}).items():
+                    col["blocks"][k] = col["blocks"].get(k, 0) + v
+                col["raw_bytes"] += enc.get("raw_bytes", 0)
+                col["encoded_bytes"] += enc.get("encoded_bytes", 0)
+    for col in report.values():
+        col["ratio"] = (
+            round(col["encoded_bytes"] / col["raw_bytes"], 3)
+            if col["raw_bytes"] else 1.0
+        )
+    return report
+
+
+def format_storage_report(root: str) -> str:
+    """Human-readable per-column storage report (load_data prints this)."""
+    lines = [f"{'column':<12} {'kind':<9} {'blocks':<28} "
+             f"{'raw':>10} {'encoded':>10} {'ratio':>6}"]
+    for name, col in storage_report(root).items():
+        blocks = ",".join(f"{k}:{v}" for k, v in sorted(col["blocks"].items())) or "-"
+        lines.append(
+            f"{name:<12} {col['kind']:<9} {blocks:<28} "
+            f"{col['raw_bytes']:>10} {col['encoded_bytes']:>10} {col['ratio']:>6}"
+        )
+    return "\n".join(lines)
+
+
 @dataclass
 class ScanStats:
     """Aggregated instrumentation across a scan — the paper's Table 1 columns."""

@@ -105,6 +105,10 @@ class COFWriter:
             "n_records": self._split_n,
             "columns": {n: asdict(self.formats[n]) for n in self.schema.names()},
             "bytes": sizes,
+            # write-time encoding selection made observable: per-column block
+            # histogram + raw-vs-encoded byte totals (cif.storage_report
+            # aggregates these across splits)
+            "encodings": {n: w.encoding_stats() for n, w in self._writers.items()},
         }
         with open(os.path.join(sdir, "_meta.json"), "w") as f:
             json.dump(meta, f)
@@ -153,6 +157,7 @@ def add_column(
         os.replace(tmp, path)
         meta["columns"][name] = asdict(fmt)
         meta["bytes"][name] = len(raw)
+        meta.setdefault("encodings", {})[name] = w.encoding_stats()
         with open(os.path.join(sdir, "_meta.json"), "w") as f:
             json.dump(meta, f)
     with open(os.path.join(root, "schema.json"), "w") as f:

@@ -1,43 +1,75 @@
 """Column-file container: one file per column per split-directory (§4.2).
 
-Layout:  [MAGIC "RCOL"][u8 version][kind str][codec str][uvarint n_records]
-         [uvarint body_len][body]
+Layout (version 2):
+         [MAGIC "RCOL"][u8 version][kind str][codec str][encoding str]
+         [uvarint n_records][uvarint body_len][body]
+
+Version 1 files (written before the encoding layer existed) have no
+``encoding`` field and raw per-cell bodies; the reader still reads them
+bit-for-bit (see ``tests/test_encodings.py::test_reads_pre_encoding_fixtures``).
 
 Kinds (the paper's five metadata-column layouts from Table 1 map onto these):
-  plain    — serialized cells back-to-back                      (CIF)
-  skiplist — cells interleaved with skip blocks                 (CIF-SL)
-  cblock   — compressed blocks, codec ∈ {lzo, zlib}             (CIF-LZO/-ZLIB)
-  dcsl     — dictionary-compressed skip list (map columns)      (CIF-DCSL)
+  plain    — self-describing encoded blocks, codec "none"        (CIF)
+  skiplist — cells interleaved with skip blocks                  (CIF-SL)
+  cblock   — compressed encoded blocks, codec ∈ {lzo, zlib}      (CIF-LZO/-ZLIB)
+  dcsl     — dictionary-compressed skip list (map columns)       (CIF-DCSL)
+
+Encoding layer (v2): between cell serialization (varcodec) and this
+container sits ``encodings.py`` — plain / dict / RLE / delta-bitpack chosen
+automatically PER BLOCK from write-time stats (or forced via
+``ColumnFormat.encoding``).  For the block-structured kinds (plain, cblock)
+each block is ``[u8 tag][payload]`` inside the standard compressed-block
+framing (codec "none" for plain), so a reader dispatches on the tag at
+block granularity.  For skiplist the whole file resolves to either the
+classic per-cell stream (encoding "plain", bit-identical to v1 bodies —
+the pointer-walk/lane batch fast paths still apply) or dict mode: a
+dictionary page at every ``SKIPLIST_DICT_BLOCK`` boundary (aligned with the
+top skip level, like DCSL) and one uvarint code per cell, so per-cell
+skip/jump semantics survive.  DCSL is already its own dictionary encoding
+and records encoding "plain".
 
 Every reader exposes monotone ``value_at(index)`` plus instrumentation
 counters.  ``bytes_touched`` models the paper's "Data Read" column: bytes the
-reader actually traverses (skip-list jumps and undecompressed blocks are NOT
-touched, matching how CIF-SL reads 75GB where CIF reads 96GB in Table 1).
+reader actually traverses (skip-list jumps, undecompressed blocks, and
+never-visited encoded blocks are NOT touched).
 
-Batch fast path: ``read_range(start, stop)`` decodes a span of records in a
-few vectorized passes instead of one ``value_at`` call per cell — plain
-decodes the span in one pass, cblock decompresses each overlapping block
-exactly once and bulk-decodes its payload, skiplist/dcsl jump to ``start``
-then bulk-decode forward.  ``read_many(sorted_indices)`` batches contiguous
-runs.  Counters are updated in aggregate so every batch read reports the
-same ``ReadCounters`` a scalar loop over the same records would.
+Batch fast path: ``read_range(start, stop)``/``read_many(sorted_ids)``
+decode spans vectorized.  Scalar and batch access share one code path per
+kind, so ``ReadCounters`` are bit-identical between a ``value_at`` loop and
+the batch calls over the same records — for every encoding (enforced by
+tests/test_encodings.py).
 """
 from __future__ import annotations
 
 import struct
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .compression import CODECS, compress_block, decompress_block, read_block_header
 from .dcsl import DICT_BLOCK, DCSLColumnReader, DCSLColumnWriter
+from .encodings import (
+    ENC_TAGS,
+    ENCODINGS,
+    TAG_NAMES,
+    DictPage,
+    decode_block,
+    encode_block,
+    plain_size,
+)
 from .schema import ColumnType
 from .skiplist import SkipListReader, SkipListWriter
 from .varcodec import (
+    DictRaggedColumn,
     RaggedColumn,
     concat_values,
     decode_cell,
     decode_range,
     decode_ragged_lanes,
+    decode_ragged_range,
+    decode_uvarint_range,
+    decode_varint_range,
     empty_values,
     encode_cell,
     read_uvarint,
@@ -47,9 +79,19 @@ from .varcodec import (
 )
 
 MAGIC = b"RCOL"
-VERSION = 1
+VERSION = 2  # v1 (pre-encoding-layer) files remain readable
 
 CBLOCK_RECORDS = 256  # records per compressed block (load-time knob, §5.3)
+PLAIN_BLOCK_RECORDS = 2048  # records per encoded block for the plain kind
+# fixed-width kinds have no per-value decode cost to amortize and only RLE as
+# an alternative encoding, so they use much larger blocks — a full-column
+# scan stays within a few frombuffer passes of the pre-encoding layout
+FIXED_BLOCK_RECORDS = 16384
+SKIPLIST_DICT_BLOCK = 1000  # dict page cadence; aligned with max skip level
+
+# skiplist dict mode keeps cells individually skippable (one uvarint code),
+# so only these per-cell-codeable kinds are eligible
+SL_DICT_KINDS = ("int32", "int64", "string", "bytes")
 
 
 @dataclass
@@ -59,13 +101,41 @@ class ColumnFormat:
     kind: str = "plain"  # plain | skiplist | cblock | dcsl
     codec: str = "none"  # for cblock: lzo | zlib
     block_records: int = CBLOCK_RECORDS
+    # encoding policy: "auto" selects per block from write-time stats;
+    # "plain"/"dict"/"rle"/"delta" force one (the deterministic test knob)
+    encoding: str = "auto"
+    # records per encoded block for the plain kind (0 = PLAIN_BLOCK_RECORDS);
+    # the token corpus sets this to split_records so each split is ONE
+    # dict page whose packed words ship straight to the device kernels
+    enc_block: int = 0
+
+    def blocks_of(self) -> int:
+        if self.kind == "cblock":
+            return self.block_records
+        return self.enc_block or PLAIN_BLOCK_RECORDS
 
     def validate(self, typ: ColumnType) -> None:
         assert self.kind in ("plain", "skiplist", "cblock", "dcsl"), self.kind
         if self.kind == "dcsl":
             assert typ.kind == "map", "dcsl requires a map column"
+            assert self.encoding in ("auto", "plain"), (
+                "dcsl is already dictionary-encoded; encoding must stay plain"
+            )
         if self.kind == "cblock":
             assert self.codec in ("lzo", "zlib"), self.codec
+        if self.kind == "skiplist":
+            assert self.encoding in ("auto", "plain", "dict"), (
+                f"skiplist cells must stay individually skippable; "
+                f"encoding {self.encoding!r} is block-oriented"
+            )
+            if self.encoding == "dict":
+                assert typ.kind in SL_DICT_KINDS, (
+                    f"skiplist dict mode unsupported for {typ.kind}"
+                )
+        if self.kind in ("plain", "cblock") and self.encoding not in ("auto", "plain"):
+            assert ENCODINGS[self.encoding].supports(typ), (
+                f"encoding {self.encoding!r} unsupported for {typ.kind}"
+            )
 
 
 @dataclass
@@ -100,59 +170,139 @@ class ColumnFileWriter:
         self.typ = typ
         self.fmt = fmt
         self.n = 0
+        # per-column encoding stats, persisted by COF into _meta.json
+        self._stats: Dict[str, Any] = {"blocks": {}, "raw_bytes": 0, "encoded_bytes": 0}
         k = fmt.kind
-        if k == "plain":
-            self._buf = bytearray()
+        if k in ("plain", "cblock"):
+            self._body = bytearray()
+            self._pending: List[Any] = []
+            self._block_cap = fmt.blocks_of()
+            if (k == "plain" and not fmt.enc_block
+                    and typ.kind in ("float32", "float64", "bool")):
+                self._block_cap = FIXED_BLOCK_RECORDS
         elif k == "skiplist":
-            self._slw = SkipListWriter(lambda v, b: encode_cell(typ, v, b))
-        elif k == "cblock":
-            self._buf = bytearray()
-            self._block = bytearray()
-            self._block_n = 0
+            self._sl_dict_eligible = (
+                fmt.encoding in ("auto", "dict") and typ.kind in SL_DICT_KINDS
+            )
+            if self._sl_dict_eligible:
+                self._values: List[Any] = []  # resolved dict-vs-plain at finish
+            else:
+                self._slw = SkipListWriter(lambda v, b: encode_cell(typ, v, b))
         elif k == "dcsl":
             self._dcsl = DCSLColumnWriter(typ, block=DICT_BLOCK)
 
     def append(self, v: Any) -> None:
         k = self.fmt.kind
-        if k == "plain":
-            encode_cell(self.typ, v, self._buf)
-        elif k == "skiplist":
-            self._slw.append(v)
-        elif k == "cblock":
-            encode_cell(self.typ, v, self._block)
-            self._block_n += 1
-            if self._block_n == self.fmt.block_records:
+        if k in ("plain", "cblock"):
+            self._pending.append(v)
+            if len(self._pending) == self._block_cap:
                 self._flush_block()
+        elif k == "skiplist":
+            if self._sl_dict_eligible:
+                self._values.append(v)
+            else:
+                self._slw.append(v)
         elif k == "dcsl":
             self._dcsl.append(v)
         self.n += 1
 
     def _flush_block(self) -> None:
-        self._buf += compress_block(self.fmt.codec, self._block_n, bytes(self._block))
-        self._block = bytearray()
-        self._block_n = 0
+        name, payload, raw = encode_block(self.typ, self._pending, self.fmt.encoding)
+        codec = self.fmt.codec if self.fmt.kind == "cblock" else "none"
+        self._body += compress_block(
+            codec, len(self._pending), bytes([ENC_TAGS[name]]) + payload
+        )
+        s = self._stats
+        s["blocks"][name] = s["blocks"].get(name, 0) + 1
+        s["raw_bytes"] += raw
+        s["encoded_bytes"] += len(payload) + 1
+        self._pending = []
+
+    # -- skiplist resolution -------------------------------------------------
+    def _sl_dict_wins(self) -> bool:
+        if self.fmt.encoding == "dict":
+            return True
+        from .encodings import MARGIN, _uvarint_sizes  # sibling internals
+
+        total_plain = total_dict = 0
+        for i in range(0, len(self._values), SKIPLIST_DICT_BLOCK):
+            block = self._values[i : i + SKIPLIST_DICT_BLOCK]
+            uniq, inv = np.unique(np.asarray(block, object), return_inverse=True)
+            total_plain += plain_size(self.typ, block)
+            total_dict += (
+                plain_size(self.typ, uniq.tolist())
+                + int(_uvarint_sizes(inv.astype(np.uint64)).sum())
+                + 2
+            )
+        return total_dict < total_plain * MARGIN
+
+    def _finish_skiplist(self) -> Tuple[bytes, str]:
+        if not self._sl_dict_eligible:
+            body = self._slw.finish()
+            self._stats = {"blocks": {"plain": 1}, "raw_bytes": len(body),
+                           "encoded_bytes": len(body)}
+            return body, "plain"
+        values = self._values
+        if not self._sl_dict_wins():
+            slw = SkipListWriter(lambda v, b: encode_cell(self.typ, v, b))
+            for v in values:
+                slw.append(v)
+            body = slw.finish()
+            self._stats = {"blocks": {"plain": 1}, "raw_bytes": len(body),
+                           "encoded_bytes": len(body)}
+            return body, "plain"
+        code_of: Dict[Any, int] = {}
+
+        def hook(i: int, buf: bytearray) -> None:
+            if i % SKIPLIST_DICT_BLOCK == 0:
+                nonlocal code_of
+                uniq = sorted(set(values[i : i + SKIPLIST_DICT_BLOCK]))
+                code_of = {v: c for c, v in enumerate(uniq)}
+                write_uvarint(buf, len(uniq))
+                for u in uniq:
+                    encode_cell(self.typ, u, buf)
+
+        slw = SkipListWriter(
+            lambda v, b: write_uvarint(b, code_of[v]), boundary_hook=hook
+        )
+        for v in values:
+            slw.append(v)
+        body = slw.finish()
+        n_blocks = (len(values) + SKIPLIST_DICT_BLOCK - 1) // SKIPLIST_DICT_BLOCK
+        self._stats = {
+            "blocks": {"dict": n_blocks},
+            "raw_bytes": plain_size(self.typ, values),
+            "encoded_bytes": len(body),
+        }
+        return body, "dict"
 
     def finish(self) -> bytes:
         k = self.fmt.kind
-        if k == "plain":
-            body = bytes(self._buf)
-        elif k == "skiplist":
-            body = self._slw.finish()
-        elif k == "cblock":
-            if self._block_n:
+        if k in ("plain", "cblock"):
+            if self._pending:
                 self._flush_block()
-            body = bytes(self._buf)
+            body, encoding = bytes(self._body), self.fmt.encoding
+        elif k == "skiplist":
+            body, encoding = self._finish_skiplist()
         elif k == "dcsl":
-            body = self._dcsl.finish()
+            body, encoding = self._dcsl.finish(), "plain"
+            self._stats = {"blocks": {"dcsl": 1}, "raw_bytes": len(body),
+                           "encoded_bytes": len(body)}
         out = bytearray()
         out += MAGIC
         out.append(VERSION)
         _write_str(out, self.fmt.kind)
         _write_str(out, self.fmt.codec)
+        _write_str(out, encoding)
         write_uvarint(out, self.n)
         write_uvarint(out, len(body))
         out += body
         return bytes(out)
+
+    def encoding_stats(self) -> Dict[str, Any]:
+        """Per-block encoding histogram + raw-vs-encoded byte totals (the
+        write-time selection made observable; COF persists this)."""
+        return dict(self._stats)
 
 
 # ===========================================================================
@@ -161,55 +311,238 @@ class ColumnFileWriter:
 
 
 class ColumnFileReader:
-    """Monotone reader over one column file; dispatches on the stored kind."""
+    """Monotone reader over one column file; dispatches on the stored kind
+    and, within block-structured kinds, on each block's encoding tag."""
 
     def __init__(self, raw: bytes, typ: ColumnType):
         assert raw[:4] == MAGIC, "bad column file magic"
-        assert raw[4] == VERSION
+        self.version = raw[4]
+        assert self.version in (1, VERSION), f"unknown column file version {raw[4]}"
         off = 5
         self.kind, off = _read_str(raw, off)
         self.codec, off = _read_str(raw, off)
+        if self.version >= 2:
+            self.encoding, off = _read_str(raw, off)
+        else:
+            self.encoding = "legacy"  # raw per-cell bodies, pre-encoding-layer
         self.n, off = read_uvarint(raw, off)
         body_len, off = read_uvarint(raw, off)
         self.body = raw[off : off + body_len]
         self.typ = typ
         self.counters = ReadCounters()
         self.file_bytes = len(raw)
+        # v2 block-structured kinds carry per-block encoding tags
+        self._enc = self.version >= 2 and self.kind in ("plain", "cblock")
+        self._sl_dict = self.kind == "skiplist" and self.encoding == "dict"
         self._init_kind()
 
     def _init_kind(self) -> None:
         k = self.kind
-        if k == "plain":
+        if k == "plain" and not self._enc:
             self._pos = 0
             self._off = 0
+        elif k in ("plain", "cblock") and self._enc:
+            self._init_blocks()
         elif k == "skiplist":
-            self._slr = SkipListReader(
-                self.body,
-                self.n,
-                lambda d, o: decode_cell(self.typ, d, o),
-                lambda d, o: skip_cell(self.typ, d, o),
-            )
-        elif k == "cblock":
-            # header-only scan: (n_records, payload_off, payload_len, first_idx)
-            self._blocks: List[Tuple[int, int, int, int]] = []
-            o, idx = 0, 0
-            while o < len(self.body):
-                nrec, plen, poff = read_block_header(self.body, o)
-                self._blocks.append((nrec, poff, plen, idx))
-                idx += nrec
-                o = poff + plen
-            self._cur_block = -1
-            self._payload = b""
-            self._intra_pos = 0
-            self._intra_off = 0
-            self._decompress = CODECS[self.codec][1]  # resolved once per reader
-            self.counters.bytes_touched += o - sum(b[2] for b in self._blocks)  # headers
+            if self._sl_dict:
+                self._sld_index = -1
+                self._sld_end: Dict[int, int] = {}
+                self._sld_arr: Optional[np.ndarray] = None
+                self._sld_starts = self._sld_lengths = None
+                self._slr = SkipListReader(
+                    self.body, self.n, self._sld_decode, self._sld_skip,
+                    boundary_hook=self._sld_hook,
+                )
+            else:
+                self._slr = SkipListReader(
+                    self.body,
+                    self.n,
+                    lambda d, o: decode_cell(self.typ, d, o),
+                    lambda d, o: skip_cell(self.typ, d, o),
+                )
+        elif k == "cblock":  # v1 legacy: per-cell payloads
+            self._init_legacy_cblock()
         elif k == "dcsl":
             self._dcsl = DCSLColumnReader(self.body, self.n, self.typ)
         else:
             raise ValueError(k)
 
-    # -- plain ---------------------------------------------------------------
+    def _scan_block_headers(self) -> None:
+        """Header-only scan of the compressed-block framing (shared by the
+        v2 encoded reader and the v1 legacy cblock reader): fills
+        ``_blocks`` with (n_records, payload_off, payload_len, first_idx)
+        and counts the header bytes as touched."""
+        self._blocks: List[Tuple[int, int, int, int]] = []
+        o, idx = 0, 0
+        while o < len(self.body):
+            nrec, plen, poff = read_block_header(self.body, o)
+            self._blocks.append((nrec, poff, plen, idx))
+            idx += nrec
+            o = poff + plen
+        self._cur_block = -1
+        self._decompress = CODECS[self.codec][1]  # resolved once per reader
+        self.counters.bytes_touched += o - sum(b[2] for b in self._blocks)
+
+    # -- v2 encoded blocks (plain + cblock share this machinery) -------------
+    def _init_blocks(self) -> None:
+        self._scan_block_headers()
+        self._firsts = np.array([b[3] for b in self._blocks] or [0], np.int64)
+        self._vals: Any = None
+        self._first = 0
+        self._pos = 0
+        self._page: Optional[DictPage] = None
+        self._page_touched = False
+
+    def _enc_load(self, bi: int) -> None:
+        nrec, poff, plen, first = self._blocks[bi]
+        c = self.counters
+        # re-decoding the current block (read_packed touched it raw, see
+        # below) must not recount its bytes
+        fresh = bi != self._cur_block
+        if fresh:
+            c.blocks_skipped += bi - self._cur_block - 1 if self._cur_block >= 0 else bi
+            c.bytes_touched += plen
+            self._page_touched = True  # read_packed must not recount either
+        if self.codec == "none":
+            data, off, end = self.body, poff + 1, poff + plen
+            tag = self.body[poff]
+        else:
+            payload = self._decompress(self.body[poff : poff + plen])
+            if fresh:
+                c.blocks_decompressed += 1
+            data, off, end = payload, 1, len(payload)
+            tag = payload[0]
+        if fresh:
+            c.bytes_decoded += end - off
+        self._vals = decode_block(self.typ, tag, data, off, end, nrec)
+        self._cur_block = bi
+        self._first = first
+
+    def _enc_range(self, start: int, stop: int) -> List[Any]:
+        """Serve cells ``[start, stop)`` from decoded block caches.  ONE code
+        path for scalar and batch access: a block is decoded (vectorized) on
+        first touch and counted once; cells are counted as served/skipped —
+        so a ``value_at`` loop and ``read_range`` report identical counters."""
+        assert start >= self._pos, "encoded-block reader is forward-only"
+        c = self.counters
+        chunks: List[Any] = []
+        i = start
+        while i < stop:
+            bi = int(np.searchsorted(self._firsts, i, side="right") - 1)
+            if bi != self._cur_block or self._vals is None:
+                # _vals is None when read_packed served this block raw
+                self._enc_load(bi)
+            nrec, _, _, first = self._blocks[bi]
+            gap_from = max(self._pos, first)
+            if i > gap_from:
+                c.cells_skipped += i - gap_from
+            k = min(stop, first + nrec) - i
+            lo = i - first
+            chunks.append(self._vals[lo : lo + k])
+            c.cells_decoded += k
+            i += k
+        self._pos = stop
+        return chunks
+
+    # -- raw dict-page access (the device-decode path) ------------------------
+    def _ensure_page(self) -> DictPage:
+        assert self._enc and self.kind == "plain" and self.codec == "none", (
+            "packed-code access needs an uncompressed plain-kind column"
+        )
+        assert len(self._blocks) == 1, "packed-code access needs the one-block layout"
+        if self._page is None:
+            nrec, poff, plen, _ = self._blocks[0]
+            tag = self.body[poff]
+            assert TAG_NAMES[tag] == "dict", (
+                f"packed-code access needs a dict-encoded block, got {TAG_NAMES[tag]!r}"
+            )
+            self._page = DictPage(self.typ, self.body, poff + 1, poff + plen, nrec)
+        return self._page
+
+    def dict_page(self) -> DictPage:
+        """Parse (and cache) the file's dictionary page WITHOUT decoding any
+        cells or advancing counters — metadata access (vocab size, bits)."""
+        return self._ensure_page()
+
+    def read_packed(self, ids: Sequence[int]) -> Tuple[np.ndarray, np.ndarray, int, int]:
+        """Packed code WORDS of array-dict cells ``ids`` (sorted, strictly
+        increasing) -> ``(words (B, W) uint32, dictionary, bits, cell_len)``.
+
+        This is the device-decode fast path: the words ship to the
+        ``bitunpack``/``dict_decode`` Pallas kernels as-is, no host unpack.
+        Counters advance exactly as ``read_many(ids)`` would (the page is
+        "decoded" once on first touch; cells count as served/skipped).
+        """
+        page = self._ensure_page()
+        assert self.typ.kind == "array", "read_packed needs array-of-int cells"
+        nrec, _, plen, _ = self._blocks[0]
+        c = self.counters
+        if not self._page_touched:
+            c.bytes_touched += plen
+            c.bytes_decoded += plen - 1
+            self._page_touched = True
+            self._cur_block = 0
+        wpc = page.words_per_cell()
+        cell_len = int(page.cell_lens[0]) if nrec else 0
+        assert nrec == 0 or (
+            (page.cell_lens == cell_len).all()
+        ), "read_packed needs equal-length cells"
+        w0 = int(wpc[0]) if nrec else 0
+        ids = [int(i) for i in ids]
+        if not ids:
+            return np.empty((0, w0), np.uint32), page.values, page.bits, cell_len
+        assert all(b > a for a, b in zip(ids, ids[1:])), "ids must be increasing"
+        assert ids[0] >= self._pos, "encoded-block reader is forward-only"
+        c.cells_skipped += (ids[-1] + 1 - self._pos) - len(ids)
+        c.cells_decoded += len(ids)
+        self._pos = ids[-1] + 1
+        words = page.words.reshape(nrec, w0)[np.asarray(ids, np.int64)]
+        return words, page.values, page.bits, cell_len
+
+    # -- skiplist dict mode ----------------------------------------------------
+    def _sld_hook(self, i: int, data: bytes, off: int) -> int:
+        if i % SKIPLIST_DICT_BLOCK != 0:
+            return off
+        if i == self._sld_index:  # idempotent revisit
+            return self._sld_end[i]
+        v, o = read_uvarint(data, off)
+        if self.typ.kind in ("string", "bytes"):
+            self._sld_starts, self._sld_lengths, o = decode_ragged_range(data, o, v)
+        else:
+            arr, o = decode_varint_range(data, o, v)
+            self._sld_arr = arr.astype(np.int32) if self.typ.kind == "int32" else arr
+        self._sld_index = i
+        self._sld_end[i] = o
+        return o
+
+    def _sld_decode(self, data: bytes, off: int) -> Tuple[Any, int]:
+        code, end = read_uvarint(data, off)
+        if self.typ.kind in ("string", "bytes"):
+            a = int(self._sld_starts[code])
+            raw = data[a : a + int(self._sld_lengths[code])]
+            v = raw.decode("utf-8") if self.typ.kind == "string" else bytes(raw)
+        else:
+            v = int(self._sld_arr[code])
+        return v, end
+
+    @staticmethod
+    def _sld_skip(data: bytes, off: int) -> int:
+        while data[off] & 0x80:
+            off += 1
+        return off + 1
+
+    def _sld_range_fn(self, d: bytes, o: int, cnt: int) -> Tuple[Any, int]:
+        codes, end = decode_uvarint_range(d, o, cnt)
+        codes = codes.astype(np.int64)
+        if self.typ.kind in ("string", "bytes"):
+            vals: Any = DictRaggedColumn(
+                self.body, self._sld_starts, self._sld_lengths, codes, self.typ.kind
+            )
+        else:
+            vals = self._sld_arr[codes]
+        return vals, end
+
+    # -- v1 legacy plain -------------------------------------------------------
     def _plain_at(self, index: int) -> Any:
         assert index >= self._pos, "plain reader is forward-only"
         while self._pos < index:
@@ -226,7 +559,31 @@ class ColumnFileReader:
         self._pos += 1
         return v
 
-    # -- cblock ----------------------------------------------------------------
+    def _plain_range(self, start: int, stop: int) -> Any:
+        assert start >= self._pos, "plain reader is forward-only"
+        c = self.counters
+        if start > self._pos:
+            new = skip_range(self.typ, self.body, self._off, start - self._pos)
+            c.bytes_touched += new - self._off
+            c.cells_skipped += start - self._pos
+            self._off = new
+            self._pos = start
+        vals, end = decode_range(self.typ, self.body, self._off, stop - start)
+        span = end - self._off
+        c.bytes_touched += span
+        c.bytes_decoded += span
+        c.cells_decoded += stop - start
+        self._off = end
+        self._pos = stop
+        return vals
+
+    # -- v1 legacy cblock ------------------------------------------------------
+    def _init_legacy_cblock(self) -> None:
+        self._scan_block_headers()
+        self._payload = b""
+        self._intra_pos = 0
+        self._intra_off = 0
+
     def _load_block(self, index: int) -> None:
         """Ensure the block containing ``index`` is decompressed (monotone:
         linear scan forward from the current block is fine)."""
@@ -288,29 +645,13 @@ class ColumnFileReader:
             i += k
         return chunks
 
-    # -- plain batch -----------------------------------------------------------
-    def _plain_range(self, start: int, stop: int) -> Any:
-        assert start >= self._pos, "plain reader is forward-only"
-        c = self.counters
-        if start > self._pos:
-            new = skip_range(self.typ, self.body, self._off, start - self._pos)
-            c.bytes_touched += new - self._off
-            c.cells_skipped += start - self._pos
-            self._off = new
-            self._pos = start
-        vals, end = decode_range(self.typ, self.body, self._off, stop - start)
-        span = end - self._off
-        c.bytes_touched += span
-        c.bytes_decoded += span
-        c.cells_decoded += stop - start
-        self._off = end
-        self._pos = stop
-        return vals
-
     # -- public -------------------------------------------------------------------
     def value_at(self, index: int) -> Any:
         assert 0 <= index < self.n, (index, self.n)
         k = self.kind
+        if self._enc:  # v2 plain/cblock: serve from the decoded block cache
+            v = self._enc_range(index, index + 1)[0][0]
+            return v.item() if isinstance(v, np.generic) else v
         if k == "plain":
             return self._plain_at(index)
         if k == "skiplist":
@@ -329,18 +670,24 @@ class ColumnFileReader:
         """Bulk-decode records ``[start, stop)`` — the batch fast path.
 
         Values come back as a NumPy array for numeric/bool columns, a
-        zero-copy ``RaggedColumn`` view for string/bytes columns, and a
-        Python list otherwise (see ``varcodec.decode_range``).  Access must
-        be monotone, exactly like ``value_at``; counters advance by the same
-        aggregate amounts a scalar loop over the span would produce.
+        zero-copy ``RaggedColumn`` (or ``DictRaggedColumn`` for dict-encoded
+        blocks) view for string/bytes columns, and a Python list otherwise.
+        Access must be monotone, exactly like ``value_at``; counters advance
+        by the same aggregate amounts a scalar loop over the span would.
         """
         assert 0 <= start <= stop <= self.n, (start, stop, self.n)
         if start == stop:
             return empty_values(self.typ)
         k = self.kind
+        if self._enc:
+            return concat_values(self.typ, self._enc_range(start, stop))
         if k == "plain":
             return self._plain_range(start, stop)
         if k == "skiplist":
+            if self._sl_dict:
+                chunks = self._slr.read_range(start, stop, self._sld_range_fn)
+                self._sync_sl_counters()
+                return concat_values(self.typ, chunks)
             lanes = None
             if self.typ.kind in ("string", "bytes"):
                 kind = self.typ.kind
@@ -385,6 +732,8 @@ class ColumnFileReader:
     def position(self) -> int:
         """Lowest index still readable by this monotone reader."""
         k = self.kind
+        if self._enc:
+            return self._pos
         if k == "plain":
             return self._pos
         if k == "skiplist":
@@ -406,9 +755,9 @@ class ColumnFileReader:
 
     def lookup_many(self, indices: Sequence[int], key: str) -> List[Optional[Any]]:
         """Batched sparse single-key access over a strictly-increasing index
-        set.  DCSL hops its skip-pointer chain between groups (O(1) per gap
-        instead of per-cell walking); other kinds fall back to a lookup
-        loop."""
+        set.  DCSL hops its skip-pointer chain between groups and walks
+        in-group cells in vectorized lockstep lanes; other kinds fall back
+        to a lookup loop."""
         if self.kind == "dcsl":
             vals = self._dcsl.lookup_many(indices, key)
             self._sync_dcsl_counters()

@@ -15,6 +15,12 @@ on zlib-only hosts instead of a cryptic decode error.
 A *compressed block* is:  [uvarint n_records][uvarint payload_len][payload]
 — the header alone lets a reader skip the whole block without decompressing
 it (the paper's lazy-decompression property).
+
+Since the encoding layer (encodings.py), this framing carries version-2
+column bodies for BOTH block-structured kinds: cblock payloads are
+``[u8 encoding tag][encoded block]`` compressed with lzo/zlib, and the
+plain kind reuses the identical framing with the "none" codec — one block
+scan, one skip rule, one reader for both.
 """
 from __future__ import annotations
 

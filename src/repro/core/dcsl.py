@@ -16,6 +16,8 @@ from __future__ import annotations
 import struct
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .schema import ColumnType
 from .skiplist import LEVELS, SkipListReader, SkipListWriter, levels_at
 from .varcodec import decode_cell, encode_cell, read_uvarint, skip_cell, write_uvarint
@@ -24,6 +26,69 @@ _U64 = struct.Struct("<Q")
 
 DICT_BLOCK = 1000
 assert DICT_BLOCK % max(LEVELS) == 0 or DICT_BLOCK == max(LEVELS)
+
+# map-value kinds the vectorized lane walker understands (everything else
+# falls back to the scalar in-group walk)
+_LANE_FIXED = {"float32": 4, "float64": 8, "bool": 1}
+_LANE_KINDS = ("int32", "int64", "string", "bytes") + tuple(_LANE_FIXED)
+# lockstep lanes amortize NumPy call overhead across lanes; below this many
+# requested indices the scalar chain walk is cheaper (measured crossover)
+_LANE_MIN_INDICES = 512
+
+
+def _uvarint_lanes(b: np.ndarray, pos: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Read one uvarint per lane -> (values, positions past them).  One NumPy
+    pass per byte position; multi-byte prefixes via masked continuation."""
+    first = b[pos].astype(np.int64)
+    val = first & 0x7F
+    q = pos + 1
+    cont = first >= 0x80
+    shift = 7
+    while cont.any():
+        ci = np.flatnonzero(cont)
+        nb = b[q[ci]].astype(np.int64)
+        val[ci] |= (nb & 0x7F) << shift
+        q[ci] += 1
+        shift += 7
+        nxt = np.zeros(len(cont), bool)
+        nxt[ci] = nb >= 0x80
+        cont = nxt
+    return val, q
+
+
+def _skip_uvarint_lanes(b: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    p = pos.copy()
+    cont = b[p] >= 0x80
+    while cont.any():
+        ci = np.flatnonzero(cont)
+        p[ci] += 1
+        cont[ci] = b[p[ci]] >= 0x80
+    return p + 1
+
+
+def _skip_map_cells_lanes(b: np.ndarray, pos: np.ndarray, vkind: str) -> np.ndarray:
+    """Skip ONE dict-coded map cell per lane, in lockstep: entry counts in one
+    vectorized uvarint read, then per-entry code+value skips with the lane
+    set shrinking as short cells finish.  Python iteration count is
+    ``max entries per cell`` instead of ``sum of entries across lanes``."""
+    n, pos = _uvarint_lanes(b, pos)
+    pos = pos.copy()
+    rem = n.copy()
+    fixed = _LANE_FIXED.get(vkind, 0)
+    while True:
+        act = np.flatnonzero(rem > 0)
+        if not len(act):
+            return pos
+        p = _skip_uvarint_lanes(b, pos[act])  # key code
+        if vkind in ("int32", "int64"):
+            p = _skip_uvarint_lanes(b, p)
+        elif fixed:
+            p = p + fixed
+        else:  # string/bytes: length prefix + payload
+            ln, p = _uvarint_lanes(b, p)
+            p = p + ln
+        pos[act] = p
+        rem[act] -= 1
 
 
 class DCSLColumnWriter:
@@ -89,6 +154,7 @@ class DCSLColumnReader:
         self._dict_index = -1
         self.dicts_loaded = 0
         self._chain: Optional[List[int]] = None  # per-group start offsets
+        self._keys_cache: Dict[int, List[str]] = {}  # block -> parsed keys
         self._slr = SkipListReader(
             data, n_records, self._decode, self._skip, boundary_hook=self._hook
         )
@@ -244,19 +310,150 @@ class DCSLColumnReader:
         start = self._chain[blk // min(slr.levels)]
         self._hook(blk, slr.data, start + 8 * self._nlv(blk))
 
+    def _page_end(self, blk: int, off: int) -> int:
+        """Offset just past block ``blk``'s dictionary page at ``off``."""
+        data = self._slr.data
+        n, off = read_uvarint(data, off)
+        for _ in range(n):
+            klen, off = read_uvarint(data, off)
+            off += klen
+        return off
+
+    def _block_keys(self, blk: int) -> List[str]:
+        """Parse block ``blk``'s key dictionary straight off the chain
+        (cached per reader; no reader state disturbed)."""
+        keys = self._keys_cache.get(blk)
+        if keys is None:
+            slr = self._slr
+            data = slr.data
+            off = self._chain[blk // min(slr.levels)] + 8 * self._nlv(blk)
+            n, off = read_uvarint(data, off)
+            keys = []
+            for _ in range(n):
+                klen, off = read_uvarint(data, off)
+                keys.append(data[off : off + klen].decode("utf-8"))
+                off += klen
+            self._keys_cache[blk] = keys
+            self.dicts_loaded += 1
+        return keys
+
     def lookup_many(self, indices: Sequence[int], key: str) -> List[Optional[Any]]:
         """Sparse single-key fetch over strictly-increasing ``indices``.
 
         The batch analog of ``lookup``: the smallest-level skip POINTER
         CHAIN is materialized once per reader (``_ensure_chain`` — an
         8-byte read per ``min(LEVELS)`` records, zero cell parsing), so
-        every index costs one direct jump to its group boundary plus an
-        in-group tail walk of fewer than ``min(LEVELS)`` cells, with zero
-        value decodes except the requested key's.  Dictionary blocks are
-        chain-aligned and load on demand per block.
+        every index costs one direct jump to its group boundary; the
+        in-group tail walks then run in vectorized LOCKSTEP across all
+        requested groups (``_skip_map_cells_lanes``, mirroring
+        ``decode_ragged_lanes``) instead of per-cell Python stepping, with
+        zero value decodes except the requested key's.  Dictionary blocks
+        are chain-aligned and parse on demand per block.
         """
         if not self._ensure_chain():
             return [self.lookup(i, key) for i in indices]
+        if self.typ.value.kind in _LANE_KINDS and len(indices) >= _LANE_MIN_INDICES:
+            return self._lookup_many_lanes(indices, key)
+        return self._lookup_many_chain(indices, key)
+
+    def _lookup_many_lanes(self, indices: Sequence[int], key: str) -> List[Optional[Any]]:
+        """Lane-vectorized in-group walking (see ``lookup_many``)."""
+        slr = self._slr
+        data = slr.data
+        b = np.frombuffer(data, np.uint8)
+        m = min(slr.levels)
+        vtyp = self.typ.value
+        chain = self._chain
+        idxs = [int(i) for i in indices]
+        # -- build lanes: one per visited group, carrying its hit positions --
+        lane_off: List[int] = []   # current byte offset of the lane
+        lane_pos: List[int] = []   # record index that offset points at
+        lane_hits: List[List[int]] = []
+        lane_group: List[int] = []
+        last_blk = -1
+        for idx in idxs:
+            assert slr.pos <= idx < slr.n, (slr.pos, idx, slr.n)
+            group = idx - idx % m
+            blk = idx - idx % self.block
+            if blk != last_blk:
+                self._keys = self._block_keys(blk)  # keep reader state current
+                self._dict_index = blk
+                last_blk = blk
+            if lane_hits and idx <= lane_hits[-1][-1]:
+                raise AssertionError("indices must be strictly increasing")
+            if lane_hits and lane_group[-1] == group:
+                lane_hits[-1].append(idx)      # same group as previous index
+            elif not lane_hits and slr.pos > group:
+                # continuation: the reader already sits inside idx's group
+                lane_off.append(slr.off)
+                lane_pos.append(slr.pos)
+                lane_hits.append([idx])
+                lane_group.append(group)
+            else:
+                off = chain[group // m] + 8 * self._nlv(group)
+                if group % self.block == 0:
+                    off = self._page_end(group, off)
+                lane_off.append(off)
+                lane_pos.append(group)
+                lane_hits.append([idx])
+                lane_group.append(group)
+        off_arr = np.asarray(lane_off, np.int64)
+        pos_arr = np.asarray(lane_pos, np.int64)
+        next_hit = np.asarray([h[0] for h in lane_hits], np.int64)
+        hit_i = np.zeros(len(lane_hits), np.int64)
+        n_hits = np.asarray([len(h) for h in lane_hits], np.int64)
+        cell_off: Dict[int, int] = {}  # requested record idx -> cell offset
+        # -- lockstep walk: one skip step per iteration across all lanes --
+        while True:
+            live = hit_i < n_hits
+            at_hit = live & (pos_arr == next_hit)
+            for l in np.flatnonzero(at_hit):
+                cell_off[lane_hits[l][int(hit_i[l])]] = int(off_arr[l])
+                hit_i[l] += 1
+                if hit_i[l] < n_hits[l]:
+                    next_hit[l] = lane_hits[l][int(hit_i[l])]
+            movers = np.flatnonzero(hit_i < n_hits)
+            if not len(movers):
+                break
+            new_off = _skip_map_cells_lanes(b, off_arr[movers], vtyp.kind)
+            stepped_hit = at_hit[movers]  # the cell just stepped over was a hit
+            spans = new_off - off_arr[movers]
+            slr.cells_skipped += int((~stepped_hit).sum())
+            slr.bytes_skipped += int(spans[~stepped_hit].sum())
+            off_arr[movers] = new_off
+            pos_arr[movers] += 1
+        # -- decode ONLY `key` at each recorded cell offset --
+        out: List[Optional[Any]] = []
+        last_blk = -1
+        code = -1
+        end_off = slr.off
+        for idx in idxs:
+            blk = idx - idx % self.block
+            if blk != last_blk:
+                keys = self._block_keys(blk)
+                try:
+                    code = keys.index(key)
+                except ValueError:
+                    code = -1
+                last_blk = blk
+            off = cell_off[idx]
+            n, off = read_uvarint(data, off)
+            found = None
+            for _ in range(n):
+                c, off = read_uvarint(data, off)
+                if c == code and found is None:
+                    found, off = decode_cell(vtyp, data, off)
+                else:
+                    off = skip_cell(vtyp, data, off)
+            slr.cells_decoded += 1
+            end_off = off
+            out.append(found)
+        slr.pos = idxs[-1] + 1
+        slr.off = end_off
+        return out
+
+    def _lookup_many_chain(self, indices: Sequence[int], key: str) -> List[Optional[Any]]:
+        """Scalar in-group walking (complex value types / single index)."""
         slr = self._slr
         data = slr.data
         m = min(slr.levels)

@@ -1,0 +1,484 @@
+"""Pluggable per-block column encodings (dict / RLE / delta-bitpack).
+
+This is the layer BETWEEN cell serialization (``varcodec``) and block/file
+layout (``colfile``): a block of cells is encoded into one self-describing
+payload whose first byte (written by colfile) names the encoding.  The
+paper stores every value in exactly one physical representation per type;
+modern columnar formats (Parquet/ORC, and the empirical study in PAPERS.md)
+get most of their decode speed from *lightweight encodings* chosen from the
+data itself.  Four encodings exist:
+
+  plain  — the varcodec cell stream, unchanged (the universal fallback)
+  dict   — sorted-unique dictionary page + bit-packed codes.  Low-cardinality
+           columns decode as ONE dictionary decode + a vectorized gather;
+           string/bytes columns come back as ``DictRaggedColumn`` views whose
+           predicates (``contains``/``eq``) evaluate once per DICTIONARY
+           entry, not once per cell.  Also supports array-of-int cells
+           (per-cell word-aligned packing), which is how token sequences ship
+           their packed codes straight to the Pallas ``bitunpack``/
+           ``dict_decode`` kernels.
+  rle    — run lengths + run values.  Sorted / constant / mostly-constant
+           columns decode as one small decode + ``np.repeat`` (zero-copy
+           offset repeat for string/bytes).
+  delta  — first value + zigzag deltas bit-packed into uint32 words (ints
+           only).  Sorted or slowly-varying int columns decode as one
+           vectorized unpack + cumsum.
+
+Selection is AUTOMATIC per block from write-time stats (`Jahani et al.:
+optimization should not be user-specified`): every applicable encoding is
+produced vectorized, and the smallest payload wins — but only if it beats
+plain by a margin (``MARGIN``), so noise never flips a column off the
+fast universal path.  ``ColumnFormat(encoding=...)`` forces one encoding
+deterministically (the test / benchmark knob).
+
+Payload layouts (the leading tag byte itself lives in colfile's framing):
+
+  dict (scalar cells):  [uvarint V][V plain cells][u8 bits][packed codes]
+  dict (array cells):   [uvarint V][V plain elem cells][u8 bits]
+                        [n uvarint cell lens][per-cell word-aligned codes]
+  rle:                  [uvarint R][R uvarint run lens][R plain run values]
+  delta:                [varint first][u8 bits][packed zigzag deltas]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .schema import ColumnType
+from .varcodec import (
+    DictRaggedColumn,
+    RaggedColumn,
+    decode_range,
+    decode_ragged_range,
+    decode_uvarint_range,
+    decode_varint_range,
+    encode_cell,
+    read_uvarint,
+    read_varint,
+    write_uvarint,
+    write_varint,
+)
+
+# tag bytes written in front of each encoded block payload
+ENC_TAGS = {"plain": 0, "dict": 1, "rle": 2, "delta": 3}
+TAG_NAMES = {v: k for k, v in ENC_TAGS.items()}
+ENCODING_NAMES = tuple(ENC_TAGS)
+
+# a non-plain encoding must beat plain by this factor to be selected (auto)
+MARGIN = 0.92
+
+_INT_KINDS = ("int32", "int64")
+_RAGGED_KINDS = ("string", "bytes")
+_FIXED = {"float32": 4, "float64": 8, "bool": 1}
+
+
+# ---------------------------------------------------------------------------
+# bit packing (uint32 words, little-endian lanes) — shared with the token
+# pipeline and the Pallas bitunpack kernel, which consumes these words as-is
+# ---------------------------------------------------------------------------
+
+
+def bits_for(n_values: int) -> int:
+    """Smallest supported code width that can index ``n_values`` entries."""
+    for b in (4, 8, 16):
+        if n_values <= (1 << b):
+            return b
+    return 32
+
+
+def pack_codes(codes: np.ndarray, bits: int) -> bytes:
+    """codes: (n,) uint32 -> little-endian bit-packed bytes (word=uint32)."""
+    r = 32 // bits
+    pad = (-len(codes)) % r
+    c = np.concatenate([codes.astype(np.uint32), np.zeros(pad, np.uint32)])
+    c = c.reshape(-1, r)
+    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, :]
+    words = np.bitwise_or.reduce(c << shifts, axis=1).astype("<u4")
+    return words.tobytes()
+
+
+def unpack_codes(raw: bytes, bits: int, n: int) -> np.ndarray:
+    """Inverse of ``pack_codes`` -> (n,) int32."""
+    return unpack_words(np.frombuffer(raw, dtype="<u4"), bits, n).astype(np.int32)
+
+
+def unpack_words(words: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """words: (W,) uint32 -> first ``n`` codes as int64 (vectorized shifts)."""
+    r = 32 // bits
+    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, :]
+    mask = np.uint32((1 << bits) - 1)
+    lanes = (words[:, None] >> shifts) & mask
+    return lanes.reshape(-1)[:n].astype(np.int64)
+
+
+def unpack_codes_batch(words: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """words: (B, W) uint32 -> (B, n) int32 codes, one vectorized pass for
+    the whole batch (per-cell pad lanes are sliced off per row)."""
+    r = 32 // bits
+    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, None, :]
+    mask = np.uint32((1 << bits) - 1)
+    lanes = (words[:, :, None] >> shifts) & mask
+    return lanes.reshape(words.shape[0], -1)[:, :n].astype(np.int32)
+
+
+def _words_view(data: bytes, off: int, end: int) -> np.ndarray:
+    """uint32 view over ``data[off:end]`` without copying the payload."""
+    assert (end - off) % 4 == 0, "packed code region must be whole words"
+    return np.frombuffer(data, np.uint8, end - off, off).view("<u4")
+
+
+def _codes_view(data: bytes, off: int, end: int, bits: int, n: int) -> np.ndarray:
+    """First ``n`` packed codes from ``data[off:end]`` -> int64.  Byte-aligned
+    widths (8/16/32) decode as zero-shift buffer views; only bits=4 needs the
+    vectorized shift lanes."""
+    if bits == 8:
+        return np.frombuffer(data, np.uint8, n, off).astype(np.int64)
+    if bits == 16:
+        return np.frombuffer(data, np.uint8, 2 * n, off).view("<u2").astype(np.int64)
+    if bits == 32:
+        return np.frombuffer(data, np.uint8, 4 * n, off).view("<u4").astype(np.int64)
+    return unpack_words(_words_view(data, off, end), bits, n)
+
+
+# ---------------------------------------------------------------------------
+# exact plain-encoded sizes (vectorized) — the raw-bytes baseline every
+# write-time selection and every storage report is measured against
+# ---------------------------------------------------------------------------
+
+
+def _zigzag_arr(a: np.ndarray) -> np.ndarray:
+    a = a.astype(np.int64, copy=False)
+    return ((a << np.int64(1)) ^ (a >> np.int64(63))).astype(np.uint64)
+
+
+def _unzigzag_arr(u: np.ndarray) -> np.ndarray:
+    return (u >> np.uint64(1)).astype(np.int64) ^ -((u & np.uint64(1)).astype(np.int64))
+
+
+def _uvarint_sizes(u: np.ndarray) -> np.ndarray:
+    sizes = np.ones(len(u), np.int64)
+    v = u >> np.uint64(7)
+    while v.any():
+        sizes += v > 0
+        v >>= np.uint64(7)
+    return sizes
+
+
+def plain_size(typ: ColumnType, values: Sequence[Any]) -> int:
+    """Exact byte size ``values`` would occupy as a plain varcodec stream,
+    computed WITHOUT encoding (vectorized for the supported kinds)."""
+    k = typ.kind
+    n = len(values)
+    if k in _INT_KINDS:
+        return int(_uvarint_sizes(_zigzag_arr(np.asarray(values, np.int64))).sum())
+    if k in _FIXED:
+        return n * _FIXED[k]
+    if k in _RAGGED_KINDS:
+        lens = np.array(
+            [len(v.encode("utf-8")) if isinstance(v, str) else len(v) for v in values],
+            np.int64,
+        )
+        return int(lens.sum() + _uvarint_sizes(lens.astype(np.uint64)).sum())
+    if k == "array" and typ.elem.kind in _INT_KINDS:
+        lens = np.array([len(v) for v in values], np.int64)
+        if not lens.sum():
+            return int(_uvarint_sizes(lens.astype(np.uint64)).sum())
+        flat = np.concatenate([np.asarray(v, np.int64) for v in values if len(v)])
+        return int(
+            _uvarint_sizes(lens.astype(np.uint64)).sum()
+            + _uvarint_sizes(_zigzag_arr(flat)).sum()
+        )
+    raise ValueError(f"plain_size: unsupported kind {k}")
+
+
+def _encode_plain(typ: ColumnType, values: Sequence[Any]) -> bytes:
+    buf = bytearray()
+    for v in values:
+        encode_cell(typ, v, buf)
+    return bytes(buf)
+
+
+# ---------------------------------------------------------------------------
+# dict pages
+# ---------------------------------------------------------------------------
+
+
+class DictPage:
+    """Parsed dictionary page of one dict-encoded block.
+
+    Exposes the decoded dictionary (``values`` np array for int cells,
+    ``starts``/``lengths`` offsets into the page buffer for ragged cells),
+    the code width, per-cell element counts for array cells, and a zero-copy
+    uint32 ``words`` view over the packed-code region — exactly what the
+    device decode path ships to the ``bitunpack``/``dict_decode`` kernels.
+    """
+
+    __slots__ = ("buffer", "n_dict", "bits", "values", "starts", "lengths",
+                 "cell_lens", "word_off", "words")
+
+    def __init__(self, typ: ColumnType, data: bytes, off: int, end: int, n: int):
+        self.buffer = data
+        self.values = self.starts = self.lengths = self.cell_lens = None
+        v, off = read_uvarint(data, off)
+        self.n_dict = v
+        k = typ.kind
+        if k in _RAGGED_KINDS:
+            self.starts, self.lengths, off = decode_ragged_range(data, off, v)
+        elif k in _INT_KINDS:
+            vals, off = decode_varint_range(data, off, v)
+            self.values = vals.astype(np.int32) if k == "int32" else vals
+        elif k == "array":
+            vals, off = decode_varint_range(data, off, v)
+            ek = typ.elem.kind
+            self.values = vals.astype(np.int32) if ek == "int32" else vals
+        else:
+            raise ValueError(f"dict page: unsupported kind {k}")
+        self.bits = data[off]
+        off += 1
+        if k == "array":
+            lens, off = decode_uvarint_range(data, off, n)
+            self.cell_lens = lens.astype(np.int64)
+        self.word_off = off
+        self.words = _words_view(data, off, end)
+
+    def words_per_cell(self) -> np.ndarray:
+        """Array cells only: word count of each cell's padded code span."""
+        r = 32 // self.bits
+        return (self.cell_lens + r - 1) // r
+
+
+def _dict_codes(values: Sequence[Any]):
+    uniq, inv = np.unique(np.asarray(values, dtype=object), return_inverse=True)
+    return list(uniq), inv.astype(np.uint32)
+
+
+class DictEncoding:
+    name = "dict"
+
+    def supports(self, typ: ColumnType) -> bool:
+        return typ.is_integer() or typ.kind in _RAGGED_KINDS or (
+            typ.kind == "array" and typ.elem.is_integer()
+        )
+
+    def encode(self, typ: ColumnType, values: Sequence[Any]) -> Optional[bytes]:
+        k = typ.kind
+        buf = bytearray()
+        if k == "array":
+            cells = [np.asarray(v, np.int64) for v in values]
+            lens = np.array([len(c) for c in cells], np.int64)
+            flat = (np.concatenate([c for c in cells if len(c)])
+                    if lens.sum() else np.empty(0, np.int64))
+            uniq, inv = np.unique(flat, return_inverse=True)
+            bits = bits_for(len(uniq))
+            r = 32 // bits
+            wcounts = (lens + r - 1) // r
+            padded = np.zeros(int((wcounts * r).sum()), np.uint32)
+            if len(flat):
+                cell_of = np.repeat(np.arange(len(lens)), lens)
+                base = np.concatenate([[0], np.cumsum(wcounts * r)[:-1]])
+                first = np.concatenate([[0], np.cumsum(lens)[:-1]])
+                padded[base[cell_of] + np.arange(len(flat)) - first[cell_of]] = inv
+            write_uvarint(buf, len(uniq))
+            for u in uniq.tolist():
+                write_varint(buf, u)
+            buf.append(bits)
+            for ln in lens.tolist():
+                write_uvarint(buf, ln)
+            buf += pack_codes(padded, bits)
+            return bytes(buf)
+        if k in _INT_KINDS:
+            uniq, inv = np.unique(np.asarray(values, np.int64), return_inverse=True)
+            write_uvarint(buf, len(uniq))
+            for u in uniq.tolist():
+                write_varint(buf, u)
+            dict_vals = uniq
+        else:  # ragged
+            dict_vals, inv = _dict_codes(values)
+            write_uvarint(buf, len(dict_vals))
+            for u in dict_vals:
+                encode_cell(typ, u, buf)
+        bits = bits_for(len(dict_vals))
+        buf.append(bits)
+        buf += pack_codes(inv.astype(np.uint32), bits)
+        return bytes(buf)
+
+    def decode_all(self, typ: ColumnType, data: bytes, off: int, end: int, n: int):
+        page = DictPage(typ, data, off, end, n)
+        k = typ.kind
+        if k == "array":
+            r = 32 // page.bits
+            lens = page.cell_lens
+            codes = unpack_words(page.words, page.bits, len(page.words) * r)
+            cell_of = np.repeat(np.arange(n), lens)
+            wcounts = (lens + r - 1) // r
+            base = np.concatenate([[0], np.cumsum(wcounts * r)[:-1]])
+            first = np.concatenate([[0], np.cumsum(lens)[:-1]])
+            flat = page.values[codes[base[cell_of] + np.arange(int(lens.sum())) - first[cell_of]]]
+            return [a.tolist() for a in np.split(flat, np.cumsum(lens)[:-1])]
+        codes = _codes_view(data, page.word_off, end, page.bits, n)
+        if k in _INT_KINDS:
+            return page.values[codes]
+        return DictRaggedColumn(data, page.starts, page.lengths, codes, k)
+
+
+class RleEncoding:
+    name = "rle"
+
+    def supports(self, typ: ColumnType) -> bool:
+        return typ.is_integer() or typ.kind in _RAGGED_KINDS or typ.kind in _FIXED
+
+    def _runs(self, typ: ColumnType, values: Sequence[Any]):
+        if typ.kind in _RAGGED_KINDS:
+            run_vals: List[Any] = []
+            run_lens: List[int] = []
+            for v in values:
+                if run_vals and v == run_vals[-1]:
+                    run_lens[-1] += 1
+                else:
+                    run_vals.append(v)
+                    run_lens.append(1)
+            return run_vals, np.asarray(run_lens, np.int64)
+        arr = np.asarray(values)
+        if len(arr) == 0:
+            return [], np.empty(0, np.int64)
+        starts = np.concatenate([[0], np.flatnonzero(arr[1:] != arr[:-1]) + 1])
+        lens = np.diff(np.concatenate([starts, [len(arr)]]))
+        return arr[starts].tolist(), lens
+
+    def encode(self, typ: ColumnType, values: Sequence[Any]) -> Optional[bytes]:
+        run_vals, run_lens = self._runs(typ, values)
+        buf = bytearray()
+        write_uvarint(buf, len(run_vals))
+        for ln in run_lens.tolist():
+            write_uvarint(buf, int(ln))
+        for v in run_vals:
+            encode_cell(typ, v, buf)
+        return bytes(buf)
+
+    def decode_all(self, typ: ColumnType, data: bytes, off: int, end: int, n: int):
+        nr, off = read_uvarint(data, off)
+        lens, off = decode_uvarint_range(data, off, nr)
+        lens = lens.astype(np.int64)
+        vals, _ = decode_range(typ, data, off, nr)
+        if isinstance(vals, RaggedColumn):
+            return RaggedColumn(
+                data, np.repeat(vals.starts, lens), np.repeat(vals.lengths, lens),
+                vals.kind,
+            )
+        return np.repeat(vals, lens)
+
+
+class DeltaEncoding:
+    name = "delta"
+
+    def supports(self, typ: ColumnType) -> bool:
+        return typ.is_integer()
+
+    def encode(self, typ: ColumnType, values: Sequence[Any]) -> Optional[bytes]:
+        arr = np.asarray(values, np.int64)
+        zz = _zigzag_arr(arr[1:] - arr[:-1]) if len(arr) > 1 else np.empty(0, np.uint64)
+        maxzz = int(zz.max()) if len(zz) else 0
+        if maxzz >= 1 << 32:
+            return None  # deltas too wide to bit-pack; caller falls back
+        bits = 32
+        for b in (4, 8, 16):
+            if maxzz < 1 << b:
+                bits = b
+                break
+        buf = bytearray()
+        write_varint(buf, int(arr[0]) if len(arr) else 0)
+        buf.append(bits)
+        buf += pack_codes(zz.astype(np.uint32), bits)
+        return bytes(buf)
+
+    def decode_all(self, typ: ColumnType, data: bytes, off: int, end: int, n: int):
+        first, off = read_varint(data, off)
+        bits = data[off]
+        off += 1
+        out = np.empty(n, np.int64)
+        out[0] = first
+        if n > 1:
+            zz = _codes_view(data, off, end, bits, n - 1)
+            np.cumsum((zz >> 1) ^ -(zz & 1), out=out[1:])
+            out[1:] += first
+        return out.astype(np.int32) if typ.kind == "int32" else out
+
+
+class PlainEncoding:
+    name = "plain"
+
+    def supports(self, typ: ColumnType) -> bool:
+        return True
+
+    def encode(self, typ: ColumnType, values: Sequence[Any]) -> bytes:
+        return _encode_plain(typ, values)
+
+    def decode_all(self, typ: ColumnType, data: bytes, off: int, end: int, n: int):
+        vals, got_end = decode_range(typ, data, off, n)
+        assert got_end == end, "plain block payload out of sync with cells"
+        return vals
+
+
+ENCODINGS: Dict[str, Any] = {
+    "plain": PlainEncoding(),
+    "dict": DictEncoding(),
+    "rle": RleEncoding(),
+    "delta": DeltaEncoding(),
+}
+
+
+def candidates(typ: ColumnType) -> List[str]:
+    """Encodings applicable to ``typ`` (always starts with plain)."""
+    return ["plain"] + [
+        n for n in ("dict", "rle", "delta") if ENCODINGS[n].supports(typ)
+    ]
+
+
+def encode_block(
+    typ: ColumnType, values: Sequence[Any], forced: str = "auto"
+) -> Tuple[str, bytes, int]:
+    """Encode one block -> ``(encoding_name, payload, raw_plain_bytes)``.
+
+    ``forced="auto"``: every applicable non-plain candidate is produced and
+    the smallest wins if it beats the exact plain size by ``MARGIN``;
+    otherwise plain.  A forced name bypasses selection (the deterministic
+    knob tests and the token writer use).
+    """
+    if forced != "auto":
+        enc = ENCODINGS[forced]
+        assert enc.supports(typ), f"encoding {forced!r} unsupported for {typ.kind}"
+        payload = enc.encode(typ, values)
+        if payload is None:
+            # inapplicable to THIS block's data (e.g. delta wider than 32
+            # bits): fall back to plain rather than abort a half-written
+            # file — the per-block tag keeps readers oblivious.
+            payload = _encode_plain(typ, values)
+            return "plain", payload, len(payload)
+        try:
+            raw = plain_size(typ, values)
+        except ValueError:
+            raw = len(payload) if forced == "plain" else 0
+        return forced, payload, raw
+    cands = candidates(typ)
+    if len(cands) == 1:
+        payload = _encode_plain(typ, values)
+        return "plain", payload, len(payload)
+    raw = plain_size(typ, values)
+    best_name, best_payload = None, None
+    for name in cands[1:]:
+        p = ENCODINGS[name].encode(typ, values)
+        if p is not None and len(p) < (
+            len(best_payload) if best_payload is not None else raw * MARGIN
+        ):
+            best_name, best_payload = name, p
+    if best_name is None:
+        return "plain", _encode_plain(typ, values), raw
+    return best_name, best_payload, raw
+
+
+def decode_block(typ: ColumnType, tag: int, data: bytes, off: int, end: int, n: int):
+    """Dispatch one block payload on its tag -> decoded values (NumPy array /
+    ``RaggedColumn``/``DictRaggedColumn`` view / list, per the
+    ``decode_range`` contract)."""
+    return ENCODINGS[TAG_NAMES[tag]].decode_all(typ, data, off, end, n)

@@ -34,6 +34,12 @@ class ColumnType:
     value: Optional["ColumnType"] = None
     fields: Optional[Tuple[Tuple[str, "ColumnType"], ...]] = None
 
+    def is_primitive(self) -> bool:
+        return self.kind in PRIMITIVES
+
+    def is_integer(self) -> bool:
+        return self.kind in ("int32", "int64")
+
     def __post_init__(self):
         if self.kind in PRIMITIVES:
             return

@@ -353,6 +353,19 @@ class RaggedColumn:
         """Per-cell payload byte lengths (the ``lengths`` array itself)."""
         return self.lengths
 
+    def eq(self, value: Union[str, bytes]) -> np.ndarray:
+        """Boolean mask: which cells equal ``value`` exactly.  Vectorized
+        length pre-filter, then ONE gather-compare over the length-matching
+        cells — no per-cell Python work."""
+        pat = value.encode("utf-8") if isinstance(value, str) else bytes(value)
+        mask = self.lengths == len(pat)
+        idx = np.flatnonzero(mask)
+        if len(idx) and len(pat):
+            buf = np.frombuffer(self.buffer, np.uint8)
+            rows = buf[self.starts[idx][:, None] + np.arange(len(pat))]
+            mask[idx] = (rows == np.frombuffer(pat, np.uint8)).all(axis=1)
+        return mask
+
     def contains(self, pattern: Union[str, bytes]) -> np.ndarray:
         """Boolean mask: which cells contain ``pattern`` as a substring.
 
@@ -425,6 +438,12 @@ class RaggedColumn:
         kind = chunks[0].kind
         if len(chunks) == 1:
             return chunks[0]
+        if all(isinstance(c, DictRaggedColumn) for c in chunks):
+            d0 = chunks[0]
+            if all(c.buffer is d0.buffer and c.dict_starts is d0.dict_starts
+                   for c in chunks[1:]):
+                # same dictionary page: keep codes so pushdown survives concat
+                return d0._with_codes(np.concatenate([c.codes for c in chunks]))
         first_buf = chunks[0].buffer
         if all(c.buffer is first_buf for c in chunks):
             return RaggedColumn(
@@ -444,6 +463,59 @@ class RaggedColumn:
         return RaggedColumn(
             b"".join(parts), np.concatenate(starts), np.concatenate(lengths), kind
         )
+
+
+class DictRaggedColumn(RaggedColumn):
+    """A ``RaggedColumn`` whose cells are dictionary CODES into a small page
+    of distinct values (the dict encoding's zero-copy view).
+
+    Per-cell ``starts``/``lengths`` are gathers of the dictionary offsets, so
+    every base-class consumer works unchanged — but predicates run on the
+    DICTIONARY, not the cells: ``contains``/``eq`` evaluate once per distinct
+    value (``V`` cells) and broadcast the verdict through ``codes`` (``n``
+    cells), the paper-era predicate-pushdown trick modern columnar readers
+    use.  Slicing / fancy indexing preserves the codes, so pushdown survives
+    views.
+    """
+
+    __slots__ = ("codes", "dict_starts", "dict_lengths")
+
+    def __init__(self, buffer: bytes, dict_starts: np.ndarray,
+                 dict_lengths: np.ndarray, codes: np.ndarray, kind: str = "bytes"):
+        codes = np.asarray(codes, np.int64)
+        super().__init__(buffer, dict_starts[codes], dict_lengths[codes], kind)
+        self.codes = codes
+        self.dict_starts = dict_starts
+        self.dict_lengths = dict_lengths
+
+    def dictionary(self) -> RaggedColumn:
+        """The distinct values as a (tiny) RaggedColumn view."""
+        return RaggedColumn(self.buffer, self.dict_starts, self.dict_lengths, self.kind)
+
+    def _with_codes(self, codes: np.ndarray) -> "DictRaggedColumn":
+        return DictRaggedColumn(
+            self.buffer, self.dict_starts, self.dict_lengths, codes, self.kind
+        )
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return self._with_codes(self.codes[i])
+        if isinstance(i, (list, np.ndarray)):
+            idx = np.asarray(i)
+            if idx.dtype == bool:
+                idx = np.flatnonzero(idx)
+            return self._with_codes(self.codes[idx])
+        return self._cell(int(i))
+
+    def contains(self, pattern) -> np.ndarray:
+        return self.dictionary().contains(pattern)[self.codes]
+
+    def eq(self, value) -> np.ndarray:
+        return self.dictionary().eq(value)[self.codes]
+
+    def __repr__(self) -> str:
+        return (f"DictRaggedColumn(kind={self.kind!r}, n={len(self)}, "
+                f"dict={len(self.dict_starts)})")
 
 
 def decode_ragged_lanes(

@@ -7,12 +7,15 @@ and a prefetch thread so storage decode overlaps the train step.
 Batches are built on the columnar fast path: sampled ``(split, record)`` ids
 are grouped by split and sorted within each split (respecting the
 forward-only monotone readers — no reopen-on-AssertionError churn), each
-group is fetched with ONE ``TokenSplit.record_batch`` call (bulk column
-decode + one unpack + one dictionary gather), and rows land in preallocated
-``(B, S)`` arrays.  ``decode`` selects the token decode world: "np" (host
-vectorized), "py" (per-element loop, Fig. 8's slow world), "packed" (raw
-words, caller decodes), or "device" (packed words are shipped as-is and the
-Pallas ``bitunpack``/``dict_decode`` kernels expand them on-accelerator).
+group is fetched with ONE ``TokenSplit.record_batch`` call (one packed-word
+gather off the split's dict-encoded token page + one unpack + one
+dictionary gather), and rows land in preallocated ``(B, S)`` arrays.  The
+dictionary itself lives in the column file's dict page (the generic
+encoding layer) — no pipeline-private dictionary sidecars.  ``decode``
+selects the token decode world: "np" (host vectorized), "py" (per-element
+loop, Fig. 8's slow world), "packed" (raw words, caller decodes), or
+"device" (packed words are shipped as-is and the Pallas
+``bitunpack``/``dict_decode`` kernels expand them on-accelerator).
 
 Batch layout: {"tokens": (B,S) int32, "labels": (B,S) int32,
                "loss_mask": (B,S) float32} — labels are next-token shifted,

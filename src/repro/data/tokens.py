@@ -1,14 +1,20 @@
 """Token corpora as columnar datasets (the paper's format, applied to LM data).
 
-Documents are packed into fixed-length sequences and written via COF with a
-*dictionary + bit-packed* token column — DCSL's trick (§5.3) specialized for
-token streams:
+Documents are packed into fixed-length sequences and written via COF.  The
+token column is an ``ARRAY(INT32)`` column FORCED to the generic ``dict``
+encoding with one block per split, so the on-disk page is the standard
+encoding-layer layout — ``[dictionary][bits][per-cell word-aligned packed
+codes]`` — instead of the hand-rolled ``tokens.dict.npy`` sidecar +
+packed-bytes cells earlier revisions maintained:
 
   split-NNNNN/
-      tokens.col      BYTES cells: bit-packed dictionary codes per sequence
+      tokens.col      ARRAY(INT32) cells, dict-encoded (one page per split)
       loss_mask.col   BYTES cells: 1 bit per position
       meta.col        MAP cells: per-sequence provenance (doc ids, source)
-      tokens.dict.npy int32 dictionary for this split (sorted unique ids)
+
+The dictionary and code width now live IN the column file and are read
+through ``ColumnFileReader.dict_page()``; the packed code words ship to the
+accelerator as-is through ``read_packed`` (the device-decode fast path).
 
 Decode paths (Fig. 8's three worlds):
   * decode="py"     — per-element Python loop      ("Java object churn")
@@ -18,68 +24,50 @@ Decode paths (Fig. 8's three worlds):
     (beyond-paper: the compressed codes travel host->HBM, saving PCIe
     bandwidth; the gather runs as a Pallas kernel)
 
-Batch fast path: ``TokenSplit.record_batch(ids)`` fetches every packed-code
-cell of the batch via ``ColumnFileReader.read_many`` (bulk columnar decode),
-then does ONE ``unpack_codes``-style vectorized unpack and ONE dictionary
-gather for the whole batch — no per-record Python loop in front of the
-training step.
+Batch fast path: ``TokenSplit.record_batch(ids)`` pulls the packed words of
+the whole batch with ONE ``read_packed`` gather, then does ONE vectorized
+unpack and ONE dictionary gather (or one kernel launch for
+decode="device") — no per-record Python loop in front of the training step.
+
+Pre-encoding-layer corpora (tokens as BYTES + ``tokens.dict.npy`` sidecar)
+still read: the root ``schema.json`` identifies them and ``TokenSplit``
+keeps the legacy path.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import BYTES, COFWriter, INT32, MAP, STRING, ColumnFormat, Schema
-from ..core.cif import CIFReader, list_splits
+from ..core import BYTES, COFWriter, INT32, MAP, STRING, ARRAY, ColumnFormat, Schema
+from ..core.cif import CIFReader, list_splits, read_schema
+from ..core.encodings import (  # packing lives in the encoding layer now
+    bits_for,
+    pack_codes,
+    unpack_codes,
+    unpack_codes_batch,
+)
 
 
 def token_schema() -> Schema:
     return Schema([
-        ("tokens", BYTES()),
+        ("tokens", ARRAY(INT32())),
         ("n_tokens", INT32()),
         ("loss_mask", BYTES()),
         ("meta", MAP(STRING())),
     ])
 
 
-def _bits_for(n_dict: int) -> int:
-    for b in (4, 8, 16):
-        if n_dict <= (1 << b):
-            return b
-    return 32
-
-
-def pack_codes(codes: np.ndarray, bits: int) -> bytes:
-    """codes: (n,) uint32 -> little-endian bit-packed bytes (word=uint32)."""
-    r = 32 // bits
-    pad = (-len(codes)) % r
-    c = np.concatenate([codes.astype(np.uint32), np.zeros(pad, np.uint32)])
-    c = c.reshape(-1, r)
-    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, :]
-    words = np.bitwise_or.reduce(c << shifts, axis=1).astype("<u4")
-    return words.tobytes()
-
-
-def unpack_codes(raw: bytes, bits: int, n: int) -> np.ndarray:
-    words = np.frombuffer(raw, dtype="<u4")
-    r = 32 // bits
-    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, :]
-    mask = np.uint32((1 << bits) - 1)
-    lanes = (words[:, None] >> shifts) & mask
-    return lanes.reshape(-1)[:n].astype(np.int32)
-
-
-def unpack_codes_batch(words: np.ndarray, bits: int, n: int) -> np.ndarray:
-    """words: (B, W) uint32 -> (B, n) int32 codes, one vectorized pass for
-    the whole batch (per-cell pad lanes are sliced off per row)."""
-    r = 32 // bits
-    shifts = (np.arange(r, dtype=np.uint32) * bits)[None, None, :]
-    mask = np.uint32((1 << bits) - 1)
-    lanes = (words[:, :, None] >> shifts) & mask
-    return lanes.reshape(words.shape[0], -1)[:, :n].astype(np.int32)
+def legacy_token_schema() -> Schema:
+    """Pre-encoding-layer layout: packed-byte cells + dictionary sidecar."""
+    return Schema([
+        ("tokens", BYTES()),
+        ("n_tokens", INT32()),
+        ("loss_mask", BYTES()),
+        ("meta", MAP(STRING())),
+    ])
 
 
 def device_decode_batch(words: np.ndarray, bits: int, n: int, dictionary: np.ndarray) -> np.ndarray:
@@ -93,8 +81,11 @@ def device_decode_batch(words: np.ndarray, bits: int, n: int, dictionary: np.nda
 
     interp = jax.default_backend() != "tpu"
     b = words.shape[0]
-    codes = ops.bitunpack(jnp.asarray(words.reshape(-1)), bits, interpret=interp)
-    codes = codes.reshape(b, -1)[:, :n]
+    if bits == 32:  # giant dictionaries: words already ARE the codes
+        codes = jnp.asarray(words.astype(np.int32).reshape(b, -1)[:, :n])
+    else:
+        codes = ops.bitunpack(jnp.asarray(words.reshape(-1)), bits, interpret=interp)
+        codes = codes.reshape(b, -1)[:, :n]
     table = jnp.asarray(dictionary.astype(np.int32))
     toks = ops.dict_decode(codes.reshape(-1), table, interpret=interp)
     return np.asarray(toks.reshape(b, n), np.int32)
@@ -109,9 +100,11 @@ def unpack_bits(raw: bytes, n: int) -> np.ndarray:
 
 
 class TokenCorpusWriter:
-    """Packs document token streams into seq_len sequences, buffers one split
-    at a time (the dictionary needs the split's token universe — the same
-    two-pass-per-block trick DCSL uses)."""
+    """Packs document token streams into seq_len sequences.  Sequences are
+    appended as raw int arrays; the dictionary + bit-packing that earlier
+    revisions hand-rolled here is now the generic dict encoding: the tokens
+    column is forced to ``encoding="dict"`` with ``enc_block=split_records``,
+    so each split's column file is ONE self-describing dictionary page."""
 
     def __init__(self, root: str, seq_len: int, split_records: int = 1024):
         self.root = root
@@ -120,13 +113,15 @@ class TokenCorpusWriter:
         os.makedirs(root, exist_ok=True)
         self._cof = COFWriter(
             root, token_schema(),
-            formats={"meta": ColumnFormat("dcsl")},
+            formats={
+                "meta": ColumnFormat("dcsl"),
+                "tokens": ColumnFormat("plain", encoding="dict",
+                                       enc_block=split_records),
+            },
             split_records=split_records,
         )
         self._carry: List[int] = []
         self._carry_mask: List[int] = []
-        self._pending: List[Tuple[np.ndarray, np.ndarray, Dict[str, str]]] = []
-        self._split_dicts: List[np.ndarray] = []
         self.n_sequences = 0
         self.max_token = 0
 
@@ -140,60 +135,17 @@ class TokenCorpusWriter:
             msk = np.asarray(self._carry_mask[: self.seq_len], np.int32)
             del self._carry[: self.seq_len]
             del self._carry_mask[: self.seq_len]
-            self._pending.append((seq, msk, dict(meta or {})))
-            self.n_sequences += 1
-            if len(self._pending) == self.split_records:
-                self._flush_split()
-
-    def _flush_split(self) -> None:
-        if not self._pending:
-            return
-        split_idx = self._cof._split_idx
-        all_tokens = np.concatenate([s for s, _, _ in self._pending])
-        dictionary = np.unique(all_tokens)
-        bits = _bits_for(len(dictionary))
-        code_of = {int(t): i for i, t in enumerate(dictionary)}
-        for seq, msk, meta in self._pending:
-            codes = np.asarray([code_of[int(t)] for t in seq], np.uint32)
             self._cof.append({
-                "tokens": pack_codes(codes, bits),
+                "tokens": seq,
                 "n_tokens": len(seq),
                 "loss_mask": pack_bits(msk),
-                "meta": meta,
+                "meta": dict(meta or {}),
             })
-        # COF closed the split at exactly split_records; drop the sidecar
-        sdir = os.path.join(self.root, f"split-{split_idx:05d}")
-        assert os.path.isdir(sdir), "split should have been flushed by COF"
-        np.save(os.path.join(sdir, "tokens.dict.npy"), dictionary.astype(np.int32))
-        with open(os.path.join(sdir, "tokens.meta.json"), "w") as f:
-            json.dump({"bits": bits, "seq_len": self.seq_len}, f)
-        self._pending = []
+            self.n_sequences += 1
 
     def close(self) -> None:
         # drop a final partial sequence (standard LM packing) but flush splits
-        if self._pending:
-            # partial split: COF flushes on close; write sidecar after
-            split_idx = self._cof._split_idx
-            all_tokens = np.concatenate([s for s, _, _ in self._pending])
-            dictionary = np.unique(all_tokens)
-            bits = _bits_for(len(dictionary))
-            code_of = {int(t): i for i, t in enumerate(dictionary)}
-            for seq, msk, meta in self._pending:
-                codes = np.asarray([code_of[int(t)] for t in seq], np.uint32)
-                self._cof.append({
-                    "tokens": pack_codes(codes, bits),
-                    "n_tokens": len(seq),
-                    "loss_mask": pack_bits(msk),
-                    "meta": meta,
-                })
-            self._pending = []
-            self._cof.close()
-            sdir = os.path.join(self.root, f"split-{split_idx:05d}")
-            np.save(os.path.join(sdir, "tokens.dict.npy"), dictionary.astype(np.int32))
-            with open(os.path.join(sdir, "tokens.meta.json"), "w") as f:
-                json.dump({"bits": bits, "seq_len": self.seq_len}, f)
-        else:
-            self._cof.close()
+        self._cof.close()
         with open(os.path.join(self.root, "corpus.json"), "w") as f:
             json.dump({
                 "seq_len": self.seq_len,
@@ -203,50 +155,80 @@ class TokenCorpusWriter:
 
 
 class TokenSplit:
-    """Reader for one split: yields (codes|tokens, loss_mask) arrays."""
+    """Reader for one split: yields (codes|tokens, loss_mask) arrays.
+
+    The dictionary and code width come from the token column's embedded
+    dict page (``dict_page()``); packed words for a batch come from ONE
+    ``read_packed`` gather.  No sidecar files, no private dictionary."""
 
     def __init__(self, split_dir: str, schema: Schema):
         self.split_dir = split_dir
-        self.dictionary = np.load(os.path.join(split_dir, "tokens.dict.npy"))
-        with open(os.path.join(split_dir, "tokens.meta.json")) as f:
-            m = json.load(f)
-        self.bits = m["bits"]
-        self.seq_len = m["seq_len"]
+        self.legacy = schema.type_of("tokens").kind == "bytes"
         from ..core.cif import SplitReader
 
         # projection pushdown: meta.col is never opened for training
         self.reader = SplitReader(split_dir, schema, ["tokens", "n_tokens", "loss_mask"])
+        if self.legacy:
+            self.dictionary = np.load(os.path.join(split_dir, "tokens.dict.npy"))
+            with open(os.path.join(split_dir, "tokens.meta.json")) as f:
+                m = json.load(f)
+            self.bits = m["bits"]
+            self.seq_len = m["seq_len"]
+        else:
+            page = self.reader.readers["tokens"].dict_page()
+            self.dictionary = np.asarray(page.values, np.int32)
+            self.bits = page.bits
+            self.seq_len = int(page.cell_lens[0]) if len(page.cell_lens) else 0
 
     def __len__(self) -> int:
         return self.reader.n_records
 
     def record(self, i: int, decode: str = "np") -> Tuple[np.ndarray, np.ndarray]:
-        if decode == "device":
-            t, m = self.record_batch([i], decode="device")
-            return t[0], m[0]
-        raw = self.reader.readers["tokens"].value_at(i)
-        n = self.reader.readers["n_tokens"].value_at(i)
-        msk = unpack_bits(self.reader.readers["loss_mask"].value_at(i), n)
-        if decode == "packed":
-            return np.frombuffer(raw, dtype="<u4").copy(), msk  # device decodes
-        codes = unpack_codes(raw, self.bits, n)
-        if decode == "py":  # the "Java" path, for Fig. 8 benchmarks
-            toks = np.asarray([int(self.dictionary[c]) for c in codes], np.int32)
-        else:
-            toks = self.dictionary[codes]
-        return toks.astype(np.int32), msk
+        t, m = self.record_batch([i], decode=decode)
+        return t[0], m[0]
 
     def record_batch(self, ids, decode: str = "np") -> Tuple[np.ndarray, np.ndarray]:
         """Batch fetch of sorted, strictly-increasing record ids.
 
-        All three columns are pulled through the bulk ``read_many`` path,
-        then the whole batch gets ONE vectorized unpack and ONE dictionary
-        gather (or one kernel launch for decode="device").  Returns
-        ``(tokens, loss_mask)`` shaped ``(B, seq_len)`` int32 — or
-        ``(B, W)`` uint32 packed words for decode="packed".
+        Packed words come from one ``read_packed`` gather off the dict page
+        (mask/n_tokens via bulk ``read_many``), then the whole batch gets
+        ONE vectorized unpack and ONE dictionary gather (or one kernel
+        launch for decode="device").  Returns ``(tokens, loss_mask)`` shaped
+        ``(B, seq_len)`` int32 — or ``(B, W)`` uint32 packed words for
+        decode="packed".
         """
         ids = list(ids)
         assert all(b > a for a, b in zip(ids, ids[1:])), "ids must be strictly increasing"
+        rd = self.reader.readers
+        if self.legacy:
+            return self._record_batch_legacy(ids, decode)
+        words, dictionary, bits, n = rd["tokens"].read_packed(ids)
+        ns = np.asarray(rd["n_tokens"].read_many(ids))
+        msk_raw = rd["loss_mask"].read_many(ids)
+        b = len(ids)
+        if b == 0:
+            z = np.empty((0, self.seq_len), np.int32)
+            return z, z.copy()
+        assert (ns == n).all(), "sequences in one split share seq_len"
+        # read_many hands back RaggedColumn views: equal-length cells gather
+        # with one fancy index straight off the column-file buffer.
+        mask = np.unpackbits(
+            msk_raw.as_matrix(), axis=1, bitorder="little"
+        )[:, :n].astype(np.int32)
+        if decode == "packed":
+            return words, mask
+        if decode == "device":
+            return device_decode_batch(words, bits, n, np.asarray(dictionary, np.int32)), mask
+        codes = unpack_codes_batch(words, bits, n)
+        if decode == "py":  # the "Java" path, for Fig. 8 benchmarks
+            toks = np.asarray(
+                [[int(dictionary[c]) for c in row] for row in codes], np.int32
+            )
+        else:
+            toks = np.asarray(dictionary, np.int32)[codes]
+        return toks.astype(np.int32), mask
+
+    def _record_batch_legacy(self, ids, decode: str) -> Tuple[np.ndarray, np.ndarray]:
         rd = self.reader.readers
         raws = rd["tokens"].read_many(ids)
         ns = np.asarray(rd["n_tokens"].read_many(ids))
@@ -257,8 +239,6 @@ class TokenSplit:
             return z, z.copy()
         n = int(ns[0])
         assert (ns == n).all(), "sequences in one split share seq_len"
-        # read_many hands back RaggedColumn views: equal-length cells gather
-        # with one fancy index straight off the column-file buffer.
         mask = np.unpackbits(
             msk_raw.as_matrix(), axis=1, bitorder="little"
         )[:, :n].astype(np.int32)
@@ -268,7 +248,7 @@ class TokenSplit:
         if decode == "device":
             return device_decode_batch(words, self.bits, n, self.dictionary), mask
         codes = unpack_codes_batch(words, self.bits, n)
-        if decode == "py":  # the "Java" path, for Fig. 8 benchmarks
+        if decode == "py":
             toks = np.asarray(
                 [[int(self.dictionary[c]) for c in row] for row in codes], np.int32
             )
@@ -285,7 +265,12 @@ class TokenSplit:
 class TokenCorpus:
     def __init__(self, root: str):
         self.root = root
-        self.schema = token_schema()
+        # the dataset's own schema.json tells new (ARRAY tokens) from legacy
+        # (BYTES tokens + sidecar) corpora
+        try:
+            self.schema = read_schema(root)
+        except FileNotFoundError:
+            self.schema = token_schema()
         self.splits = list_splits(root)
         meta_path = os.path.join(root, "corpus.json")
         self.meta: Dict = {}

@@ -66,12 +66,22 @@ def synth_token_docs(n_docs: int, vocab: int = 50000, seed: int = 0):
         yield toks.astype(np.int32), {"doc": str(i), "source": f"s{i % 7}"}
 
 
+def print_storage_report(root: str) -> None:
+    """Per-column encoding observability: chosen encodings per block, raw vs
+    encoded bytes, and the compression ratio the write-time stats bought."""
+    from ..core import format_storage_report
+
+    print("storage report (write-time encoding selection):")
+    print(format_storage_report(root))
+
+
 def sharded_verify(root: str, columns: list, n_hosts: int, expect_rows: int) -> float:
     """Concurrent sharded read-back: each simulated host scans its CPP-local
     shard on the columnar batch path; asserts the shards partition the
     dataset (counts sum to what was written).  Returns rows/second."""
     from ..core import CIFReader
 
+    print_storage_report(root)
     reader = CIFReader(root, columns=columns)
 
     def host_rows(host: int) -> int:
@@ -101,6 +111,10 @@ def main() -> None:
     ap.add_argument("--metadata-format", default="dcsl",
                     choices=["plain", "skiplist", "dcsl"])
     ap.add_argument("--content-codec", default="lzo", choices=["none", "lzo", "zlib"])
+    ap.add_argument("--encoding", default="auto",
+                    choices=["auto", "plain", "dict", "rle", "delta"],
+                    help="force one block encoding for the plain-kind crawl "
+                         "columns (default: per-block selection from stats)")
     ap.add_argument("--verify-hosts", type=int, default=0, metavar="N",
                     help="after writing, re-read via N concurrent sharded "
                          "batch scans and check the row count")
@@ -117,11 +131,22 @@ def main() -> None:
         }
         if args.content_codec != "none":
             fmts["content"] = ColumnFormat("cblock", codec=args.content_codec)
+        if args.encoding != "auto":  # forced-encoding knob (plain-kind columns)
+            from ..core import ENCODINGS
+
+            sch = urlinfo_schema()
+            for name in ("srcUrl", "fetchTime"):
+                if args.encoding == "plain" or ENCODINGS[args.encoding].supports(
+                    sch.type_of(name)
+                ):
+                    fmts[name] = ColumnFormat("plain", encoding=args.encoding)
         w = COFWriter(args.out, urlinfo_schema(), formats=fmts,
                       split_records=args.split_records)
         w.append_all(synth_crawl_records(args.n))
         w.close()
         print(f"wrote {w.total_records} crawl records to {args.out}")
+        if not args.verify_hosts:
+            print_storage_report(args.out)
         if args.verify_hosts:
             sharded_verify(args.out, ["url", "fetchTime"], args.verify_hosts,
                            w.total_records)
@@ -134,6 +159,8 @@ def main() -> None:
             w.add_document(toks, meta)
         w.close()
         print(f"wrote {w.n_sequences} sequences to {args.out}")
+        if not args.verify_hosts:
+            print_storage_report(args.out)
         if args.verify_hosts:
             sharded_verify(args.out, ["n_tokens"], args.verify_hosts,
                            w.n_sequences)

@@ -46,11 +46,13 @@ class PromptStore:
 
     ``fetch`` batches an admit step's slot fetches: refs are grouped by
     split, sorted (monotone readers), and pulled with one
-    ``TokenSplit.record_batch`` call per split — the bulk
-    ``read_batch``/``read_many`` path — then the loss-mask trims padding.
-    Splits are cached; a split whose forward-only readers are already past
-    the lowest requested id is reopened (same policy as the training
-    pipeline).
+    ``TokenSplit.record_batch`` call per split — one packed-word gather off
+    the split's dict-encoded token page (``read_packed``) plus bulk
+    ``read_many`` for the masks — then the loss-mask trims padding.
+    ``decode="device"`` expands the packed words with the Pallas
+    ``bitunpack``/``dict_decode`` kernels instead of host shifts.  Splits
+    are cached; a split whose forward-only readers are already past the
+    lowest requested id is reopened (same policy as the training pipeline).
     """
 
     def __init__(self, corpus, max_prompt: int = 32, decode: str = "np"):

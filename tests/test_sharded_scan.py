@@ -275,7 +275,8 @@ def test_dcsl_lookup_many_matches_scalar(rnd):
     for v in vals:
         w.append(v)
     raw = w.finish()
-    for size in (1, 37, 400):
+    # 700 crosses _LANE_MIN_INDICES, exercising the lockstep-lane walker
+    for size in (1, 37, 400, 700):
         idx = sorted(rnd.sample(range(2600), size))
         batch = ColumnFileReader(raw, typ)
         scalar = ColumnFileReader(raw, typ)
