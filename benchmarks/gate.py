@@ -1,0 +1,35 @@
+"""Tier-2 CI gate: one entry point for the ~20s benchmark smoke suite.
+
+    PYTHONPATH=src python -m benchmarks.gate
+
+Runs every registered benchmark at smoke sizes (``benchmarks.run --smoke``)
+so perf-path regressions — a broken decode path, a pruning planner that
+drops rows, a concurrency divergence — surface in CI as a nonzero exit,
+WITHOUT touching the committed full-size ``BENCH_*.json`` artifacts (smoke
+runs never write them).  Every benchmark already asserts its own
+correctness gates (serial == concurrent, where= == post-hoc filter, ...)
+before timing anything, which is what makes this a functional check and
+not just a crash test.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
+    from .run import main as run_main
+
+    try:
+        run_main()
+    except SystemExit as e:
+        if e.code:
+            print(f"# tier-2 gate FAILED after {time.perf_counter()-t0:.1f}s")
+            raise
+    print(f"# tier-2 gate passed in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

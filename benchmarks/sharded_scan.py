@@ -35,6 +35,7 @@ from repro.core.mapreduce import (
     fig1_map,
     fig1_map_batch,
     fig1_reduce,
+    fig1_where,
     run_job,
 )
 from repro.launch.load_data import synth_crawl_records
@@ -96,8 +97,8 @@ def _fig1_batch(root: str, batch_size: int, workers: int = 1):
     ids, open_batches = reader.job_inputs(batch_size=batch_size)
     return run_job(
         ids, reduce_fn=fig1_reduce, n_hosts=N_HOSTS,
-        open_split_batches=open_batches, map_batch_fn=fig1_map_batch(),
-        n_workers=workers,
+        open_split_batches=open_batches, where=fig1_where(),
+        map_batch_fn=fig1_map_batch(), n_workers=workers,
     )
 
 

@@ -6,12 +6,14 @@
 2. Scan with projection pushdown + lazy records (§5)
 3. Run the paper's Fig. 1 MapReduce job (distinct content-types for
    URLs matching "ibm.com/jp") and show the I/O the format eliminated.
-4. Re-run it in BATCH MODE: the map function consumes whole columnar
-   spans (vectorized RaggedColumn predicate + sparse DCSL fetch) and the
-   simulated hosts execute concurrently — same output, bit for bit.
-5. Add a low-cardinality derived column (cheap schema evolution, §4.3) —
-   it auto-selects the dict encoding, and a batch predicate job matches
-   on dictionary CODES (one ``eq`` per distinct value, not per cell).
+4. Re-run it in BATCH MODE with predicate pushdown (``where=``): the
+   engine evaluates the url predicate vectorized, late-materializes
+   metadata for just the matching rows, and the simulated hosts execute
+   concurrently — same output, bit for bit.
+5. Add a derived "lang" column that is CONSTANT PER SPLIT (cheap schema
+   evolution, §4.3) — the encoding layer picks RLE/dict, the writer emits
+   v3 zone maps, and a ``where=`` job then PRUNES every non-matching
+   split via min/max before decoding a single cell.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -22,10 +24,12 @@ import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (
-    CIFReader, COFWriter, ColumnFormat, STRING, add_column,
+    CIFReader, COFWriter, ColumnFormat, STRING, add_column, col,
     format_storage_report, storage_report, urlinfo_schema,
 )
-from repro.core.mapreduce import fig1_map, fig1_map_batch, fig1_reduce, run_job
+from repro.core.mapreduce import (
+    fig1_map, fig1_map_batch, fig1_reduce, fig1_where, run_job,
+)
 from repro.launch.load_data import synth_crawl_records
 
 
@@ -74,41 +78,45 @@ def main() -> None:
     print(f"map_time={res.map_time*1e3:.1f}ms total={res.total_time*1e3:.1f}ms "
           f"remote_reads={res.remote_reads} (CPP keeps this at 0)")
 
-    # -- 4. same job on the sharded vectorized scan engine: columnar batch
-    #      map function + concurrent hosts (one worker thread per host)
+    # -- 4. same job on the sharded vectorized scan engine with predicate
+    #      pushdown: where= evaluates the url predicate vectorized and
+    #      late-materializes metadata for just the matching rows; the
+    #      simulated hosts execute concurrently (one worker thread each)
     reader3 = CIFReader(root, columns=["url", "metadata"])
-    ids, open_batches = reader3.job_inputs(batch_size=2048)
+    ids, open_batches = reader3.job_inputs(batch_size=2048, where=fig1_where())
     res_b = run_job(ids, reduce_fn=fig1_reduce, n_hosts=4, n_workers=4,
                     open_split_batches=open_batches,
                     map_batch_fn=fig1_map_batch())
-    assert res_b.output == res.output, "batch mode must match the record path"
-    print(f"fig1 batch mode: identical output, map_time={res_b.map_time*1e3:.1f}ms "
-          f"total={res_b.total_time*1e3:.1f}ms "
+    assert res_b.output == res.output, "where= path must match the record path"
+    s3 = reader3.stats
+    print(f"fig1 where= batch mode: identical output, "
+          f"map_time={res_b.map_time*1e3:.1f}ms total={res_b.total_time*1e3:.1f}ms "
           f"({res.total_time/res_b.total_time:.1f}x vs record-at-a-time, "
-          f"{res_b.n_workers} worker threads)")
+          f"{res_b.n_workers} worker threads, "
+          f"{s3.rows_short_circuited} rows short-circuited)")
 
-    # -- 5. schema evolution + dict-encoded predicate: add a low-cardinality
-    #      "lang" column (one new file per split, nothing rewritten); the
-    #      encoding layer auto-selects dict, and eq() matches on dictionary
-    #      codes — one string compare per DISTINCT value per block.
+    # -- 5. schema evolution + zone-map pruning: add a "lang" column that is
+    #      constant per split (a partition key; one new file per split,
+    #      nothing rewritten).  The v3 writer emits min/max zone maps, so a
+    #      where= job prunes every non-jp split before decoding ANY cell.
     langs = ["en", "jp", "de", "fr", "es"]
     add_column(root, "lang", STRING(),
-               lambda si, n: [langs[(si + i) % len(langs)] for i in range(n)])
-    assert storage_report(root)["lang"]["blocks"].get("dict"), "dict expected"
+               lambda si, n: [langs[si % len(langs)]] * n)
+    assert storage_report(root)["lang"]["zone"]["blocks"], "zone maps expected"
 
-    def jp_map_batch(split_id, cols, emit):
-        hits = int(cols["lang"].eq("jp").sum())  # code-level pushdown
-        if hits:
-            emit(None, hits)
+    def count_map_batch(split_id, cols, emit):
+        emit(None, cols.n_rows)
 
     r4 = CIFReader(root, columns=["lang"])
-    ids4, open4 = r4.job_inputs(batch_size=2048)
+    ids4, open4 = r4.job_inputs(batch_size=2048, where=col("lang") == "jp")
     res_d = run_job(ids4, n_hosts=4, open_split_batches=open4,
-                    map_batch_fn=jp_map_batch,
+                    map_batch_fn=count_map_batch,
                     reduce_fn=lambda k, vs, emit: emit(None, sum(vs)))
-    n_jp = res_d.output[0][1]
-    print(f"dict-encoded predicate job: lang=='jp' rows = {n_jp} "
-          f"(matched on dictionary codes; map_time={res_d.map_time*1e3:.1f}ms)")
+    n_jp = res_d.output[0][1] if res_d.output else 0
+    print(f"zone-map pruned predicate job: lang=='jp' rows = {n_jp}; "
+          f"{r4.stats.blocks_pruned_stats} blocks pruned by stats, "
+          f"{r4.stats.cells_decoded} cells decoded "
+          f"(map_time={res_d.map_time*1e3:.1f}ms)")
 
 
 if __name__ == "__main__":

@@ -10,15 +10,19 @@ Public API:
 Baselines: seqfile (SEQ), textfile (TXT), rowgroup (RCFile).
 """
 from .cif import (
-    BatchColumns, CIFReader, ScanStats, format_storage_report, list_splits,
-    read_schema, storage_report,
+    BatchColumns, CIFReader, FilteredBatchColumns, ScanStats,
+    format_storage_report, list_splits, read_schema, storage_report,
 )
 from .cof import COFWriter, add_column, split_name
 from .colfile import CBLOCK_RECORDS, ColumnFileReader, ColumnFileWriter, ColumnFormat
 from .encodings import ENCODINGS, DictPage, encode_block, plain_size
 from .lazy import EagerRecord, LazyRecord, Record
-from .mapreduce import JobResult, fig1_map, fig1_map_batch, fig1_reduce, run_job
+from .mapreduce import (
+    JobResult, fig1_map, fig1_map_batch, fig1_reduce, fig1_where, run_job,
+)
 from .placement import Placement, WorkQueue, stable_partition
+from .predicate import Expr, col, parse_predicate, validate_predicate
+from .stats import BloomFilter, PruneResult, ZoneMap
 from .varcodec import DictRaggedColumn, RaggedColumn
 from .schema import (
     ARRAY,
@@ -37,13 +41,15 @@ from .schema import (
 )
 
 __all__ = [
-    "ARRAY", "BOOL", "BYTES", "BatchColumns", "CBLOCK_RECORDS", "CIFReader",
-    "COFWriter", "ColumnFileReader", "ColumnFileWriter", "ColumnFormat",
-    "ColumnType", "DictPage", "DictRaggedColumn", "EagerRecord", "ENCODINGS",
-    "FLOAT32", "FLOAT64", "INT32", "INT64", "JobResult", "LazyRecord", "MAP",
-    "Placement", "RECORD", "Record", "RaggedColumn", "STRING", "ScanStats",
-    "Schema", "WorkQueue", "add_column", "encode_block", "fig1_map",
-    "fig1_map_batch", "fig1_reduce", "format_storage_report", "list_splits",
+    "ARRAY", "BOOL", "BYTES", "BatchColumns", "BloomFilter", "CBLOCK_RECORDS",
+    "CIFReader", "COFWriter", "ColumnFileReader", "ColumnFileWriter",
+    "ColumnFormat", "ColumnType", "DictPage", "DictRaggedColumn",
+    "EagerRecord", "ENCODINGS", "Expr", "FLOAT32", "FLOAT64",
+    "FilteredBatchColumns", "INT32", "INT64", "JobResult", "LazyRecord",
+    "MAP", "Placement", "PruneResult", "RECORD", "Record", "RaggedColumn",
+    "STRING", "ScanStats", "Schema", "WorkQueue", "ZoneMap", "add_column",
+    "col", "encode_block", "fig1_map", "fig1_map_batch", "fig1_reduce",
+    "fig1_where", "format_storage_report", "list_splits", "parse_predicate",
     "plain_size", "read_schema", "run_job", "split_name", "stable_partition",
-    "storage_report", "urlinfo_schema",
+    "storage_report", "urlinfo_schema", "validate_predicate",
 ]

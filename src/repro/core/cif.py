@@ -24,6 +24,18 @@ Sharded scans: ``scan``/``scan_batches`` accept ``host=``/``n_hosts=``
 hosts' shards covers every split exactly once, and every read is CPP-local.
 ``ScanStats`` updates are lock-protected so per-host shards may be scanned
 from concurrent threads against one reader.
+
+Predicate pushdown (``where=``): ``scan_batches(where=p)`` and
+``job_inputs(where=p)`` plan each split against the v3 zone maps / dict
+pages / bloom filters (``SplitReader.plan``), decode ONLY the predicate
+columns of the surviving block ranges, evaluate ``p`` exactly and
+vectorized, and late-materialize the remaining projected columns for just
+the matching rows (``read_many``/DCSL ``lookup_many`` under the hood) —
+the paper's lazy record construction, automatic.  Pruning is advisory and
+the exact evaluation is final, so the emitted row set is bit-identical to
+an unpruned scan filtered post hoc; ``blocks_pruned_stats`` and
+``rows_short_circuited`` account the avoided work and are deterministic
+across serial, batch, and concurrent runs.
 """
 from __future__ import annotations
 
@@ -39,7 +51,10 @@ from .colfile import ColumnFileReader, ReadCounters
 from .cof import is_split_dir
 from .lazy import EagerRecord, LazyRecord, Record
 from .placement import Placement
+from .predicate import ColumnInfo, Expr, TRI_NONE, validate_predicate
 from .schema import Schema
+from .stats import PruneResult, clip_ranges, intersect_ranges, ranges_rows
+from .varcodec import RaggedColumn
 
 EAGER_CHUNK = 1024  # records decoded per column pass in iter_eager
 
@@ -74,6 +89,7 @@ def storage_report(root: str) -> Dict[str, Dict[str, Any]]:
             col = report.setdefault(name, {
                 "kind": fmt.get("kind", "plain"), "blocks": {},
                 "raw_bytes": 0, "encoded_bytes": 0, "file_bytes": 0,
+                "zone": {"blocks": 0, "min": None, "max": None, "bloom": False},
             })
             col["file_bytes"] += meta.get("bytes", {}).get(name, 0)
             enc = meta.get("encodings", {}).get(name)
@@ -82,6 +98,19 @@ def storage_report(root: str) -> Dict[str, Dict[str, Any]]:
                     col["blocks"][k] = col["blocks"].get(k, 0) + v
                 col["raw_bytes"] += enc.get("raw_bytes", 0)
                 col["encoded_bytes"] += enc.get("encoded_bytes", 0)
+                z = enc.get("zone")
+                if z:  # zone-map coverage: blocks with stats + min/max span
+                    cz = col["zone"]
+                    cz["blocks"] += z.get("blocks", 0)
+                    cz["bloom"] = cz["bloom"] or bool(z.get("bloom"))
+                    for key, pick in (("min", min), ("max", max)):
+                        v = z.get(key)
+                        if v is None:
+                            continue
+                        try:
+                            cz[key] = v if cz[key] is None else pick(cz[key], v)
+                        except TypeError:  # mixed types across splits
+                            cz[key] = cz[key]
     for col in report.values():
         col["ratio"] = (
             round(col["encoded_bytes"] / col["raw_bytes"], 3)
@@ -91,14 +120,23 @@ def storage_report(root: str) -> Dict[str, Dict[str, Any]]:
 
 
 def format_storage_report(root: str) -> str:
-    """Human-readable per-column storage report (load_data prints this)."""
+    """Human-readable per-column storage report (load_data prints this):
+    the encoding histogram plus each column's zone-map coverage — blocks
+    with stats and the overall min/max span the planner can prune on."""
     lines = [f"{'column':<12} {'kind':<9} {'blocks':<28} "
-             f"{'raw':>10} {'encoded':>10} {'ratio':>6}"]
+             f"{'raw':>10} {'encoded':>10} {'ratio':>6}  zone-maps"]
     for name, col in storage_report(root).items():
         blocks = ",".join(f"{k}:{v}" for k, v in sorted(col["blocks"].items())) or "-"
+        z = col["zone"]
+        if z["blocks"]:
+            span = (f" [{z['min']!r}..{z['max']!r}]"
+                    if z["min"] is not None else " [no bounds]")
+            zone = f"{z['blocks']}blk{span}" + ("+bloom" if z["bloom"] else "")
+        else:
+            zone = "-"
         lines.append(
             f"{name:<12} {col['kind']:<9} {blocks:<28} "
-            f"{col['raw_bytes']:>10} {col['encoded_bytes']:>10} {col['ratio']:>6}"
+            f"{col['raw_bytes']:>10} {col['encoded_bytes']:>10} {col['ratio']:>6}  {zone}"
         )
     return "\n".join(lines)
 
@@ -115,6 +153,14 @@ class ScanStats:
     blocks_decompressed: int = 0
     records_scanned: int = 0
     files_opened: int = 0
+    # predicate pushdown accounting (where= scans only; zero otherwise).
+    # blocks_pruned_stats: per-column stats blocks the planner excluded
+    # before any decode; rows_short_circuited: rows whose predicate
+    # evaluated false on the surviving spans, so their remaining projected
+    # columns were never materialized.  Both are per-split deterministic,
+    # hence bit-identical between serial, batch, and concurrent runs.
+    blocks_pruned_stats: int = 0
+    rows_short_circuited: int = 0
 
     def absorb(self, c: ReadCounters, file_bytes: int) -> None:
         self.bytes_io += file_bytes
@@ -126,21 +172,126 @@ class ScanStats:
         self.files_opened += 1
 
 
+class _LazyReaders(dict):
+    """Column readers opened on first access (``lazy_open`` SplitReaders):
+    a split whose every block the planner pruned never opens the files of
+    the columns it would have projected."""
+
+    def __init__(self, sr: "SplitReader"):
+        super().__init__()
+        self._sr = sr
+
+    def __missing__(self, name: str) -> ColumnFileReader:
+        r = self._sr._open_reader(name)
+        self[name] = r
+        return r
+
+
 class SplitReader:
     """RecordReader for one split-directory."""
 
-    def __init__(self, split_dir: str, schema: Schema, columns: Sequence[str]):
+    def __init__(
+        self,
+        split_dir: str,
+        schema: Schema,
+        columns: Sequence[str],
+        lazy_open: bool = False,
+        project: Optional[Sequence[str]] = None,
+    ):
         self.split_dir = split_dir
         self.schema = schema
-        self.columns = list(columns)
+        self.columns = list(columns)  # openable (projection + predicate)
+        # the caller-requested projection: what batches/records expose.
+        # Predicate-only columns stay readable by explicit name but never
+        # appear in keys()/iteration, so where= and plain scans of the
+        # same reader expose identical column sets.
+        self.out_columns = list(project) if project is not None else self.columns
         with open(os.path.join(split_dir, "_meta.json")) as f:
             self.meta = json.load(f)
         self.n_records = self.meta["n_records"]
-        self.readers: Dict[str, ColumnFileReader] = {}
-        for name in self.columns:
-            with open(os.path.join(split_dir, f"{name}.col"), "rb") as f:
-                raw = f.read()
-            self.readers[name] = ColumnFileReader(raw, schema.type_of(name))
+        # planner accounting, folded into ScanStats by finish_stats
+        self.blocks_pruned_stats = 0
+        self.rows_short_circuited = 0
+        self._plan: Optional[Tuple[Expr, PruneResult]] = None
+        if lazy_open:
+            self.readers: Dict[str, ColumnFileReader] = _LazyReaders(self)
+        else:
+            self.readers = {n: self._open_reader(n) for n in self.columns}
+
+    def _open_reader(self, name: str) -> ColumnFileReader:
+        assert name in self.columns, f"column {name!r} not opened by this split"
+        with open(os.path.join(self.split_dir, f"{name}.col"), "rb") as f:
+            raw = f.read()
+        return ColumnFileReader(raw, self.schema.type_of(name))
+
+    # -- predicate planning + late materialization ---------------------------
+    def _meta_zone(self, name: str) -> Optional[Dict[str, Any]]:
+        return self.meta.get("encodings", {}).get(name, {}).get("zone")
+
+    def plan(self, pred: Expr) -> PruneResult:
+        """Advisory split plan.
+
+        Stage 1 — split pruning from ``_meta.json`` alone: each predicate
+        column's persisted zone summary (exact min/max across the whole
+        split) evaluates three-valued; if any column proves no row can
+        match, the split is done WITHOUT opening a single column file.
+        Stage 2 — block pruning: intersect each predicate column's
+        ``ColumnFileReader.prune`` ranges (zone maps + dict pages +
+        blooms).  Memoized per predicate instance and charged to the prune
+        counters exactly once per split, so the accounting is identical no
+        matter how many spans consult it or how many workers run.
+        """
+        if self._plan is not None and self._plan[0] is pred:
+            return self._plan[1]
+        pcols = sorted(pred.columns())
+        total = pruned = 0
+        split_dead = False
+        for name in pcols:
+            z = self._meta_zone(name)
+            if not z or z.get("min") is None:
+                continue
+            info = ColumnInfo(vmin=z["min"], vmax=z["max"])
+            if pred.tri(lambda nm, name=name, info=info:
+                        info if nm == name else None) == TRI_NONE:
+                split_dead = True
+                total += z["blocks"]
+                pruned += z["blocks"]
+        if split_dead:
+            res = PruneResult([], total, pruned)
+        else:
+            ranges = [(0, self.n_records)] if self.n_records else []
+            total = pruned = 0
+            for name in pcols:
+                pr = self.readers[name].prune(pred, column=name)
+                ranges = intersect_ranges(ranges, pr.ranges)
+                total += pr.blocks_total
+                pruned += pr.blocks_pruned
+            res = PruneResult(ranges, total, pruned)
+        self._plan = (pred, res)
+        self.blocks_pruned_stats += res.blocks_pruned
+        return res
+
+    def filter_span(
+        self, pred: Expr, start: int, stop: int
+    ) -> Optional["FilteredBatchColumns"]:
+        """Evaluate ``pred`` exactly over the surviving sub-ranges of
+        ``[start, stop)`` and return the matching rows as a late-
+        materializing ``FilteredBatchColumns`` (None when nothing matches —
+        counters still advance).  Only the predicate columns are decoded
+        here; everything else waits for the map function to ask."""
+        sub = clip_ranges(self.plan(pred).ranges, start, stop)
+        if not sub:
+            return None
+        ids = np.concatenate([np.arange(a, b, dtype=np.int64) for a, b in sub])
+        pcols = sorted(pred.columns())
+        decoded = {c: self.readers[c].read_many(ids.tolist()) for c in pcols}
+        mask = pred.mask(lambda name: decoded[name], len(ids))
+        n_match = int(mask.sum())
+        self.rows_short_circuited += len(ids) - n_match
+        if n_match == 0:
+            return None
+        pred_vals = {c: _compress(v, mask) for c, v in decoded.items()}
+        return FilteredBatchColumns(self, ids[mask], pred_vals, start, stop)
 
     def iter_lazy(self) -> Iterator[LazyRecord]:
         rec = LazyRecord(self.readers)
@@ -151,12 +302,12 @@ class SplitReader:
     def read_range(self, start: int, stop: int) -> Dict[str, Any]:
         """Columnar batch over records ``[start, stop)``: one bulk decode
         per projected column."""
-        return {n: self.readers[n].read_range(start, stop) for n in self.columns}
+        return {n: self.readers[n].read_range(start, stop) for n in self.out_columns}
 
     def read_batch(self, indices: Sequence[int]) -> Dict[str, Any]:
         """Columnar batch over a sorted strictly-increasing index set
         (monotone readers: contiguous runs decode in single passes)."""
-        return {n: self.readers[n].read_many(indices) for n in self.columns}
+        return {n: self.readers[n].read_many(indices) for n in self.out_columns}
 
     def iter_eager(self, chunk: int = EAGER_CHUNK) -> Iterator[EagerRecord]:
         """Eager scan on the batch path: each column decodes ``chunk``
@@ -165,16 +316,26 @@ class SplitReader:
         for start in range(0, self.n_records, chunk):
             stop = min(start + chunk, self.n_records)
             cols = {}
-            for name in self.columns:
+            for name in self.out_columns:
                 v = self.readers[name].read_range(start, stop)
                 cols[name] = v.tolist() if isinstance(v, np.ndarray) else v
             for i in range(stop - start):
-                yield EagerRecord({n: cols[n][i] for n in self.columns})
+                yield EagerRecord({n: cols[n][i] for n in self.out_columns})
 
     def finish_stats(self, stats: ScanStats) -> None:
         for name, r in self.readers.items():
             stats.absorb(r.counters, r.file_bytes)
         stats.records_scanned += self.n_records
+        stats.blocks_pruned_stats += self.blocks_pruned_stats
+        stats.rows_short_circuited += self.rows_short_circuited
+
+
+def _compress(vals: Any, mask: np.ndarray) -> Any:
+    """Filter a decoded column batch down to the mask's rows (zero-copy
+    views where the representation allows)."""
+    if isinstance(vals, (np.ndarray, RaggedColumn)):
+        return vals[np.flatnonzero(mask)]
+    return [v for v, m in zip(vals, mask) if m]
 
 
 class BatchColumns:
@@ -194,6 +355,8 @@ class BatchColumns:
 
     __slots__ = ("_sr", "start", "stop", "_cache")
 
+    prefiltered = False
+
     def __init__(self, sr: "SplitReader", start: int, stop: int):
         self._sr = sr
         self.start = start
@@ -205,13 +368,13 @@ class BatchColumns:
         return self.stop - self.start
 
     def keys(self):
-        return list(self._sr.columns)
+        return list(self._sr.out_columns)
 
     def __iter__(self):
-        return iter(self._sr.columns)
+        return iter(self._sr.out_columns)
 
     def __contains__(self, name: str) -> bool:
-        return name in self._sr.columns
+        return name in self._sr.out_columns
 
     def __getitem__(self, name: str) -> Any:
         v = self._cache.get(name)
@@ -226,7 +389,7 @@ class BatchColumns:
         return v
 
     def get(self, name: str, default: Any = None) -> Any:
-        return self[name] if name in self._sr.columns else default
+        return self[name] if name in self._sr.out_columns else default
 
     def sparse(self, name: str, rows: Sequence[int], key: Optional[str] = None) -> List[Any]:
         """Fetch ``rows`` (span-relative, strictly increasing) of ``name``.
@@ -238,11 +401,85 @@ class BatchColumns:
         ids = [self.start + int(r) for r in rows]
         assert all(b > a for a, b in zip(ids, ids[1:])), "rows must be strictly increasing"
         assert not ids or (self.start <= ids[0] and ids[-1] < self.stop), "rows outside span"
+        return self._sparse_abs(name, ids, key)
+
+    def _sparse_abs(self, name: str, ids: List[int], key: Optional[str]) -> List[Any]:
         r = self._sr.readers[name]
         if key is not None:
             return r.lookup_many(ids, key)
         vals = r.read_many(ids)
         return vals.tolist() if isinstance(vals, np.ndarray) else list(vals)
+
+    def filter(self, pred: Expr) -> Optional["FilteredBatchColumns"]:
+        """Predicate pushdown over this span (what ``run_job(where=)``
+        calls): prune via the split plan, evaluate ``pred`` exactly on the
+        survivors, and return the matching rows as a late-materializing
+        view — or None when no row matches (planner/evaluation counters
+        still advance)."""
+        missing = sorted(c for c in pred.columns() if c not in self._sr.columns)
+        assert not missing, (
+            f"predicate references unopened columns {missing}; include them "
+            "in the reader's columns or pass where= to job_inputs()"
+        )
+        validate_predicate(pred, self._sr.schema.type_of)
+        return self._sr.filter_span(pred, self.start, self.stop)
+
+
+class FilteredBatchColumns(BatchColumns):
+    """A ``BatchColumns`` span already filtered by a predicate: only the
+    matching rows exist.  Predicate columns arrive pre-decoded (sliced from
+    the exact evaluation); every other column late-materializes on first
+    access via ``read_many`` over just the matching rows — the batch analog
+    of the paper's lazy record construction, applied automatically.
+
+    ``rows`` holds the absolute record ids that matched (strictly
+    increasing); ``n_rows`` is their count; ``sparse(name, rows)`` indexes
+    into the MATCHING rows.  ``prefiltered`` marks the span so map
+    functions (and ``filter`` itself) can tell it apart from a raw span.
+    """
+
+    __slots__ = ("rows",)
+
+    prefiltered = True
+
+    def __init__(
+        self,
+        sr: "SplitReader",
+        rows: np.ndarray,
+        pred_values: Dict[str, Any],
+        start: int,
+        stop: int,
+    ):
+        super().__init__(sr, start, stop)
+        self.rows = rows
+        self._cache.update(pred_values)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.rows)
+
+    def __getitem__(self, name: str) -> Any:
+        v = self._cache.get(name)
+        if v is None:
+            r = self._sr.readers[name]
+            assert r.position <= int(self.rows[0]), (
+                f"column {name!r} already read past this span"
+            )
+            v = r.read_many(self.rows.tolist())
+            self._cache[name] = v
+        return v
+
+    def sparse(self, name: str, rows: Sequence[int], key: Optional[str] = None) -> List[Any]:
+        idx = np.asarray(list(rows), np.int64)
+        ids = [int(i) for i in self.rows[idx]]
+        assert all(b > a for a, b in zip(ids, ids[1:])), "rows must be strictly increasing"
+        return self._sparse_abs(name, ids, key)
+
+    def filter(self, pred: Expr) -> Optional["FilteredBatchColumns"]:
+        raise AssertionError(
+            "span is already predicate-filtered — pass where= to either "
+            "job_inputs() or run_job(), not both"
+        )
 
 
 class CIFReader:
@@ -312,8 +549,25 @@ class CIFReader:
         assert split_ids is None, "pass either split_ids or host/n_hosts, not both"
         return self.shard_splits(host, n_hosts, placement)
 
-    def open_split(self, split_dir: str) -> SplitReader:
-        return SplitReader(split_dir, self.schema, self.columns)
+    def open_split(
+        self,
+        split_dir: str,
+        extra_columns: Sequence[str] = (),
+        lazy_open: bool = False,
+    ) -> SplitReader:
+        cols = list(self.columns)
+        for c in extra_columns:
+            assert c in self.schema, f"unknown predicate column {c}"
+            if c not in cols:
+                cols.append(c)
+        return SplitReader(split_dir, self.schema, cols, lazy_open=lazy_open,
+                           project=self.columns)
+
+    def _where_columns(self, where: Expr) -> List[str]:
+        cols = sorted(where.columns())
+        assert cols, "where= predicate references no columns"
+        validate_predicate(where, self.schema.type_of)
+        return cols
 
     def absorb_stats(self, sr: SplitReader) -> None:
         """Fold a finished split's counters into ``stats`` (thread-safe, so
@@ -344,6 +598,7 @@ class CIFReader:
         host: Optional[int] = None,
         n_hosts: Optional[int] = None,
         placement: Optional[Placement] = None,
+        where: Optional[Expr] = None,
     ) -> Iterator[Dict[str, Any]]:
         """Columnar scan: yields ``{column: values}`` dicts of up to
         ``batch_size`` records (arrays for numeric/bool columns, zero-copy
@@ -351,29 +606,71 @@ class CIFReader:
         projection pushdown and ``ScanStats`` accounting identical to a
         record-at-a-time eager scan.  With ``host=`` (plus ``n_hosts=`` or
         ``placement=``) the scan covers only that host's CPP-local shard —
-        per-host iterators partition the dataset exactly."""
+        per-host iterators partition the dataset exactly.
+
+        ``where=`` pushes a predicate down the whole read path: splits then
+        blocks are pruned via zone maps / dict pages / blooms, the
+        predicate evaluates vectorized on only its own columns over the
+        surviving ranges, and the remaining projected columns materialize
+        for just the matching rows.  Batches then hold exactly the matching
+        rows (possibly fewer than ``batch_size``; empty batches are never
+        yielded), bit-identical to filtering an unpruned scan post hoc.
+        """
+        if where is None:
+            for _, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
+                sr = self.open_split(sdir)
+                for start in range(0, sr.n_records, batch_size):
+                    yield sr.read_range(start, min(start + batch_size, sr.n_records))
+                self.absorb_stats(sr)
+            return
+        pcols = self._where_columns(where)
         for _, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
-            sr = self.open_split(sdir)
-            for start in range(0, sr.n_records, batch_size):
-                yield sr.read_range(start, min(start + batch_size, sr.n_records))
+            sr = self.open_split(sdir, extra_columns=pcols, lazy_open=True)
+            plan = sr.plan(where)
+            for a, b in plan.ranges:
+                for start in range(a, b, batch_size):
+                    fb = sr.filter_span(where, start, min(start + batch_size, b))
+                    if fb is not None:
+                        yield {c: fb[c] for c in self.columns}
             self.absorb_stats(sr)
 
     # -- MapReduce adapters (run_job inputs) ---------------------------------
     def job_inputs(
-        self, batch_size: int = EAGER_CHUNK
+        self,
+        batch_size: int = EAGER_CHUNK,
+        *,
+        where: Optional[Expr] = None,
     ) -> Tuple[List[int], Callable[[int], Iterator[BatchColumns]]]:
         """``(split_ids, open_split_batches)`` for batch-mode ``run_job``.
 
         Each task opens its own ``SplitReader`` (no shared mutable reader
         state between concurrent map tasks) and yields lazy ``BatchColumns``
         spans; stats absorption is serialized via ``absorb_stats``.
+
+        With ``where=`` the spans arrive predicate-filtered
+        (``FilteredBatchColumns``): splits/blocks prune against the zone
+        maps before any decode, only the predicate columns of survivors are
+        evaluated, and map functions see just the matching rows (empty
+        spans are never yielded).  Equivalent to ``run_job(where=...)`` but
+        saves opening the projection columns of fully-pruned splits.
         """
         split_map = dict(self.splits())
+        pcols = self._where_columns(where) if where is not None else ()
 
         def open_split_batches(split_id: int) -> Iterator[BatchColumns]:
-            sr = self.open_split(split_map[split_id])
-            for start in range(0, sr.n_records, batch_size):
-                yield BatchColumns(sr, start, min(start + batch_size, sr.n_records))
+            if where is None:
+                sr = self.open_split(split_map[split_id])
+                for start in range(0, sr.n_records, batch_size):
+                    yield BatchColumns(sr, start, min(start + batch_size, sr.n_records))
+            else:
+                sr = self.open_split(
+                    split_map[split_id], extra_columns=pcols, lazy_open=True
+                )
+                for a, b in sr.plan(where).ranges:
+                    for start in range(a, b, batch_size):
+                        fb = sr.filter_span(where, start, min(start + batch_size, b))
+                        if fb is not None:
+                            yield fb
             self.absorb_stats(sr)
 
         return sorted(split_map), open_split_batches

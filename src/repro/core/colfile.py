@@ -1,12 +1,15 @@
 """Column-file container: one file per column per split-directory (§4.2).
 
-Layout (version 2):
+Layout (version 3):
          [MAGIC "RCOL"][u8 version][kind str][codec str][encoding str]
          [uvarint n_records][uvarint body_len][body]
+         [u8 has_stats][stats page]                       (v3 footer)
 
 Version 1 files (written before the encoding layer existed) have no
-``encoding`` field and raw per-cell bodies; the reader still reads them
-bit-for-bit (see ``tests/test_encodings.py::test_reads_pre_encoding_fixtures``).
+``encoding`` field and raw per-cell bodies; version 2 files have no stats
+footer.  The reader still reads both bit-for-bit (they simply "plan as
+scan everything" — see tests/test_pushdown.py and
+``tests/test_encodings.py::test_reads_pre_encoding_fixtures``).
 
 Kinds (the paper's five metadata-column layouts from Table 1 map onto these):
   plain    — self-describing encoded blocks, codec "none"        (CIF)
@@ -38,6 +41,16 @@ decode spans vectorized.  Scalar and batch access share one code path per
 kind, so ``ReadCounters`` are bit-identical between a ``value_at`` loop and
 the batch calls over the same records — for every encoding (enforced by
 tests/test_encodings.py).
+
+Predicate pushdown (v3): the writer emits one zone map per value block
+(stats.py) into the footer, and ``ColumnFileReader`` exposes
+``block_stats()`` plus ``prune(pred)`` — the surviving block/row-range set
+computed WITHOUT decoding any cell and without moving any counter (pruning
+is advisory; exact evaluation on the survivors has the final word).
+Dict-encoded plain-kind blocks additionally resolve ``eq``/``isin``/
+``contains`` leaves against their dictionary page, so whole blocks are
+skipped when no dictionary entry matches — this works even on v2 files
+that predate zone maps.
 """
 from __future__ import annotations
 
@@ -58,8 +71,16 @@ from .encodings import (
     encode_block,
     plain_size,
 )
+from .predicate import ColumnInfo, Expr, TRI_NONE
 from .schema import ColumnType
 from .skiplist import SkipListReader, SkipListWriter
+from .stats import (
+    PruneResult,
+    StatsCollector,
+    ZoneMap,
+    decode_stats_page,
+    merge_zone_maps,
+)
 from .varcodec import (
     DictRaggedColumn,
     RaggedColumn,
@@ -79,7 +100,7 @@ from .varcodec import (
 )
 
 MAGIC = b"RCOL"
-VERSION = 2  # v1 (pre-encoding-layer) files remain readable
+VERSION = 3  # v1 (pre-encoding) and v2 (pre-zone-map) files remain readable
 
 CBLOCK_RECORDS = 256  # records per compressed block (load-time knob, §5.3)
 PLAIN_BLOCK_RECORDS = 2048  # records per encoded block for the plain kind
@@ -172,6 +193,11 @@ class ColumnFileWriter:
         self.n = 0
         # per-column encoding stats, persisted by COF into _meta.json
         self._stats: Dict[str, Any] = {"blocks": {}, "raw_bytes": 0, "encoded_bytes": 0}
+        # zone-map collector (v3 footer); one add_block per value block.
+        # _zflushed tracks how many records have already been fed to it.
+        self._zone = StatsCollector(typ)
+        self._zflushed = 0
+        self._zwin: List[Any] = []  # streaming window (skiplist scalar kinds)
         k = fmt.kind
         if k in ("plain", "cblock"):
             self._body = bytearray()
@@ -201,12 +227,21 @@ class ColumnFileWriter:
             if self._sl_dict_eligible:
                 self._values.append(v)
             else:
+                # stream stats windows (values are not retained on this path)
+                if self._zone.enabled:
+                    self._zwin.append(v)
+                    if len(self._zwin) == SKIPLIST_DICT_BLOCK:
+                        self._zone.add_block(self._zflushed, self._zwin)
+                        self._zflushed += len(self._zwin)
+                        self._zwin = []
                 self._slw.append(v)
         elif k == "dcsl":
             self._dcsl.append(v)
         self.n += 1
 
     def _flush_block(self) -> None:
+        self._zone.add_block(self._zflushed, self._pending)
+        self._zflushed += len(self._pending)
         name, payload, raw = encode_block(self.typ, self._pending, self.fmt.encoding)
         codec = self.fmt.codec if self.fmt.kind == "cblock" else "none"
         self._body += compress_block(
@@ -284,6 +319,15 @@ class ColumnFileWriter:
             body, encoding = bytes(self._body), self.fmt.encoding
         elif k == "skiplist":
             body, encoding = self._finish_skiplist()
+            if self._sl_dict_eligible:
+                # values were retained: feed stats windows on the same
+                # grid the dict pages use (aligned with the top skip level)
+                for i in range(0, len(self._values), SKIPLIST_DICT_BLOCK):
+                    self._zone.add_block(i, self._values[i:i + SKIPLIST_DICT_BLOCK])
+            elif self._zwin:  # streaming remainder
+                self._zone.add_block(self._zflushed, self._zwin)
+                self._zflushed += len(self._zwin)
+                self._zwin = []
         elif k == "dcsl":
             body, encoding = self._dcsl.finish(), "plain"
             self._stats = {"blocks": {"dcsl": 1}, "raw_bytes": len(body),
@@ -297,12 +341,21 @@ class ColumnFileWriter:
         write_uvarint(out, self.n)
         write_uvarint(out, len(body))
         out += body
+        # v3 footer: advisory stats page (empty for kinds without zone maps)
+        page = self._zone.finish()
+        out.append(1 if page else 0)
+        out += page
         return bytes(out)
 
     def encoding_stats(self) -> Dict[str, Any]:
         """Per-block encoding histogram + raw-vs-encoded byte totals (the
-        write-time selection made observable; COF persists this)."""
-        return dict(self._stats)
+        write-time selection made observable; COF persists this), plus the
+        zone-map coverage summary when the column carries stats."""
+        s = dict(self._stats)
+        zone = self._zone.summary()
+        if zone:
+            s["zone"] = zone
+        return s
 
 
 # ===========================================================================
@@ -317,7 +370,7 @@ class ColumnFileReader:
     def __init__(self, raw: bytes, typ: ColumnType):
         assert raw[:4] == MAGIC, "bad column file magic"
         self.version = raw[4]
-        assert self.version in (1, VERSION), f"unknown column file version {raw[4]}"
+        assert self.version in (1, 2, VERSION), f"unknown column file version {raw[4]}"
         off = 5
         self.kind, off = _read_str(raw, off)
         self.codec, off = _read_str(raw, off)
@@ -331,7 +384,14 @@ class ColumnFileReader:
         self.typ = typ
         self.counters = ReadCounters()
         self.file_bytes = len(raw)
-        # v2 block-structured kinds carry per-block encoding tags
+        # v3 footer: advisory zone maps + optional bloom.  Parsing moves NO
+        # counter — stats are metadata, not data read.
+        self.zone_maps: Optional[List[ZoneMap]] = None
+        self.bloom = None
+        soff = off + body_len
+        if self.version >= 3 and soff < len(raw) and raw[soff]:
+            self.zone_maps, self.bloom = decode_stats_page(typ, raw, soff + 1)
+        # v2+ block-structured kinds carry per-block encoding tags
         self._enc = self.version >= 2 and self.kind in ("plain", "cblock")
         self._sl_dict = self.kind == "skiplist" and self.encoding == "dict"
         self._init_kind()
@@ -644,6 +704,108 @@ class ColumnFileReader:
             chunks.append(vals)
             i += k
         return chunks
+
+    # -- predicate pushdown (advisory planning; never decodes, never counts) --
+    def block_stats(self) -> Optional[List[ZoneMap]]:
+        """The file's zone maps, or None when it carries none (v1/v2 files,
+        unsupported kinds).  Pure metadata access: no counter moves."""
+        return self.zone_maps
+
+    def _plan_blocks(self) -> Optional[List[Tuple[int, int]]]:
+        """The (first, count) grid the planner prunes on: zone maps when
+        present, else the encoded-block grid (dict-page pruning works even
+        without stats).  None = no plannable structure (scan everything)."""
+        if self.zone_maps:
+            grid = [(z.first, z.count) for z in self.zone_maps]
+        elif self._enc:
+            grid = [(first, nrec) for nrec, _, _, first in self._blocks]
+        else:
+            return None
+        if sum(c for _, c in grid) != self.n:  # defensive: grid must tile
+            return None
+        return grid
+
+    def _dict_block_values(self, bi: int) -> Optional[Any]:
+        """The EXACT distinct-value set of encoded block ``bi`` when it is a
+        dict block that can be peeked for free (plain kind, codec none):
+        the dictionary page header parses without touching any cell."""
+        if not (self._enc and self.kind == "plain" and self.codec == "none"):
+            return None
+        if self.typ.kind not in ("int32", "int64", "string", "bytes"):
+            return None
+        nrec, poff, plen, _ = self._blocks[bi]
+        if TAG_NAMES[self.body[poff]] != "dict":
+            return None
+        page = DictPage(self.typ, self.body, poff + 1, poff + plen, nrec)
+        if self.typ.kind in ("string", "bytes"):
+            return RaggedColumn(self.body, page.starts, page.lengths, self.typ.kind)
+        return page.values
+
+    def prune(self, pred: Expr, column: Optional[str] = None) -> PruneResult:
+        """Advisory pruning: the row ranges that MAY contain matches.
+
+        Evaluates ``pred`` three-valued against the file-level aggregate
+        (bounds + bloom), then per block against zone maps and — for
+        dict-encoded plain blocks — the exact dictionary value set.  A block
+        survives unless some source proves no row can match; files without
+        stats survive whole.  ``column`` names the column this file stores
+        (refs to other columns evaluate as unknown); with ``column=None``
+        every reference is treated as this column.  Nothing is decoded and
+        no counter moves — pruning is advisory, evaluation is exact.
+        """
+        if self.n == 0:
+            return PruneResult([], 0, 0)
+        full = PruneResult([(0, self.n)], 0, 0)
+        blocks = self._plan_blocks()
+        if blocks is None:
+            return full
+
+        def known(name: str) -> bool:
+            return column is None or name == column
+
+        agg = merge_zone_maps(self.zone_maps) if self.zone_maps else None
+        if agg is not None or self.bloom is not None:
+            def file_info(name: str) -> Optional[ColumnInfo]:
+                if not known(name):
+                    return None
+                if agg is not None:
+                    return agg.info(self.bloom)
+                return ColumnInfo(bloom=self.bloom)
+
+            if pred.tri(file_info) == TRI_NONE:
+                return PruneResult([], len(blocks), len(blocks))
+
+        ranges: List[Tuple[int, int]] = []
+        pruned = 0
+        for bi, (first, count) in enumerate(blocks):
+            zm = self.zone_maps[bi] if self.zone_maps else None
+
+            def info(name: str, zm=zm, bi=bi) -> Optional[ColumnInfo]:
+                if not known(name):
+                    return None
+                # the block grid follows the zone maps when both exist, and
+                # the writer emits those per encoded block — indices align
+                values = (
+                    self._dict_block_values(bi)
+                    if self.zone_maps is None or self._enc else None
+                )
+                ci = ColumnInfo(
+                    vmin=zm.vmin if zm else None,
+                    vmax=zm.vmax if zm else None,
+                    values=values,
+                    bloom=self.bloom,
+                )
+                if ci.vmin is None and ci.values is None and ci.bloom is None:
+                    return None
+                return ci
+
+            if pred.tri(info) == TRI_NONE:
+                pruned += 1
+            elif ranges and ranges[-1][1] == first:
+                ranges[-1] = (ranges[-1][0], first + count)
+            else:
+                ranges.append((first, first + count))
+        return PruneResult(ranges, len(blocks), pruned)
 
     # -- public -------------------------------------------------------------------
     def value_at(self, index: int) -> Any:

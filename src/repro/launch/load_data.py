@@ -11,6 +11,11 @@ CPP-local shard via ``CIFReader.scan_batches(host=, n_hosts=)``,
 concurrently (one thread per host), and the row counts must add up to
 exactly what was written — the same multi-host eager-scan machinery
 training startup uses.
+
+``--where 'col OP value'`` (OP in == != < <= > >= contains) runs a
+predicate-pushdown scan over the freshly written dataset and reports
+pruned-vs-scanned block counts — the zone maps the v3 writer just
+emitted, made observable from the command line.
 """
 from __future__ import annotations
 
@@ -75,6 +80,31 @@ def print_storage_report(root: str) -> None:
     print(format_storage_report(root))
 
 
+def where_report(root: str, text: str, columns: list) -> dict:
+    """Run a ``where=`` pushdown scan and report pruned vs scanned blocks.
+
+    Returns the numbers it prints so tests can assert on them."""
+    from ..core import CIFReader, parse_predicate
+
+    pred = parse_predicate(text)
+    reader = CIFReader(root, columns=columns)
+    rows = 0
+    for batch in reader.scan_batches(batch_size=4096, where=pred):
+        rows += len(next(iter(batch.values())))
+    s = reader.stats
+    out = {
+        "rows": rows,
+        "blocks_pruned": s.blocks_pruned_stats,
+        "rows_short_circuited": s.rows_short_circuited,
+        "cells_decoded": s.cells_decoded,
+    }
+    print(f"where {text!r}: {rows} matching rows; "
+          f"{s.blocks_pruned_stats} blocks pruned by stats, "
+          f"{s.rows_short_circuited} rows short-circuited, "
+          f"{s.cells_decoded} cells decoded")
+    return out
+
+
 def sharded_verify(root: str, columns: list, n_hosts: int, expect_rows: int) -> float:
     """Concurrent sharded read-back: each simulated host scans its CPP-local
     shard on the columnar batch path; asserts the shards partition the
@@ -118,6 +148,10 @@ def main() -> None:
     ap.add_argument("--verify-hosts", type=int, default=0, metavar="N",
                     help="after writing, re-read via N concurrent sharded "
                          "batch scans and check the row count")
+    ap.add_argument("--where", default="", metavar="'col OP value'",
+                    help="after writing, run a predicate-pushdown scan and "
+                         "report pruned-vs-scanned block counts (OP in "
+                         "== != < <= > >= contains)")
     args = ap.parse_args()
 
     if args.kind == "crawl":
@@ -150,6 +184,8 @@ def main() -> None:
         if args.verify_hosts:
             sharded_verify(args.out, ["url", "fetchTime"], args.verify_hosts,
                            w.total_records)
+        if args.where:
+            where_report(args.out, args.where, ["url", "fetchTime"])
     else:
         from ..data.tokens import TokenCorpusWriter
 
@@ -164,6 +200,8 @@ def main() -> None:
         if args.verify_hosts:
             sharded_verify(args.out, ["n_tokens"], args.verify_hosts,
                            w.n_sequences)
+        if args.where:
+            where_report(args.out, args.where, ["n_tokens"])
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from repro.core.mapreduce import (
     fig1_map,
     fig1_map_batch,
     fig1_reduce,
+    fig1_where,
     run_job,
 )
 from repro.core.schema import MAP, STRING
@@ -113,7 +114,7 @@ def test_fig1_batch_matches_serial_with_dead_hosts(crawl):
         r = CIFReader(root, columns=["url", "metadata"])
         ids_b, open_batches = r.job_inputs(batch_size=100)
         res = run_job(ids_b, reduce_fn=fig1_reduce, n_hosts=5, dead_hosts=dead,
-                      open_split_batches=open_batches,
+                      open_split_batches=open_batches, where=fig1_where(),
                       map_batch_fn=fig1_map_batch(), n_workers=workers)
         assert res.output == serial.output
         assert res.remote_reads == 0  # CPP invariant survives stealing
@@ -341,7 +342,7 @@ def test_concurrent_run_job_stress(crawl):
         r = CIFReader(root, columns=["url", "metadata"])
         ids, open_batches = r.job_inputs(batch_size=64)
         res = run_job(ids, reduce_fn=fig1_reduce, n_hosts=6, dead_hosts={trial % 6},
-                      open_split_batches=open_batches,
+                      open_split_batches=open_batches, where=fig1_where(),
                       map_batch_fn=fig1_map_batch(), n_workers=5)
         if base is None:
             base = res.output
