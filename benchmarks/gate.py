@@ -10,15 +10,71 @@ runs never write them).  Every benchmark already asserts its own
 correctness gates (serial == concurrent, where= == post-hoc filter, ...)
 before timing anything, which is what makes this a functional check and
 not just a crash test.
+
+It also runs two zero-cost documentation drift guards (no network, no
+I/O beyond a few file reads):
+
+  * every public module in ``src/repro/core/`` must be mentioned in
+    ``docs/ARCHITECTURE.md`` (the module-by-module paper map cannot
+    silently fall behind a new subsystem);
+  * every fixture format version checked in under ``tests/fixtures/``
+    must be documented in ``docs/FORMAT.md`` (the wire spec and the
+    compatibility fixtures evolve in lockstep or not at all).
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# fixture filename prefix -> the version heading FORMAT.md must carry
+_FIXTURE_VERSIONS = {"prepr": "Version 1", "v2": "Version 2",
+                     "v3": "Version 3", "v31": "Version 3.1"}
+
+
+def check_docs_drift() -> None:
+    """Assert docs/ARCHITECTURE.md names every core module and
+    docs/FORMAT.md documents every fixture version."""
+    arch_path = os.path.join(REPO_ROOT, "docs", "ARCHITECTURE.md")
+    with open(arch_path) as f:
+        arch = f.read()
+    core = os.path.join(REPO_ROOT, "src", "repro", "core")
+    missing = [
+        name for name in sorted(os.listdir(core))
+        if name.endswith(".py") and not name.startswith("_")
+        and f"`{name}`" not in arch and name not in arch
+    ]
+    assert not missing, (
+        f"docs/ARCHITECTURE.md does not mention core modules {missing} — "
+        "add them to the paper map"
+    )
+
+    fmt_path = os.path.join(REPO_ROOT, "docs", "FORMAT.md")
+    with open(fmt_path) as f:
+        fmt = f.read()
+    fixtures = os.path.join(REPO_ROOT, "tests", "fixtures")
+    prefixes = sorted({
+        name.split("_")[0] for name in os.listdir(fixtures)
+        if name.endswith(".col")
+    })
+    undocumented = [
+        f"{p} ({_FIXTURE_VERSIONS[p]})" for p in prefixes
+        if _FIXTURE_VERSIONS[p] not in fmt
+    ]
+    assert not undocumented, (
+        f"docs/FORMAT.md lacks sections for fixture versions "
+        f"{undocumented} — the wire spec must cover every checked-in "
+        "fixture"
+    )
+    print(f"# docs drift guard passed ({len(prefixes)} fixture versions, "
+          f"ARCHITECTURE.md covers core/)")
 
 
 def main() -> None:
     t0 = time.perf_counter()
+    check_docs_drift()
     sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
     from .run import main as run_main
 

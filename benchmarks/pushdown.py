@@ -12,21 +12,28 @@ column — at selectivities from 0.001% to 100%:
   * the lazy path cannot prune: it decodes every predicate cell no matter
     how selective the predicate is.
 
-Two predicate columns, swept identically:
+Three predicate columns, swept identically:
 
   * ``fetchTime`` — sorted ints (delta-bitpacked; decode is a vectorized
     cumsum, so the lazy path's full decode is cheap — this measures the
     pruning floor);
-  * ``key`` — sorted strings (the paper's fig-1-shaped predicate column;
-    ragged decode + compare per cell is what full scans actually pay).
+  * ``key`` — sorted strings, an ORDERING predicate (``<``), the paper's
+    fig-1-shaped case: the where= path prunes via zone maps and evaluates
+    survivors with the vectorized lexicographic compare, while the lazy
+    path decodes and compares every cell;
+  * ``attrs`` — a DCSL map column whose sentinel key appears only in the
+    selected prefix (ISSUE 5): the where= path prunes splits/blocks on
+    key PRESENCE and single-key-fetches the survivors via ``lookup_many``,
+    while the lazy path must decode every full map cell and probe it in
+    Python — the paper's §6 lazy-materialization claim, measured.
 
-Expected shape: >= 5x at high selectivity on the string column (almost
-everything pruned vs a full ragged decode), approaching parity at 100%
+Expected shape: >= 5x at high selectivity on the string and map columns
+(almost everything pruned vs a full decode), approaching parity at 100%
 (nothing prunable; both decode everything).
 
 Emits ``BENCH_pushdown.json``:
 
-    {"results": {"int-<sel>" | "str-<sel>":
+    {"results": {"int-<sel>" | "str-<sel>" | "map-<sel>":
                      {"where_s": .., "lazy_s": .., "speedup": ..,
                       "rows": .., "blocks_pruned": ..}},
      "floor": {"high_selectivity_speedup": .., "full_scan_ratio": ..}}
@@ -42,8 +49,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import CIFReader, COFWriter, Schema, col, run_job
-from repro.core.schema import INT64, STRING
+from repro.core import CIFReader, COFWriter, ColumnFormat, Schema, col, run_job
+from repro.core.schema import INT64, MAP, STRING
 
 from .common import Csv, timeit
 
@@ -61,27 +68,41 @@ def _key(i: int) -> str:
 
 def _dataset(root: str, n: int) -> None:
     """Sorted fetchTime + sorted string key (the two clustered predicate
-    columns) + a payload string per row.  Splits are sized so per-split
-    overheads (open + _meta.json parse) don't drown the decode work being
-    compared — the paper's splits are 64MB+, not a few KB."""
+    columns) + a DCSL map column + a payload string per row.  The map cell
+    of row i carries sentinel key ``s<j>`` for every selectivity j whose
+    cut is above i (so key presence is clustered exactly like the sorted
+    columns), plus always-present filler entries that make full-cell
+    decode cost realistic.  Splits are sized so per-split overheads (open
+    + _meta.json parse) don't drown the decode work being compared — the
+    paper's splits are 64MB+, not a few KB."""
     rnd = random.Random(0)
     schema = Schema([("fetchTime", INT64()), ("key", STRING()),
-                     ("payload", STRING())])
-    w = COFWriter(root, schema, split_records=max(2048, n // 24))
+                     ("attrs", MAP(STRING())), ("payload", STRING())])
+    cuts = [max(1, int(n * sel)) for sel in SELECTIVITIES]
+    w = COFWriter(root, schema, formats={"attrs": ColumnFormat("dcsl")},
+                  split_records=max(2048, n // 24))
     for i in range(n):
-        w.append({"fetchTime": T0 + i, "key": _key(i),
+        attrs = {f"s{j}": "1" for j, cut in enumerate(cuts) if i < cut}
+        attrs["content-type"] = ["text/html", "application/pdf",
+                                 "image/png"][i % 3]
+        attrs["status"] = "200"
+        w.append({"fetchTime": T0 + i, "key": _key(i), "attrs": attrs,
                   "payload": f"p{i:08d}-" + "x" * rnd.randint(10, 40)})
     w.close()
 
 
-def _pred(kind: str, cut: int):
-    return (col("fetchTime") < T0 + cut) if kind == "int" else (
-        col("key") < _key(cut))
+def _pred(kind: str, cut: int, sel_idx: int = 0):
+    if kind == "int":
+        return col("fetchTime") < T0 + cut
+    if kind == "str":
+        return col("key") < _key(cut)
+    return col("attrs")[f"s{sel_idx}"] == "1"  # map-key presence predicate
 
 
-def _where_job(root: str, kind: str, cut: int):
+def _where_job(root: str, kind: str, cut: int, sel_idx: int = 0):
     reader = CIFReader(root, columns=["payload"])
-    ids, ob = reader.job_inputs(batch_size=2048, where=_pred(kind, cut))
+    ids, ob = reader.job_inputs(batch_size=2048,
+                                where=_pred(kind, cut, sel_idx))
 
     def map_batch(split_id, cols, emit):
         emit(None, (cols.n_rows, sum(len(v) for v in cols["payload"])))
@@ -91,16 +112,25 @@ def _where_job(root: str, kind: str, cut: int):
     return res, reader.stats
 
 
-def _lazy_job(root: str, kind: str, cut: int):
+def _lazy_job(root: str, kind: str, cut: int, sel_idx: int = 0):
     """The PR-2 pattern: full predicate-column decode + mask + sparse fetch
-    (no pruning possible — every predicate cell decodes)."""
-    pcol = "fetchTime" if kind == "int" else "key"
-    pred = _pred(kind, cut)
+    (no pruning possible — every predicate cell decodes; for the map
+    column that means materializing every full map cell and probing it in
+    Python, exactly the cost §6's lazy construction avoids)."""
+    pcol = {"int": "fetchTime", "str": "key", "map": "attrs"}[kind]
+    pred = _pred(kind, cut, sel_idx)
     reader = CIFReader(root, columns=[pcol, "payload"])
     ids, ob = reader.job_inputs(batch_size=2048)
 
     def map_batch(split_id, cols, emit):
-        mask = pred.mask(lambda name: cols[name], cols.n_rows)
+        if kind == "map":
+            key = f"s{sel_idx}"
+            mask = np.fromiter(
+                (isinstance(c, dict) and c.get(key) == "1"
+                 for c in cols["attrs"]),
+                bool, count=cols.n_rows)
+        else:
+            mask = pred.mask(lambda name: cols[name], cols.n_rows)
         rows = np.flatnonzero(mask)
         if len(rows):
             vals = cols.sparse("payload", rows)
@@ -123,15 +153,15 @@ def pushdown(csv: Csv, n: int = 200_000, write_json: bool = True) -> None:
     root = os.path.join(tmp, "d")
     try:
         _dataset(root, n)
-        for kind in ("int", "str"):
-            for sel in SELECTIVITIES:
+        for kind in ("int", "str", "map"):
+            for sel_idx, sel in enumerate(SELECTIVITIES):
                 cut = max(1, int(n * sel))
                 expect_rows = min(n, cut)
 
                 t_w, (res_w, st_w) = timeit(
-                    lambda: _where_job(root, kind, cut), repeat=3)
+                    lambda: _where_job(root, kind, cut, sel_idx), repeat=3)
                 t_l, (res_l, st_l) = timeit(
-                    lambda: _lazy_job(root, kind, cut), repeat=3)
+                    lambda: _lazy_job(root, kind, cut, sel_idx), repeat=3)
                 assert _total(res_w) == _total(res_l), "paths diverged"
                 assert _total(res_w)[0] == expect_rows
                 speedup = t_l / t_w
@@ -160,12 +190,14 @@ def pushdown(csv: Csv, n: int = 200_000, write_json: bool = True) -> None:
         "results": results,
         "floor": {
             # acceptance shape: big win when almost everything prunes
-            # (the string column is the paper-shaped case), no collapse
-            # when nothing does
+            # (the string and map columns are the paper-shaped cases), no
+            # collapse when nothing does
             "high_selectivity_speedup": results[
                 f"str-{SELECTIVITIES[0]:g}"]["speedup"],
             "int_high_selectivity_speedup": results[
                 f"int-{SELECTIVITIES[0]:g}"]["speedup"],
+            "map_high_selectivity_speedup": results[
+                f"map-{SELECTIVITIES[0]:g}"]["speedup"],
             "full_scan_ratio": results["str-1"]["speedup"],
         },
     }

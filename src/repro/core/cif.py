@@ -26,16 +26,20 @@ hosts' shards covers every split exactly once, and every read is CPP-local.
 from concurrent threads against one reader.
 
 Predicate pushdown (``where=``): ``scan_batches(where=p)`` and
-``job_inputs(where=p)`` plan each split against the v3 zone maps / dict
-pages / bloom filters (``SplitReader.plan``), decode ONLY the predicate
-columns of the surviving block ranges, evaluate ``p`` exactly and
-vectorized, and late-materialize the remaining projected columns for just
-the matching rows (``read_many``/DCSL ``lookup_many`` under the hood) —
-the paper's lazy record construction, automatic.  Pruning is advisory and
-the exact evaluation is final, so the emitted row set is bit-identical to
-an unpruned scan filtered post hoc; ``blocks_pruned_stats`` and
-``rows_short_circuited`` account the avoided work and are deterministic
-across serial, batch, and concurrent runs.
+``job_inputs(where=p)`` plan each split against the v3/v3.1 zone maps /
+dict pages / bloom filters / per-block stats-tags (``SplitReader.plan``),
+decode ONLY the predicate columns of the surviving block ranges, evaluate
+``p`` exactly and vectorized, and late-materialize the remaining projected
+columns for just the matching rows (``read_many``/DCSL ``lookup_many``
+under the hood) — the paper's lazy record construction, automatic.
+Map-key predicates (``col("metadata")["content-type"] == v``) prune splits
+and blocks on key PRESENCE alone and fetch only the referenced key of the
+surviving rows through the DCSL single-key path, so a non-matching map
+cell is never decoded.  Pruning is advisory and the exact evaluation is
+final, so the emitted row set is bit-identical to an unpruned scan
+filtered post hoc; ``blocks_pruned_stats`` and ``rows_short_circuited``
+account the avoided work and are deterministic across serial, batch, and
+concurrent runs.
 """
 from __future__ import annotations
 
@@ -109,13 +113,23 @@ def storage_report(root: str) -> Dict[str, Dict[str, Any]]:
                             continue
                         try:
                             cz[key] = v if cz[key] is None else pick(cz[key], v)
-                        except TypeError:  # mixed types across splits
-                            cz[key] = cz[key]
+                        except TypeError:
+                            pass  # mixed types across splits: keep the first
+                    if "keys" in z:  # map columns: key-presence coverage
+                        ks = z["keys"]
+                        cur = cz.get("keys", set())
+                        cz["keys"] = (
+                            None if ks is None or cur is None
+                            else cur | set(ks)
+                        )
     for col in report.values():
         col["ratio"] = (
             round(col["encoded_bytes"] / col["raw_bytes"], 3)
             if col["raw_bytes"] else 1.0
         )
+        ks = col["zone"].get("keys")
+        if isinstance(ks, set):
+            col["zone"]["keys"] = sorted(ks)
     return report
 
 
@@ -129,8 +143,12 @@ def format_storage_report(root: str) -> str:
         blocks = ",".join(f"{k}:{v}" for k, v in sorted(col["blocks"].items())) or "-"
         z = col["zone"]
         if z["blocks"]:
-            span = (f" [{z['min']!r}..{z['max']!r}]"
-                    if z["min"] is not None else " [no bounds]")
+            if z.get("keys") is not None:  # map column: key presence
+                span = f" keys={len(z['keys'])}"
+            elif z["min"] is not None:
+                span = f" [{z['min']!r}..{z['max']!r}]"
+            else:
+                span = " [no bounds]"
             zone = f"{z['blocks']}blk{span}" + ("+bloom" if z["bloom"] else "")
         else:
             zone = "-"
@@ -233,8 +251,9 @@ class SplitReader:
 
         Stage 1 — split pruning from ``_meta.json`` alone: each predicate
         column's persisted zone summary (exact min/max across the whole
-        split) evaluates three-valued; if any column proves no row can
-        match, the split is done WITHOUT opening a single column file.
+        split, or the exact map-key union for map columns) evaluates
+        three-valued; if any column proves no row can match, the split is
+        done WITHOUT opening a single column file.
         Stage 2 — block pruning: intersect each predicate column's
         ``ColumnFileReader.prune`` ranges (zone maps + dict pages +
         blooms).  Memoized per predicate instance and charged to the prune
@@ -248,9 +267,15 @@ class SplitReader:
         split_dead = False
         for name in pcols:
             z = self._meta_zone(name)
-            if not z or z.get("min") is None:
+            if not z:
                 continue
-            info = ColumnInfo(vmin=z["min"], vmax=z["max"])
+            keys = z.get("keys")
+            info = ColumnInfo(
+                vmin=z.get("min"), vmax=z.get("max"),
+                map_keys=frozenset(keys) if keys is not None else None,
+            )
+            if info.vmin is None and info.map_keys is None:
+                continue
             if pred.tri(lambda nm, name=name, info=info:
                         info if nm == name else None) == TRI_NONE:
                 split_dead = True
@@ -278,19 +303,62 @@ class SplitReader:
         ``[start, stop)`` and return the matching rows as a late-
         materializing ``FilteredBatchColumns`` (None when nothing matches —
         counters still advance).  Only the predicate columns are decoded
-        here; everything else waits for the map function to ask."""
+        here; everything else waits for the map function to ask.
+
+        Map-key leaves late-materialize ONLY the referenced key: a DCSL map
+        column serves them through ``lookup_many`` (skip-pointer jumps +
+        single-entry decodes), so the full map cells of candidate rows are
+        never built.  The two exceptions decode whole cells once and derive
+        every key from them: a map column that is also PROJECTED (its
+        monotone reader must not be consumed twice over the same rows) and
+        a predicate referencing several keys of one map column.
+        """
         sub = clip_ranges(self.plan(pred).ranges, start, stop)
         if not sub:
             return None
         ids = np.concatenate([np.arange(a, b, dtype=np.int64) for a, b in sub])
-        pcols = sorted(pred.columns())
-        decoded = {c: self.readers[c].read_many(ids.tolist()) for c in pcols}
-        mask = pred.mask(lambda name: decoded[name], len(ids))
+        ids_list = ids.tolist()
+        # group leaf refs by base column: {name: set of keys (None = whole)}
+        by_col: Dict[str, set] = {}
+        for leaf in pred.iter_leaves():
+            by_col.setdefault(leaf.name, set()).add(leaf.key)
+        decoded: Dict[Any, Any] = {}  # leaf.ref -> decoded values
+        full_cells: Dict[str, Any] = {}  # map columns decoded whole
+        for name in sorted(by_col):
+            keys = by_col[name]
+            if keys == {None}:  # plain column leaf (the pre-map-key path)
+                decoded[name] = self.readers[name].read_many(ids_list)
+                continue
+            # whole-column + map-key refs cannot mix on one column:
+            # validate_predicate rejects whole-map comparisons up front
+            assert None not in keys, name
+            if len(keys) > 1 or name in self.out_columns:
+                cells = self.readers[name].read_many(ids_list)
+                full_cells[name] = cells
+                for key in keys:
+                    decoded[(name, key)] = [
+                        c.get(key) if isinstance(c, dict) else None
+                        for c in cells
+                    ]
+            else:
+                (key,) = keys
+                decoded[(name, key)] = self.readers[name].lookup_many(
+                    ids_list, key
+                )
+        mask = pred.mask(lambda ref: decoded[ref], len(ids))
         n_match = int(mask.sum())
         self.rows_short_circuited += len(ids) - n_match
         if n_match == 0:
             return None
-        pred_vals = {c: _compress(v, mask) for c, v in decoded.items()}
+        # pre-decoded values the filtered span can serve from cache: whole
+        # predicate columns, plus projected map columns decoded above
+        pred_vals = {
+            name: _compress(decoded[name], mask)
+            for name in by_col if by_col[name] == {None}
+        }
+        for name, cells in full_cells.items():
+            if name in self.out_columns:
+                pred_vals[name] = _compress(cells, mask)
         return FilteredBatchColumns(self, ids[mask], pred_vals, start, stop)
 
     def iter_lazy(self) -> Iterator[LazyRecord]:
@@ -675,16 +743,29 @@ class CIFReader:
 
         return sorted(split_map), open_split_batches
 
-    def job_records(self) -> Tuple[List[int], Callable[[int], Iterator[Tuple[Any, Record]]]]:
+    def job_records(
+        self, *, where: Optional[Expr] = None
+    ) -> Tuple[List[int], Callable[[int], Iterator[Tuple[Any, Record]]]]:
         """``(split_ids, open_split)`` for record-at-a-time ``run_job`` —
-        the compatibility path (lazy or eager per this reader's flag)."""
+        the compatibility path (lazy or eager per this reader's flag).
+
+        ``where=`` filters records here, with the predicate VALIDATED
+        against this reader's schema (``run_job(where=)`` also accepts a
+        record-mode predicate but is schema-agnostic, so a type-mismatched
+        literal there silently matches nothing — prefer passing it here).
+        Lazy records decode only the referenced columns; map-key leaves
+        ride the single-key ``get_map_value`` path.
+        """
+        if where is not None:
+            self._where_columns(where)  # validates against the schema
         split_map = dict(self.splits())
 
         def open_split(split_id: int) -> Iterator[Tuple[Any, Record]]:
             sr = self.open_split(split_map[split_id])
             it = sr.iter_lazy() if self.lazy else sr.iter_eager()
             for rec in it:
-                yield None, rec
+                if where is None or where.matches_record(rec):
+                    yield None, rec
             self.absorb_stats(sr)
 
         return sorted(split_map), open_split

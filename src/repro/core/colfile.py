@@ -51,6 +51,16 @@ Dict-encoded plain-kind blocks additionally resolve ``eq``/``isin``/
 ``contains`` leaves against their dictionary page, so whole blocks are
 skipped when no dictionary entry matches — this works even on v2 files
 that predate zone maps.
+
+v3.1 (complex types + per-block filters): the stats page grows trailing
+sections a v3 reader ignores bit-compatibly (the header version byte stays
+3).  Each zone-map block gains a *stats-tag* — a per-block bloom filter or
+the exact distinct value set for string/bytes blocks (so COMPRESSED cblock
+blocks prune ``eq``/``isin``/``contains`` without an inflate call, HAIL
+style), or the exact key-presence set for map columns (so a map-key
+predicate ``col("metadata")["content-type"] == v`` prunes every block that
+lacks the key, and surviving rows fetch just that key via the DCSL
+single-key path).  See stats.py for the wire format.
 """
 from __future__ import annotations
 
@@ -236,14 +246,24 @@ class ColumnFileWriter:
                         self._zwin = []
                 self._slw.append(v)
         elif k == "dcsl":
+            # stream key-presence windows on the DICT_BLOCK grid, so the
+            # stats-page blocks line up with the per-block key dictionaries
+            if self._zone.enabled:
+                self._zwin.append(v)
+                if len(self._zwin) == DICT_BLOCK:
+                    self._zone.add_block(self._zflushed, self._zwin)
+                    self._zflushed += len(self._zwin)
+                    self._zwin = []
             self._dcsl.append(v)
         self.n += 1
 
     def _flush_block(self) -> None:
-        self._zone.add_block(self._zflushed, self._pending)
-        self._zflushed += len(self._pending)
         name, payload, raw = encode_block(self.typ, self._pending, self.fmt.encoding)
         codec = self.fmt.codec if self.fmt.kind == "cblock" else "none"
+        # the collector sees the CHOSEN encoding: a plain-kind dict block's
+        # value set is peekable in-band, so it skips the redundant stats-tag
+        self._zone.add_block(self._zflushed, self._pending, enc=name, codec=codec)
+        self._zflushed += len(self._pending)
         self._body += compress_block(
             codec, len(self._pending), bytes([ENC_TAGS[name]]) + payload
         )
@@ -330,6 +350,10 @@ class ColumnFileWriter:
                 self._zwin = []
         elif k == "dcsl":
             body, encoding = self._dcsl.finish(), "plain"
+            if self._zwin:  # streaming key-presence remainder
+                self._zone.add_block(self._zflushed, self._zwin)
+                self._zflushed += len(self._zwin)
+                self._zwin = []
             self._stats = {"blocks": {"dcsl": 1}, "raw_bytes": len(body),
                            "encoded_bytes": len(body)}
         out = bytearray()
@@ -384,13 +408,17 @@ class ColumnFileReader:
         self.typ = typ
         self.counters = ReadCounters()
         self.file_bytes = len(raw)
-        # v3 footer: advisory zone maps + optional bloom.  Parsing moves NO
-        # counter — stats are metadata, not data read.
+        # v3 footer: advisory zone maps + optional bloom + v3.1 per-block
+        # stats-tags.  Parsing moves NO counter — stats are metadata, not
+        # data read.
         self.zone_maps: Optional[List[ZoneMap]] = None
         self.bloom = None
+        self.block_extras = None  # v3.1 stats-tags (None on v3-and-older)
         soff = off + body_len
         if self.version >= 3 and soff < len(raw) and raw[soff]:
-            self.zone_maps, self.bloom = decode_stats_page(typ, raw, soff + 1)
+            self.zone_maps, self.bloom, self.block_extras = decode_stats_page(
+                typ, raw, soff + 1
+            )
         # v2+ block-structured kinds carry per-block encoding tags
         self._enc = self.version >= 2 and self.kind in ("plain", "cblock")
         self._sl_dict = self.kind == "skiplist" and self.encoding == "dict"
@@ -706,9 +734,20 @@ class ColumnFileReader:
         return chunks
 
     # -- predicate pushdown (advisory planning; never decodes, never counts) --
+    @property
+    def format_version(self) -> str:
+        """Human-readable format version: ``"1"``/``"2"``/``"3"``, or
+        ``"3.1"`` when the stats page carries per-block stats-tags (the
+        header version byte stays 3 — v3 readers ignore the extension)."""
+        if self.version == 3 and self.block_extras is not None:
+            return "3.1"
+        return str(self.version)
+
     def block_stats(self) -> Optional[List[ZoneMap]]:
         """The file's zone maps, or None when it carries none (v1/v2 files,
-        unsupported kinds).  Pure metadata access: no counter moves."""
+        unsupported kinds).  Map columns carry bounds-free zone maps (the
+        block grid for key-presence pruning).  Pure metadata access: no
+        counter moves."""
         return self.zone_maps
 
     def _plan_blocks(self) -> Optional[List[Tuple[int, int]]]:
@@ -783,19 +822,36 @@ class ColumnFileReader:
             def info(name: str, zm=zm, bi=bi) -> Optional[ColumnInfo]:
                 if not known(name):
                     return None
-                # the block grid follows the zone maps when both exist, and
-                # the writer emits those per encoded block — indices align
-                values = (
-                    self._dict_block_values(bi)
-                    if self.zone_maps is None or self._enc else None
-                )
+                # v3.1 per-block stats-tag: exact value set / per-block
+                # bloom / map-key presence — all readable without touching
+                # (let alone decompressing) the block itself
+                values = blk_bloom = map_keys = None
+                extra = self.block_extras[bi] if self.block_extras else None
+                if extra is not None:
+                    tag, payload = extra
+                    if tag == "values":
+                        values = payload
+                    elif tag == "bloom":
+                        blk_bloom = payload
+                    elif tag == "keys":
+                        map_keys = payload
+                if values is None:
+                    # the block grid follows the zone maps when both exist,
+                    # and the writer emits those per encoded block — indices
+                    # align
+                    values = (
+                        self._dict_block_values(bi)
+                        if self.zone_maps is None or self._enc else None
+                    )
                 ci = ColumnInfo(
                     vmin=zm.vmin if zm else None,
                     vmax=zm.vmax if zm else None,
                     values=values,
-                    bloom=self.bloom,
+                    bloom=blk_bloom if blk_bloom is not None else self.bloom,
+                    map_keys=map_keys,
                 )
-                if ci.vmin is None and ci.values is None and ci.bloom is None:
+                if (ci.vmin is None and ci.values is None and ci.bloom is None
+                        and ci.map_keys is None):
                     return None
                 return ci
 

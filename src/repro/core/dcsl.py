@@ -10,6 +10,16 @@ lower (Table 1: CIF-DCSL is the fastest format in the paper).
 
 The dictionary block sits at record indices ``i % DICT_BLOCK == 0``, aligned
 with the top skip level so every monotone skip visits it (see skiplist.py).
+
+This module is also the execution engine under MAP-KEY PREDICATE PUSHDOWN
+(``col("metadata")["content-type"] == v``): ``filter_span`` fetches the
+referenced key of every candidate row through ``lookup_many`` — skip-
+pointer jumps between groups, lockstep-lane walks within them, and a
+single-entry decode per cell — so predicate evaluation over a map column
+never materializes a map cell.  The stats side lines up with the same
+geometry: the v3.1 key-presence stats-tags are collected on the
+``DICT_BLOCK`` grid (one tag per key-dictionary block), so a pruned block
+is exactly a skipped dictionary block.
 """
 from __future__ import annotations
 

@@ -18,12 +18,15 @@ Two map-side execution modes share one scheduler:
 
 Predicate pushdown: ``run_job(..., where=pred)`` filters the map inputs
 with a typed predicate tree (``core.predicate.col``).  In batch mode every
-span is routed through ``BatchColumns.filter`` — zone-map/dict-page block
-pruning, vectorized evaluation of only the predicate columns, and
-late materialization of everything else for just the matching rows — so
-map functions receive pre-filtered ``FilteredBatchColumns``.  In record
-mode the predicate evaluates per record on lazy records (only the
-referenced columns decode).  Either way the surviving row set is
+span is routed through ``BatchColumns.filter`` — zone-map/dict-page/
+stats-tag block pruning, vectorized evaluation of only the predicate
+columns, and late materialization of everything else for just the matching
+rows — so map functions receive pre-filtered ``FilteredBatchColumns``.
+In record mode the predicate evaluates per record on lazy records (only
+the referenced columns decode; a map-key leaf such as
+``col("metadata")["content-type"] == v`` rides ``Record.get_map_value``,
+i.e. the DCSL single-key fast path, so even record-mode filtering never
+builds a full map cell).  Either way the surviving row set is
 bit-identical to running unfiltered and discarding non-matches.
 
 Concurrency: ``n_workers > 1`` drives the WorkQueue from a
@@ -101,7 +104,12 @@ def run_job(
     ``where=pred`` pushes a predicate into the map inputs: batch spans are
     pruned/filtered via ``BatchColumns.filter`` (map functions then see
     only matching rows, late-materialized), record-mode map functions run
-    only on records the predicate matches.
+    only on records the predicate matches.  NOTE: this function is
+    schema-agnostic, so only the batch path (whose spans carry a schema)
+    can validate predicate literals; a record-mode type-mismatched
+    literal silently matches nothing.  When a schema is available,
+    prefer ``CIFReader.job_records(where=)`` / ``job_inputs(where=)``,
+    which validate up front.
     """
     t0 = time.perf_counter()
     batch_mode = map_batch_fn is not None or open_split_batches is not None

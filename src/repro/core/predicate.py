@@ -31,6 +31,31 @@ One expression tree serves three evaluators, each at a different precision
 Supported leaves: ``==  !=  <  <=  >  >=``, ``.contains(sub)`` (substring,
 string/bytes), ``.isin(values)``; combinators ``&``, ``|``, ``~``.  ``and``
 /``or``/``not`` raise (Python cannot overload them soundly).
+
+Complex types: ``col("metadata")["content-type"] == "text/html"`` builds a
+*map-key leaf* — the same leaf classes carrying a ``key``.  A map-key leaf
+evaluates against the VALUE stored under that key per row:
+
+  * ``mask`` consumes single-key value sequences (what the read path
+    fetches via the DCSL ``lookup_many`` fast path, so the full map cell
+    is never decoded);
+  * ``tri`` consults the per-block *key presence* summary from the v3.1
+    stats page (``ColumnInfo.map_keys``): a block whose key set provably
+    lacks the key can contain no matching row;
+  * ``matches_record`` rides ``Record.get_map_value`` (the lazy-record
+    single-key path).
+
+Absent keys match NOTHING: every leaf — including ``!=`` — evaluates False
+on a row whose map lacks the key (there is no NULL tri-logic in this
+format; ``~leaf`` therefore *matches* rows without the key).  All three
+evaluators and the planner agree on this, which is what keeps map-key
+pruning sound: "key absent from block" implies "leaf matches no row".
+
+String ordering (``<  <=  >  >=`` on string/bytes columns) compares UTF-8
+bytes lexicographically — identical to Python's ``str``/``bytes`` ordering
+because UTF-8 preserves code-point order — and evaluates vectorized via
+``RaggedColumn.cmp`` (one prefix-chunk uint8 compare per batch, not one
+Python compare per cell).
 """
 from __future__ import annotations
 
@@ -79,18 +104,25 @@ class ColumnInfo:
     decoding it — any subset of:
 
     ``vmin``/``vmax``  zone map bounds (inclusive; None = unknown)
-    ``values``         the EXACT distinct value set (a dictionary page:
-                       list / np array / RaggedColumn of distinct values)
-    ``bloom``          membership filter (``may_contain(value)``), file level
+    ``values``         the EXACT distinct value set (a dictionary page or a
+                       v3.1 footer value set: list / np array / RaggedColumn
+                       of distinct values)
+    ``bloom``          membership filter (``may_contain(value)``) — per
+                       block (v3.1) or file level (v3)
+    ``map_keys``       map columns only: the EXACT set of keys appearing in
+                       the region (None = unknown).  Sound for pruning
+                       because absent keys match nothing (module contract).
     """
 
-    __slots__ = ("vmin", "vmax", "values", "bloom")
+    __slots__ = ("vmin", "vmax", "values", "bloom", "map_keys")
 
-    def __init__(self, vmin=None, vmax=None, values=None, bloom=None):
+    def __init__(self, vmin=None, vmax=None, values=None, bloom=None,
+                 map_keys=None):
         self.vmin = vmin
         self.vmax = vmax
         self.values = values
         self.bloom = bloom
+        self.map_keys = map_keys
 
     def has_minmax(self) -> bool:
         return self.vmin is not None and self.vmax is not None
@@ -121,6 +153,9 @@ class Expr:
     """Base class for predicate nodes (immutable trees)."""
 
     def columns(self) -> FrozenSet[str]:
+        """The BASE column names the tree references (a map-key leaf
+        contributes its map column's name — this is what the read path
+        opens)."""
         raise NotImplementedError
 
     def iter_leaves(self):
@@ -128,8 +163,11 @@ class Expr:
         yield self
 
     def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
-        """Exact boolean mask over ``n`` rows; ``getcol(name)`` returns the
-        decoded column batch (array / RaggedColumn / list)."""
+        """Exact boolean mask over ``n`` rows; ``getcol(ref)`` returns the
+        decoded column batch (array / RaggedColumn / list) for a plain leaf
+        (``ref`` is the column name) or the per-row single-key value
+        sequence — ``None`` where the key is absent — for a map-key leaf
+        (``ref`` is the ``(column, key)`` tuple)."""
         raise NotImplementedError
 
     def tri(self, info: InfoFn) -> int:
@@ -138,10 +176,22 @@ class Expr:
         raise NotImplementedError
 
     def matches_record(self, rec: Any) -> bool:
-        """Scalar evaluation for one record (``rec.get(name)`` access)."""
-        return self._match(lambda name: rec.get(name))
+        """Scalar evaluation for one record (``rec.get(name)`` access;
+        map-key leaves ride ``rec.get_map_value(name, key)`` — the lazy
+        record's DCSL single-key fast path — when available)."""
 
-    def _match(self, getval: Callable[[str], Any]) -> bool:
+        def getval(ref):
+            if isinstance(ref, tuple):
+                name, key = ref
+                if hasattr(rec, "get_map_value"):
+                    return rec.get_map_value(name, key)
+                m = rec.get(name)
+                return m.get(key) if isinstance(m, dict) else None
+            return rec.get(ref)
+
+        return self._match(getval)
+
+    def _match(self, getval: Callable[[Any], Any]) -> bool:
         raise NotImplementedError
 
     # -- combinators ---------------------------------------------------------
@@ -172,42 +222,89 @@ def _as_bool_array(m: Any, n: int) -> np.ndarray:
     return arr
 
 
-class Comparison(Expr):
-    """``col OP literal`` for OP in ==, !=, <, <=, >, >=."""
+class Leaf(Expr):
+    """Shared single-column leaf machinery: a leaf references either a whole
+    column (``key is None``) or one key of a map column (a *map-key leaf*,
+    built by ``col("m")["k"]``)."""
 
-    __slots__ = ("name", "op", "value")
+    __slots__ = ()
 
-    def __init__(self, name: str, op: str, value: Any):
+    @property
+    def ref(self) -> Any:
+        """The access token this leaf evaluates over: the column name, or
+        the ``(column, key)`` tuple for a map-key leaf — exactly the key
+        the read path uses to hand ``mask()`` its decoded values."""
+        return self.name if self.key is None else (self.name, self.key)
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset((self.name,))
+
+    def _tri_mapkey(self, info: InfoFn) -> int:
+        """Planner verdict for a map-key leaf: only the per-block key
+        presence summary applies (zone maps / dictionary pages / blooms
+        describe whole map cells, not one key's values).  Sound because
+        absent keys match nothing."""
+        ci = info(self.name)
+        if ci is None or ci.map_keys is None:
+            return TRI_SOME
+        return TRI_NONE if self.key not in ci.map_keys else TRI_SOME
+
+    def _col_repr(self) -> str:
+        if self.key is None:
+            return f"col({self.name!r})"
+        return f"col({self.name!r})[{self.key!r}]"
+
+
+class Comparison(Leaf):
+    """``col OP literal`` for OP in ==, !=, <, <=, >, >=.
+
+    String/bytes ordering is UTF-8 byte order (== Python's own ordering)
+    and evaluates vectorized over ``RaggedColumn`` batches via ``cmp``.
+    """
+
+    __slots__ = ("name", "op", "value", "key")
+
+    def __init__(self, name: str, op: str, value: Any, key: Optional[str] = None):
         assert op in _OPS, op
-        assert not isinstance(value, (Expr, Col)), (
+        assert not isinstance(value, (Expr, Col, MapKeyCol)), (
             "column-vs-column compare unsupported"
         )
         self.name = name
         self.op = op
         self.value = value
-
-    def columns(self) -> FrozenSet[str]:
-        return frozenset((self.name,))
+        self.key = key
 
     def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
-        vals = getcol(self.name)
+        vals = getcol(self.ref)
         op, v = self.op, self.value
         if isinstance(vals, RaggedColumn):
             if op == "==":
                 return vals.eq(v)
             if op == "!=":
                 return ~vals.eq(v)
-            # ordering on strings/bytes: per-cell fallback (rare)
-            f = _PY_OP[op]
-            return np.fromiter(
-                (f(*_align_text(c, v)) for c in vals), bool, count=len(vals)
-            )
+            # ordering: one vectorized three-way compare, dict-code pushdown
+            # included (DictRaggedColumn compares once per DISTINCT value)
+            c = vals.cmp(v)
+            if op == "<":
+                return c < 0
+            if op == "<=":
+                return c <= 0
+            if op == ">":
+                return c > 0
+            return c >= 0
         if isinstance(vals, np.ndarray):
             return _as_bool_array(_PY_OP[op](vals, v), n)
         f = _PY_OP[op]
+        if self.key is not None:  # absent keys (None) match nothing
+            return np.fromiter(
+                (c is not None and bool(f(*_align_text(c, v))) for c in vals),
+                bool, count=n,
+            )
         return np.fromiter((f(*_align_text(c, v)) for c in vals), bool, count=n)
 
     def tri(self, info: InfoFn) -> int:
+        if self.key is not None:
+            return self._tri_mapkey(info)
         ci = info(self.name)
         if ci is None:
             return TRI_SOME
@@ -243,38 +340,49 @@ class Comparison(Expr):
                 verdict = TRI_NONE
         return verdict
 
-    def _match(self, getval: Callable[[str], Any]) -> bool:
-        cell, v = _align_text(getval(self.name), self.value)
+    def _match(self, getval: Callable[[Any], Any]) -> bool:
+        cell = getval(self.ref)
+        if self.key is not None and cell is None:
+            return False  # absent key matches nothing
+        cell, v = _align_text(cell, self.value)
         return bool(_PY_OP[self.op](cell, v))
 
     def __repr__(self) -> str:
-        return f"(col({self.name!r}) {self.op} {self.value!r})"
+        return f"({self._col_repr()} {self.op} {self.value!r})"
 
 
-class Contains(Expr):
-    """Substring containment over string/bytes columns."""
+class Contains(Leaf):
+    """Substring containment over string/bytes columns (or string/bytes map
+    values for a map-key leaf)."""
 
-    __slots__ = ("name", "pattern")
+    __slots__ = ("name", "pattern", "key")
 
-    def __init__(self, name: str, pattern: Any):
+    def __init__(self, name: str, pattern: Any, key: Optional[str] = None):
         assert isinstance(pattern, (str, bytes)), pattern
         self.name = name
         self.pattern = pattern
-
-    def columns(self) -> FrozenSet[str]:
-        return frozenset((self.name,))
+        self.key = key
 
     def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
-        vals = getcol(self.name)
+        vals = getcol(self.ref)
         if hasattr(vals, "contains"):
             return vals.contains(self.pattern)
         p = self.pattern
+        if self.key is not None:  # absent keys (None) match nothing
+            return np.fromiter(
+                (c is not None and (lambda c_, p_: p_ in c_)(*_align_text(c, p))
+                 for c in vals),
+                bool, count=n,
+            )
         return np.fromiter(
             ((lambda c_, p_: p_ in c_)(*_align_text(c, p)) for c in vals),
             bool, count=n,
         )
 
     def tri(self, info: InfoFn) -> int:
+        if self.key is not None:
+            # presence first: an empty pattern still needs the key present
+            return self._tri_mapkey(info)
         ci = info(self.name)
         if ci is None:
             return TRI_SOME
@@ -284,28 +392,29 @@ class Contains(Expr):
             return _tri_from_values(ci.values, self)
         return TRI_SOME  # min/max and blooms cannot bound substrings
 
-    def _match(self, getval: Callable[[str], Any]) -> bool:
-        cell, p = _align_text(getval(self.name), self.pattern)
+    def _match(self, getval: Callable[[Any], Any]) -> bool:
+        cell = getval(self.ref)
+        if self.key is not None and cell is None:
+            return False
+        cell, p = _align_text(cell, self.pattern)
         return p in cell
 
     def __repr__(self) -> str:
-        return f"col({self.name!r}).contains({self.pattern!r})"
+        return f"{self._col_repr()}.contains({self.pattern!r})"
 
 
-class IsIn(Expr):
+class IsIn(Leaf):
     """Membership in a small literal set."""
 
-    __slots__ = ("name", "choices")
+    __slots__ = ("name", "choices", "key")
 
-    def __init__(self, name: str, choices: Sequence[Any]):
+    def __init__(self, name: str, choices: Sequence[Any], key: Optional[str] = None):
         self.name = name
         self.choices = tuple(choices)
-
-    def columns(self) -> FrozenSet[str]:
-        return frozenset((self.name,))
+        self.key = key
 
     def mask(self, getcol: GetColFn, n: int) -> np.ndarray:
-        vals = getcol(self.name)
+        vals = getcol(self.ref)
         if isinstance(vals, RaggedColumn):
             out = np.zeros(len(vals), bool)
             for v in self.choices:  # one vectorized eq per CHOICE, not per cell
@@ -313,12 +422,20 @@ class IsIn(Expr):
             return out
         if isinstance(vals, np.ndarray):
             return np.isin(vals, np.asarray(self.choices))
+        if self.key is not None:  # absent keys (None) match nothing
+            return np.fromiter(
+                (c is not None and any(_eq_aligned(c, v) for v in self.choices)
+                 for c in vals),
+                bool, count=n,
+            )
         return np.fromiter(
             (any(_eq_aligned(c, v) for v in self.choices) for c in vals),
             bool, count=n,
         )
 
     def tri(self, info: InfoFn) -> int:
+        if self.key is not None:
+            return self._tri_mapkey(info)
         ci = info(self.name)
         if ci is None:
             return TRI_SOME
@@ -340,12 +457,14 @@ class IsIn(Expr):
                 verdict = TRI_NONE
         return verdict
 
-    def _match(self, getval: Callable[[str], Any]) -> bool:
-        cell = getval(self.name)
+    def _match(self, getval: Callable[[Any], Any]) -> bool:
+        cell = getval(self.ref)
+        if self.key is not None and cell is None:
+            return False
         return any(_eq_aligned(cell, v) for v in self.choices)
 
     def __repr__(self) -> str:
-        return f"col({self.name!r}).isin({list(self.choices)!r})"
+        return f"{self._col_repr()}.isin({list(self.choices)!r})"
 
 
 class And(Expr):
@@ -438,13 +557,19 @@ class Col:
     """Column reference — the expression-tree entry point (``col("url")``).
 
     Comparison operators build leaves, so ``col("fetchTime") >= 12`` is an
-    ``Expr``; a bare Col is NOT a predicate.
+    ``Expr``; a bare Col is NOT a predicate.  Indexing a map column
+    (``col("metadata")["content-type"]``) returns a ``MapKeyCol`` whose
+    operators build map-key leaves.
     """
 
     __slots__ = ("name",)
 
     def __init__(self, name: str):
         self.name = name
+
+    def __getitem__(self, key: str) -> "MapKeyCol":
+        assert isinstance(key, str), f"map keys are strings, got {key!r}"
+        return MapKeyCol(self.name, key)
 
     def __eq__(self, other) -> Expr:  # type: ignore[override]
         return Comparison(self.name, "==", other)
@@ -476,7 +601,52 @@ class Col:
         return f"col({self.name!r})"
 
 
+class MapKeyCol:
+    """One key of a map column (``col("metadata")["content-type"]``) — the
+    map-key analog of ``Col``.  Operators build the SAME leaf classes with
+    ``key`` set, so the whole evaluator/planner surface works unchanged;
+    the read path recognizes ``key`` and fetches values via the DCSL
+    single-key path instead of decoding whole map cells."""
+
+    __slots__ = ("name", "key")
+
+    def __init__(self, name: str, key: str):
+        self.name = name
+        self.key = key
+
+    def __eq__(self, other) -> Expr:  # type: ignore[override]
+        return Comparison(self.name, "==", other, key=self.key)
+
+    def __ne__(self, other) -> Expr:  # type: ignore[override]
+        return Comparison(self.name, "!=", other, key=self.key)
+
+    def __lt__(self, other) -> Expr:
+        return Comparison(self.name, "<", other, key=self.key)
+
+    def __le__(self, other) -> Expr:
+        return Comparison(self.name, "<=", other, key=self.key)
+
+    def __gt__(self, other) -> Expr:
+        return Comparison(self.name, ">", other, key=self.key)
+
+    def __ge__(self, other) -> Expr:
+        return Comparison(self.name, ">=", other, key=self.key)
+
+    def contains(self, pattern) -> Expr:
+        return Contains(self.name, pattern, key=self.key)
+
+    def isin(self, choices: Sequence[Any]) -> Expr:
+        return IsIn(self.name, choices, key=self.key)
+
+    __hash__ = None  # == builds an Expr, exactly like Col
+
+    def __repr__(self) -> str:
+        return f"col({self.name!r})[{self.key!r}]"
+
+
 def col(name: str) -> Col:
+    """Build a column reference for predicate trees (the public entry
+    point): ``col("fetchTime") >= t0``, ``col("metadata")["lang"] == "jp"``."""
     return Col(name)
 
 
@@ -501,22 +671,33 @@ def _literal_ok(kind: str, v: Any) -> bool:
 
 def validate_predicate(pred: Expr, type_of: Callable[[str], Any]) -> None:
     """Check every leaf's literal against the column's schema kind.
-    ``type_of(name)`` returns the ColumnType (raising on unknown names)."""
+    ``type_of(name)`` returns the ColumnType (raising on unknown names).
+    Map-key leaves validate against the map's VALUE type (and require the
+    base column to actually be a map)."""
     for leaf in pred.iter_leaves():
-        kind = type_of(leaf.name).kind
+        typ = type_of(leaf.name)
+        what = repr(leaf.name)
+        if leaf.key is not None:
+            assert typ.kind == "map", (
+                f"col({leaf.name!r})[{leaf.key!r}]: map-key predicates need "
+                f"a map column, {leaf.name!r} is {typ.kind}"
+            )
+            typ = typ.value
+            what = f"{leaf.name!r}[{leaf.key!r}]"
+        kind = typ.kind
         if isinstance(leaf, Contains):
             assert kind in _TEXT_KINDS, (
-                f"contains() needs a string/bytes column; {leaf.name!r} is {kind}"
+                f"contains() needs string/bytes values; {what} is {kind}"
             )
             continue
         assert kind in _NUMERIC_KINDS + _TEXT_KINDS + ("bool",), (
-            f"predicates are unsupported on {kind} column {leaf.name!r}"
+            f"predicates are unsupported on {kind} column {what}"
         )
         lits = leaf.choices if isinstance(leaf, IsIn) else (leaf.value,)
         for v in lits:
             assert _literal_ok(kind, v), (
                 f"predicate literal {v!r} does not match {kind} column "
-                f"{leaf.name!r} (typo'd number? missing quotes?)"
+                f"{what} (typo'd number? missing quotes?)"
             )
 
 
@@ -527,10 +708,16 @@ def validate_predicate(pred: Expr, type_of: Callable[[str], Any]) -> None:
 
 def parse_predicate(text: str) -> Expr:
     """Parse ``"column OP value"`` (OP in == != < <= > >= contains) into an
-    expression tree — deliberately minimal; Python code composes the rest."""
+    expression tree — deliberately minimal; Python code composes the rest.
+    ``column`` may be a map-key reference ``name[key]``
+    (e.g. ``"metadata[content-type] == 'text/html'"``)."""
     parts = text.split(None, 2)
     assert len(parts) == 3, f"expected 'col OP value', got {text!r}"
     name, op, raw = parts
+    key = None
+    if name.endswith("]") and "[" in name:
+        name, _, key = name[:-1].partition("[")
+        assert name and key, f"bad map-key reference {parts[0]!r}"
     if (raw.startswith("'") and raw.endswith("'")) or (
         raw.startswith('"') and raw.endswith('"')
     ):
@@ -544,6 +731,6 @@ def parse_predicate(text: str) -> Expr:
             except ValueError:
                 value = raw
     if op == "contains":
-        return Col(name).contains(str(value))
+        return Contains(name, str(value), key=key)
     assert op in _OPS, f"unknown operator {op!r}"
-    return Comparison(name, op, value)
+    return Comparison(name, op, value, key=key)

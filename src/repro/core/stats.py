@@ -1,26 +1,52 @@
-"""Per-block zone maps + split-level bloom filters (the stats half of the
-predicate pushdown subsystem; ``predicate.py`` holds the expression trees).
+"""Per-block zone maps, per-block stats-tags, and bloom filters (the stats
+half of the predicate pushdown subsystem; ``predicate.py`` holds the
+expression trees).
 
 A version-3 column file carries a *stats page* after its body: one zone map
 per value block — ``first`` row index, row ``count``, ``n_null`` (reserved;
 the format has no nulls today), exact ``n_distinct``, and inclusive
 ``vmin``/``vmax`` bounds — plus, for string/bytes columns of modest
 cardinality, one bloom filter over the whole file (one file = one split's
-column, so this is the split-level membership test HAIL builds per block).
+column, so this is a split-level membership test).
 
-Everything here is ADVISORY metadata: a planner may use it to prove a block
-matches nothing (prune) or everything, but exact predicate evaluation always
-has the final word.  Readers that ignore the page lose only speed; v1/v2
-files carry no page and plan as "scan everything".
+The v3.1 page EXTENDS v3 with self-describing trailing sections that v3
+readers ignore bit-compatibly (they stop parsing after the file-level bloom
+slot; the header version byte stays 3).  The one section defined today is
+the per-block *stats-tag* stream, indexed 1:1 with the zone-map / encoded-
+block grid (the cblock framing's block sequence), so a compressed block can
+be pruned WITHOUT decompression — HAIL's per-block filter metadata:
+
+  * tag ``bloom``   — a per-block bloom filter (``eq``/``isin`` pruning on
+                      high-cardinality string/bytes blocks);
+  * tag ``values``  — the block's EXACT distinct value set (``eq``/``isin``
+                      /``contains`` pruning, same power as peeking a dict
+                      page but without inflating the block);
+  * tag ``keys``    — map columns: the EXACT set of map keys appearing in
+                      the block.  Combined with the "absent keys match
+                      nothing" contract in ``predicate.py``, a map-key
+                      predicate prunes every block that lacks its key —
+                      the complex-type analog of a zone map.
+
+**The planner contract (read it here, rely on it everywhere):** everything
+in this module is ADVISORY metadata.  A planner may use it to prove a block
+matches nothing (prune it) or everything, but the exact evaluators
+(``Expr.mask`` / ``matches_record``) always have the final word on the
+surviving rows — so a ``where=`` scan is bit-identical to an unpruned scan
+filtered post hoc, no matter which stats are present.  Readers that ignore
+any of this lose only speed; v1/v2 files carry no page and plan as "scan
+everything".
 
 Zone maps are collected for the scalar kinds (ints, floats, bool, string,
-bytes).  Oversized values (> ``MINMAX_MAX_BYTES``) drop the min/max of
-their block rather than bloat the footer — Parquet truncates bounds
-instead, but truncation needs increment-last-byte semantics to stay sound
-and buys nothing at this repo's scale.  Bloom filters are skipped when the
-file's distinct-value set exceeds ``BLOOM_MAX_DISTINCT`` or any value
-exceeds ``BLOOM_MAX_VALUE_BYTES`` (hashing megabyte blobs costs more write
-time than membership pruning ever returns).
+bytes) and — bounds-free, presence-only — for map columns.  Oversized
+values (> ``MINMAX_MAX_BYTES``) drop the min/max of their block rather than
+bloat the footer — Parquet truncates bounds instead, but truncation needs
+increment-last-byte semantics to stay sound and buys nothing at this repo's
+scale.  File-level bloom filters are skipped when the file's distinct-value
+set exceeds ``BLOOM_MAX_DISTINCT`` or any value exceeds
+``BLOOM_MAX_VALUE_BYTES`` (hashing megabyte blobs costs more write time
+than membership pruning ever returns); the per-block caps
+(``BLOCK_VALUES_MAX``, ``BLOCK_BLOOM_MAX_DISTINCT``, ``MAP_KEYS_MAX``)
+bound the stats-tag stream the same way.
 """
 from __future__ import annotations
 
@@ -51,12 +77,30 @@ BLOOM_MAX_VALUE_BYTES = 256  # don't hash large payload cells (content blobs)
 BLOOM_BITS_PER_KEY = 10
 BLOOM_K = 7
 
+# v3.1 per-block stats-tag caps
+BLOCK_VALUES_MAX = 16  # store the exact value set only while it stays tiny
+BLOCK_BLOOM_MAX_DISTINCT = 1024  # per-block bloom cap (~1.3KB at 10 bits/key)
+MAP_KEYS_MAX = 64  # per-block map-key presence cap (keys are a small universe)
+
 _FLAG_MINMAX = 1
+
+# v3.1 trailing-section ids + per-block stats tags
+SEC_BLOCK_STATS = 1
+TAG_NONE = 0
+TAG_BLOOM = 1
+TAG_VALUES = 2
+TAG_KEYS = 3
 
 
 @dataclass
 class ZoneMap:
-    """Statistics for one block of rows ``[first, first + count)``."""
+    """Statistics for one block of rows ``[first, first + count)``.
+
+    Bounds are inclusive and EXACT when present (``None`` means unknown,
+    never "approximately this"); ``n_distinct`` counts distinct values —
+    or, for map columns, distinct KEYS — in the block.  ``n_null`` is
+    reserved-zero (the format has no NULLs).
+    """
 
     first: int
     count: int
@@ -66,12 +110,20 @@ class ZoneMap:
     vmax: Optional[Any] = None
 
     def info(self, bloom: Optional["BloomFilter"] = None) -> ColumnInfo:
+        """This zone map as the planner-facing ``ColumnInfo`` (optionally
+        paired with a membership filter for ``eq``/``isin`` verdicts)."""
         return ColumnInfo(vmin=self.vmin, vmax=self.vmax, bloom=bloom)
 
 
 class BloomFilter:
-    """Split-level membership filter (double hashing over one blake2b
-    digest, the standard k-probe construction)."""
+    """Membership filter (double hashing over one blake2b digest, the
+    standard k-probe construction) — file-level in the v3 page, per-block
+    behind a v3.1 stats-tag.
+
+    The only guarantee is the bloom guarantee: ``may_contain`` never
+    returns False for a value that was inserted (no false negatives), so
+    a False verdict soundly prunes; True proves nothing.
+    """
 
     __slots__ = ("n_bits", "k", "bits")
 
@@ -93,6 +145,8 @@ class BloomFilter:
 
     @classmethod
     def from_values(cls, values: Sequence[Any]) -> "BloomFilter":
+        """Build a filter sized at ``BLOOM_BITS_PER_KEY`` bits per distinct
+        value (~1% false-positive rate at 10 bits / 7 probes)."""
         n = max(1, len(values))
         n_bits = max(64, n * BLOOM_BITS_PER_KEY)
         bits = np.zeros((n_bits + 7) // 8, np.uint8)
@@ -103,6 +157,9 @@ class BloomFilter:
         return bf
 
     def may_contain(self, value: Any) -> bool:
+        """False = provably absent (prune); True = no verdict.  Probes
+        that cannot hash (non-string values against a string bloom)
+        return True — unknown, never unsound."""
         try:
             probes = self._probes(value)
         except (TypeError, AttributeError):
@@ -115,22 +172,75 @@ class StatsCollector:
 
     One ``add_block`` call per value block (the caller defines the block
     grid — encoded blocks for plain/cblock, dict-page windows for
-    skiplist).  Unsupported column kinds collapse to an empty page.
+    skiplist, ``DICT_BLOCK`` windows for dcsl).  Unsupported column kinds
+    collapse to an empty page.
+
+    String/bytes blocks additionally collect a v3.1 per-block *stats-tag*
+    (exact value set while tiny, else a per-block bloom) unless the block
+    is a plain-kind dict block whose dictionary page the reader can already
+    peek for free (``enc``/``codec`` tell the collector).  Map columns
+    collect bounds-free zone maps plus per-block key-presence tags.
     """
 
     def __init__(self, typ: ColumnType):
         self.typ = typ
-        self.enabled = typ.kind in STATS_KINDS
+        self.enabled = typ.kind in STATS_KINDS or typ.kind == "map"
         self.zone_maps: List[ZoneMap] = []
+        # v3.1 per-block stats-tags, parallel to zone_maps:
+        # None | ("values", [..]) | ("bloom", BloomFilter) | ("keys", [..])
+        self.block_extras: List[Optional[Tuple[str, Any]]] = []
         self._bloom_values: Optional[set] = (
             set() if typ.kind in BLOOM_KINDS else None
         )
+        # split-level map-key union (None once the cap is exceeded)
+        self._key_union: Optional[set] = set() if typ.kind == "map" else None
 
-    def add_block(self, first: int, values: Sequence[Any]) -> None:
+    def _map_block(self, first: int, values: Sequence[Any]) -> None:
+        keys = set()
+        for cell in values:
+            keys.update(cell)
+        self.zone_maps.append(ZoneMap(first, len(values), 0, len(keys)))
+        self.block_extras.append(
+            ("keys", sorted(keys)) if len(keys) <= MAP_KEYS_MAX else None
+        )
+        if self._key_union is not None:
+            self._key_union.update(keys)
+            if len(self._key_union) > MAP_KEYS_MAX:
+                self._key_union = None
+
+    def _text_extra(
+        self, distinct: set, enc: Optional[str], codec: Optional[str]
+    ) -> Optional[Tuple[str, Any]]:
+        """The per-block stats-tag for a string/bytes block, or None when
+        redundant (free-peek dict page) or over the caps."""
+        if enc == "dict" and codec in (None, "none"):
+            return None  # the reader peeks the in-band dictionary for free
+        ordered = sorted(distinct, key=_raw)
+        if len(ordered) <= BLOCK_VALUES_MAX and all(
+            len(_raw(v)) <= MINMAX_MAX_BYTES for v in ordered
+        ):
+            return ("values", ordered)
+        if len(ordered) <= BLOCK_BLOOM_MAX_DISTINCT and all(
+            len(_raw(v)) <= BLOOM_MAX_VALUE_BYTES for v in ordered
+        ):
+            return ("bloom", BloomFilter.from_values(ordered))
+        return None
+
+    def add_block(
+        self,
+        first: int,
+        values: Sequence[Any],
+        enc: Optional[str] = None,
+        codec: Optional[str] = None,
+    ) -> None:
         if not self.enabled or not len(values):
             return
         k = self.typ.kind
+        if k == "map":
+            self._map_block(first, values)
+            return
         n = len(values)
+        extra: Optional[Tuple[str, Any]] = None
         if k in ("int32", "int64"):
             arr = np.asarray(values, np.int64)
             vmin, vmax = int(arr.min()), int(arr.max())
@@ -143,6 +253,18 @@ class StatsCollector:
             else:
                 vmin, vmax = float(arr.min()), float(arr.max())
                 n_distinct = len(np.unique(arr))
+                if k == "float32":
+                    # cells round-trip through float32 but predicate
+                    # literals arrive as float64, and NumPy evaluates the
+                    # exact mask at float32 precision — a literal that is
+                    # NOT the stored bound can still round to it.  Widen
+                    # each bound by one float32 ULP so every literal whose
+                    # float32 rounding lands inside the block stays inside
+                    # the (advisory) bounds; widening only weakens pruning,
+                    # never soundness.
+                    f32 = np.float32
+                    vmin = float(np.nextafter(f32(vmin), f32(-np.inf)))
+                    vmax = float(np.nextafter(f32(vmax), f32(np.inf)))
         elif k == "bool":
             arr = np.asarray(values, bool)
             vmin, vmax = bool(arr.min()), bool(arr.max())
@@ -154,6 +276,7 @@ class StatsCollector:
             vmin, vmax = min(distinct), max(distinct)
             if len(_raw(vmax)) > MINMAX_MAX_BYTES or len(_raw(vmin)) > MINMAX_MAX_BYTES:
                 vmin = vmax = None
+            extra = self._text_extra(distinct, enc, codec)
             bv = self._bloom_values
             if bv is not None:
                 if any(len(_raw(v)) > BLOOM_MAX_VALUE_BYTES for v in distinct):
@@ -163,13 +286,15 @@ class StatsCollector:
                     if len(bv) > BLOOM_MAX_DISTINCT:
                         self._bloom_values = None
         self.zone_maps.append(ZoneMap(first, n, 0, int(n_distinct), vmin, vmax))
+        self.block_extras.append(extra)
 
     def finish(self) -> bytes:
         """Serialize the stats page (empty bytes when nothing collected)."""
         bloom = None
         if self._bloom_values:
             bloom = BloomFilter.from_values(sorted(self._bloom_values, key=_raw))
-        return encode_stats_page(self.typ, self.zone_maps, bloom)
+        return encode_stats_page(self.typ, self.zone_maps, bloom,
+                                 self.block_extras)
 
     def summary(self) -> Optional[dict]:
         """JSON-safe zone coverage for ``_meta.json``: blocks with stats
@@ -181,18 +306,28 @@ class StatsCollector:
         prune rows it shouldn't.  Bytes values (not JSON-representable
         losslessly-and-comparably) and oversized strings report None: the
         file-footer zone maps still cover them once the file is open.
+
+        Map columns report ``keys`` — the EXACT key union of the whole
+        split, or None past ``MAP_KEYS_MAX`` — with the same contract: a
+        map-key predicate whose key is missing from the union prunes the
+        split without opening the column file.
         """
         if not self.zone_maps:
             return None
         mins = [z.vmin for z in self.zone_maps if z.vmin is not None]
         maxs = [z.vmax for z in self.zone_maps if z.vmax is not None]
         full = len(mins) == len(self.zone_maps)  # bounds need every block
-        return {
+        out = {
             "blocks": len(self.zone_maps),
             "min": _meta_bound(min(mins)) if full and mins else None,
             "max": _meta_bound(max(maxs)) if full and maxs else None,
             "bloom": bool(self._bloom_values),
         }
+        if self.typ.kind == "map":
+            out["keys"] = (
+                sorted(self._key_union) if self._key_union is not None else None
+            )
+        return out
 
 
 def _raw(v: Any) -> bytes:
@@ -212,19 +347,111 @@ def _meta_bound(v: Any) -> Any:
 # ---------------------------------------------------------------------------
 # stats page wire format (lives after the column-file body, v3 footer):
 #
-#   page   := [uvarint n_blocks] block* [u8 has_bloom] bloom?
+#   page   := [uvarint n_blocks] block* [u8 has_bloom] bloom? ext?
 #   block  := [uvarint first][uvarint count][uvarint n_null]
 #             [uvarint n_distinct][u8 flags]  (+ [min cell][max cell] if
 #             flags & _FLAG_MINMAX, encoded with the column's own cell codec)
 #   bloom  := [uvarint n_bits][u8 k][ceil(n_bits/8) raw bytes]
+#
+# v3.1 extension (trailing bytes a v3 reader never looks at — the header
+# version byte stays 3, so old files and old readers are both untouched):
+#
+#   ext     := [u8 n_sections] section*
+#   section := [u8 sec_id][uvarint payload_len][payload]   (unknown ids skip)
+#   SEC_BLOCK_STATS payload := one stats-tag per zone-map block, in order:
+#     [u8 TAG_NONE]                                    no per-block stats
+#     [u8 TAG_BLOOM][uvarint n_bits][u8 k][raw bits]   per-block bloom
+#     [u8 TAG_VALUES][uvarint V][V cells]              exact value set
+#     [u8 TAG_KEYS][uvarint K][K * (uvarint len, utf8)] map-key presence
 # ---------------------------------------------------------------------------
+
+BlockExtra = Optional[Tuple[str, Any]]
+
+
+def _encode_bloom(out: bytearray, bloom: BloomFilter) -> None:
+    write_uvarint(out, bloom.n_bits)
+    out.append(bloom.k)
+    out += bloom.bits.tobytes()
+
+
+def _decode_bloom(data: bytes, off: int) -> Tuple[BloomFilter, int]:
+    n_bits, off = read_uvarint(data, off)
+    k = data[off]
+    off += 1
+    nbytes = (n_bits + 7) // 8
+    bits = np.frombuffer(data, np.uint8, nbytes, off).copy()
+    return BloomFilter(n_bits, k, bits), off + nbytes
+
+
+def _encode_block_stats(typ: ColumnType, extras: List[BlockExtra]) -> bytes:
+    out = bytearray()
+    for extra in extras:
+        if extra is None:
+            out.append(TAG_NONE)
+            continue
+        tag, payload = extra
+        if tag == "bloom":
+            out.append(TAG_BLOOM)
+            _encode_bloom(out, payload)
+        elif tag == "values":
+            out.append(TAG_VALUES)
+            write_uvarint(out, len(payload))
+            for v in payload:
+                encode_cell(typ, v, out)
+        elif tag == "keys":
+            out.append(TAG_KEYS)
+            write_uvarint(out, len(payload))
+            for key in payload:
+                raw = key.encode("utf-8")
+                write_uvarint(out, len(raw))
+                out += raw
+        else:
+            raise AssertionError(tag)
+    return bytes(out)
+
+
+def _decode_block_stats(
+    typ: ColumnType, data: bytes, off: int, n_blocks: int
+) -> List[BlockExtra]:
+    cell_typ = typ.value if typ.kind == "map" else typ
+    extras: List[BlockExtra] = []
+    for _ in range(n_blocks):
+        tag = data[off]
+        off += 1
+        if tag == TAG_NONE:
+            extras.append(None)
+        elif tag == TAG_BLOOM:
+            bf, off = _decode_bloom(data, off)
+            extras.append(("bloom", bf))
+        elif tag == TAG_VALUES:
+            nv, off = read_uvarint(data, off)
+            vals = []
+            for _ in range(nv):
+                v, off = decode_cell(cell_typ, data, off)
+                vals.append(v)
+            extras.append(("values", vals))
+        elif tag == TAG_KEYS:
+            nk, off = read_uvarint(data, off)
+            keys = []
+            for _ in range(nk):
+                klen, off = read_uvarint(data, off)
+                keys.append(data[off : off + klen].decode("utf-8"))
+                off += klen
+            extras.append(("keys", frozenset(keys)))
+        else:
+            raise ValueError(f"unknown block stats-tag {tag}")
+    return extras
 
 
 def encode_stats_page(
-    typ: ColumnType, zone_maps: List[ZoneMap], bloom: Optional[BloomFilter]
+    typ: ColumnType,
+    zone_maps: List[ZoneMap],
+    bloom: Optional[BloomFilter],
+    block_extras: Optional[List[BlockExtra]] = None,
 ) -> bytes:
     if not zone_maps:
         return b""
+    stats_typ = typ.value if typ.kind == "map" else typ
     out = bytearray()
     write_uvarint(out, len(zone_maps))
     for z in zone_maps:
@@ -235,21 +462,36 @@ def encode_stats_page(
         has = z.vmin is not None and z.vmax is not None
         out.append(_FLAG_MINMAX if has else 0)
         if has:
-            encode_cell(typ, z.vmin, out)
-            encode_cell(typ, z.vmax, out)
+            encode_cell(stats_typ, z.vmin, out)
+            encode_cell(stats_typ, z.vmax, out)
     if bloom is not None:
         out.append(1)
-        write_uvarint(out, bloom.n_bits)
-        out.append(bloom.k)
-        out += bloom.bits.tobytes()
+        _encode_bloom(out, bloom)
     else:
         out.append(0)
+    # v3.1 ext: emitted only when some block actually carries a stats-tag,
+    # so files without per-block stats stay byte-identical to v3 output
+    if block_extras is not None and any(e is not None for e in block_extras):
+        assert len(block_extras) == len(zone_maps), "extras must tile blocks"
+        out.append(1)  # n_sections
+        payload = _encode_block_stats(stats_typ, block_extras)
+        out.append(SEC_BLOCK_STATS)
+        write_uvarint(out, len(payload))
+        out += payload
     return bytes(out)
 
 
 def decode_stats_page(
     typ: ColumnType, data: bytes, off: int
-) -> Tuple[List[ZoneMap], Optional[BloomFilter]]:
+) -> Tuple[List[ZoneMap], Optional[BloomFilter], Optional[List[BlockExtra]]]:
+    """Parse a stats page -> ``(zone_maps, file_bloom, block_extras)``.
+
+    ``block_extras`` is None when the page has no v3.1 extension (plain v3
+    files); otherwise one entry per zone-map block.  Unknown trailing
+    section ids are skipped by their length — the forward-compatibility
+    contract of the v3.1 framing.
+    """
+    stats_typ = typ.value if typ.kind == "map" else typ
     n_blocks, off = read_uvarint(data, off)
     zone_maps: List[ZoneMap] = []
     for _ in range(n_blocks):
@@ -261,19 +503,26 @@ def decode_stats_page(
         off += 1
         vmin = vmax = None
         if flags & _FLAG_MINMAX:
-            vmin, off = decode_cell(typ, data, off)
-            vmax, off = decode_cell(typ, data, off)
+            vmin, off = decode_cell(stats_typ, data, off)
+            vmax, off = decode_cell(stats_typ, data, off)
         zone_maps.append(ZoneMap(first, count, n_null, n_distinct, vmin, vmax))
     bloom = None
     if data[off]:
+        bloom, off = _decode_bloom(data, off + 1)
+    else:
         off += 1
-        n_bits, off = read_uvarint(data, off)
-        k = data[off]
+    # a v3 reader stops here; the v3.1 extension is whatever follows
+    extras: Optional[List[BlockExtra]] = None
+    if off < len(data):
+        n_sections = data[off]
         off += 1
-        nbytes = (n_bits + 7) // 8
-        bits = np.frombuffer(data, np.uint8, nbytes, off).copy()
-        bloom = BloomFilter(n_bits, k, bits)
-    return zone_maps, bloom
+        for _ in range(n_sections):
+            sec_id = data[off]
+            plen, poff = read_uvarint(data, off + 1)
+            if sec_id == SEC_BLOCK_STATS:
+                extras = _decode_block_stats(typ, data, poff, n_blocks)
+            off = poff + plen
+    return zone_maps, bloom, extras
 
 
 def merge_zone_maps(zone_maps: Sequence[ZoneMap]) -> Optional[ZoneMap]:
@@ -317,6 +566,9 @@ class PruneResult:
 def intersect_ranges(
     a: List[Tuple[int, int]], b: List[Tuple[int, int]]
 ) -> List[Tuple[int, int]]:
+    """Intersection of two sorted disjoint range lists (linear merge) —
+    how the planner combines per-column prune verdicts: a row survives
+    only if EVERY predicate column's stats kept it."""
     out: List[Tuple[int, int]] = []
     i = j = 0
     while i < len(a) and j < len(b):
@@ -334,6 +586,8 @@ def intersect_ranges(
 def clip_ranges(
     ranges: List[Tuple[int, int]], start: int, stop: int
 ) -> List[Tuple[int, int]]:
+    """Restrict a range list to the window ``[start, stop)`` (how a span
+    consults the split-level plan)."""
     out = []
     for a, b in ranges:
         lo, hi = max(a, start), min(b, stop)
@@ -343,4 +597,5 @@ def clip_ranges(
 
 
 def ranges_rows(ranges: List[Tuple[int, int]]) -> int:
+    """Total rows covered by a half-open range list."""
     return sum(b - a for a, b in ranges)

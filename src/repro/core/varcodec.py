@@ -366,6 +366,64 @@ class RaggedColumn:
             mask[idx] = (rows == np.frombuffer(pat, np.uint8)).all(axis=1)
         return mask
 
+    _CMP_CHUNK_ELEMS = 1 << 22  # bound the (rows x pattern) gather to ~8MB
+
+    def cmp(self, value: Union[str, bytes]) -> np.ndarray:
+        """Vectorized three-way lexicographic compare of every cell against
+        ``value`` -> int8 array of -1 / 0 / +1 (cell <, ==, > value).
+
+        Comparison is on UTF-8 bytes, which for string columns equals
+        Python's own ``str`` ordering (UTF-8 preserves code-point order) —
+        so ordering predicates agree cell-for-cell with a per-cell Python
+        loop (property-tested in tests/test_property.py).
+
+        One prefix-chunk uint8 compare: gather the first ``len(value)``
+        bytes of every cell into a (rows, L) matrix (positions past a
+        cell's end padded with -1, which is below every real byte, so a
+        proper prefix sorts first), find each row's first mismatch column,
+        and read the verdict off that byte pair; rows with no mismatch
+        tie-break on lengths.  Python work is O(1) per CHUNK of rows, not
+        per cell.
+        """
+        pat = value.encode("utf-8") if isinstance(value, str) else bytes(value)
+        n = len(self)
+        out = np.empty(n, np.int8)
+        if n == 0:
+            return out
+        L = len(pat)
+        if L == 0:  # only the empty cell equals the empty pattern
+            return np.sign(self.lengths).astype(np.int8)
+        buf = np.frombuffer(self.buffer, np.uint8)
+        if len(buf) == 0:  # every cell empty: all proper prefixes of pat
+            out[:] = -1
+            return out
+        p = np.frombuffer(pat, np.uint8).astype(np.int16)
+        step = max(1, self._CMP_CHUNK_ELEMS // L)
+        for a in range(0, n, step):
+            b = min(n, a + step)
+            starts = self.starts[a:b]
+            lengths = self.lengths[a:b]
+            pos = np.arange(L)
+            idx = starts[:, None] + pos
+            valid = pos[None, :] < lengths[:, None]
+            rows = np.where(
+                valid,
+                buf[np.minimum(idx, len(buf) - 1)].astype(np.int16),
+                np.int16(-1),
+            )
+            neq = rows != p
+            mismatch = neq.any(axis=1)
+            first = np.argmax(neq, axis=1)
+            byte_verdict = np.sign(
+                rows[np.arange(b - a), first] - p[first]
+            ).astype(np.int8)
+            # no mismatch => the first L bytes exist and equal the pattern
+            # (the -1 pad would have mismatched otherwise): longer cell wins
+            out[a:b] = np.where(
+                mismatch, byte_verdict, np.sign(lengths - L).astype(np.int8)
+            )
+        return out
+
     def contains(self, pattern: Union[str, bytes]) -> np.ndarray:
         """Boolean mask: which cells contain ``pattern`` as a substring.
 
@@ -512,6 +570,9 @@ class DictRaggedColumn(RaggedColumn):
 
     def eq(self, value) -> np.ndarray:
         return self.dictionary().eq(value)[self.codes]
+
+    def cmp(self, value) -> np.ndarray:
+        return self.dictionary().cmp(value)[self.codes]
 
     def __repr__(self) -> str:
         return (f"DictRaggedColumn(kind={self.kind!r}, n={len(self)}, "

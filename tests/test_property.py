@@ -139,3 +139,59 @@ def test_placement_total_coverage(n_splits, n_hosts, repl):
     for h in range(n_hosts):
         seen.extend(p.splits_of(h))
     assert sorted(seen) == list(range(n_splits))
+
+
+# -- vectorized lexicographic compare (ISSUE 5) -----------------------------
+# RaggedColumn.cmp must agree with Python's own bytes/str ordering for every
+# (cells, pivot) pair — including empty cells, shared prefixes, multi-byte
+# UTF-8, and the tie-break-on-length cases that a prefix compare gets wrong
+# if it stops early.
+
+
+def _ragged_from(cells, kind):
+    raws = [c.encode("utf-8") if isinstance(c, str) else c for c in cells]
+    buf = b"".join(raws)
+    lengths = np.asarray([len(r) for r in raws], np.int64)
+    starts = np.concatenate([[0], np.cumsum(lengths[:-1])]).astype(np.int64)
+    from repro.core.varcodec import RaggedColumn
+
+    return RaggedColumn(buf, starts, lengths, kind)
+
+
+@given(st.lists(st.binary(max_size=12), min_size=1, max_size=60),
+       st.binary(max_size=12))
+@settings(max_examples=200, deadline=None)
+def test_ragged_cmp_matches_bytes_ordering(cells, pivot):
+    rc = _ragged_from(cells, "bytes")
+    got = rc.cmp(pivot).tolist()
+    expect = [(-1 if c < pivot else (0 if c == pivot else 1)) for c in cells]
+    assert got == expect
+
+
+@given(st.lists(st.text(max_size=8), min_size=1, max_size=40),
+       st.text(max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_ragged_cmp_matches_str_ordering(cells, pivot):
+    # UTF-8 preserves code-point order, so byte compare == str compare
+    rc = _ragged_from(cells, "string")
+    got = rc.cmp(pivot).tolist()
+    expect = [(-1 if c < pivot else (0 if c == pivot else 1)) for c in cells]
+    assert got == expect
+
+
+@given(st.lists(st.sampled_from(["", "a", "ab", "b", "ba", "bb"]),
+                min_size=1, max_size=80),
+       st.sampled_from(["", "a", "ab", "abc", "b", "c"]))
+@settings(max_examples=100, deadline=None)
+def test_dict_ragged_cmp_broadcasts_through_codes(cells, pivot):
+    # dict views evaluate once per DISTINCT value and gather through codes
+    from repro.core.varcodec import DictRaggedColumn
+
+    uniq = sorted(set(cells))
+    codes = np.asarray([uniq.index(c) for c in cells], np.int64)
+    base = _ragged_from(uniq, "string")
+    dc = DictRaggedColumn(base.buffer, base.starts, base.lengths, codes,
+                          "string")
+    got = dc.cmp(pivot).tolist()
+    expect = [(-1 if c < pivot else (0 if c == pivot else 1)) for c in cells]
+    assert got == expect

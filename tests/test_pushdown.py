@@ -10,8 +10,15 @@
   bit-identical to an unpruned scan filtered post hoc, with
   ``blocks_pruned_stats > 0`` on selective predicates over sorted/clustered
   columns and identical counters across serial vs concurrent runs;
-* format compatibility: checked-in v1/v2/v3 fixtures — old versions read
-  bit-for-bit and plan as "scan everything" when stats are absent;
+* format compatibility: checked-in v1/v2/v3/v3.1 fixtures — old versions
+  read bit-for-bit and plan as "scan everything" when stats are absent,
+  and the v3.1 trailing sections are invisible to a v3-style parse;
+* complex-type pushdown (ISSUE 5): map-key predicates over DCSL columns
+  prune on key presence, fetch only the referenced key via ``lookup_many``
+  (counters prove non-matching map cells are never decoded), and stay
+  bit-identical to post-hoc filtering; vectorized lexicographic string
+  ordering agrees with brute force; cblock stats-tags prune compressed
+  blocks with zero inflate calls;
 * the rewritten ``fig1_map_batch`` against the pre-pushdown hand-rolled
   implementation as an equivalence oracle.
 """
@@ -199,10 +206,14 @@ def test_zone_maps_emitted_for_every_stats_kind(rnd):
             pos += z.count
         # values unchanged by the footer
         assert _as_list(r.read_range(0, len(vals))) == vals
-    # map columns carry no stats
+    # map columns carry bounds-free zone maps + key-presence stats-tags
     mvals = [{"k": "v"} for _ in range(100)]
     raw, _ = _build(MAP(STRING()), ColumnFormat("dcsl"), mvals)
-    assert ColumnFileReader(raw, MAP(STRING())).block_stats() is None
+    r = ColumnFileReader(raw, MAP(STRING()))
+    (zm,) = r.block_stats()
+    assert (zm.first, zm.count, zm.vmin, zm.vmax) == (0, 100, None, None)
+    assert r.block_extras == [("keys", frozenset({"k"}))]
+    assert r.format_version == "3.1"
 
 
 def test_prune_is_advisory_and_decodes_nothing(rnd):
@@ -309,6 +320,27 @@ PREDICATES = [
      lambda r: False, True),
     ("match-everything", col("fetchTime") >= T0,
      lambda r: True, False),
+    # map-key leaves over the dcsl metadata column (PR-5 complex types):
+    # equality/contains fetch ONLY the referenced key via lookup_many;
+    # an absent key prunes every split from _meta.json key presence alone
+    ("map-key-eq", col("metadata")["content-type"] == "text/html",
+     lambda r: r["metadata"].get("content-type") == "text/html", False),
+    ("map-key-contains", col("metadata")["server"].contains("apache/1"),
+     lambda r: "apache/1" in r["metadata"].get("server", ""), False),
+    ("map-key-absent", col("metadata")["no-such-key"] == "x",
+     lambda r: False, True),
+    ("map-key-compound", (col("metadata")["language"] == "jp")
+     & (col("fetchTime") < T0 + 1000),
+     lambda r: r["metadata"].get("language") == "jp"
+     and r["fetchTime"] < T0 + 1000, True),
+    # string ordering: vectorized lexicographic compare over RaggedColumn
+    # (and its dict/skiplist views), tie-broken on lengths
+    ("string-order-range", (col("url") >= "http://ibm.com/jp/page/50")
+     & (col("url") < "http://ibm.com/jp/page/70"),
+     lambda r: "http://ibm.com/jp/page/50" <= r["url"]
+     < "http://ibm.com/jp/page/70", False),
+    ("string-order-cblock", col("srcUrl") <= "http://example.org/src/200",
+     lambda r: r["srcUrl"] <= "http://example.org/src/200", False),
 ]
 
 
@@ -402,6 +434,251 @@ def test_where_late_materializes_only_matching_rows(crawl):
     assert sc.cells_decoded == 50 + 256
     assert sc.blocks_pruned_stats > 0
     assert sc.rows_short_circuited == 256 - 50
+
+
+def test_mapkey_where_never_decodes_nonmatching_cells(tmp_path):
+    """The ISSUE-5 acceptance: a map-key ``where=`` over a DCSL column is
+    bit-identical to a post-hoc filtered unpruned scan, and ``ReadCounters``
+    prove the non-matching map cells were never decoded — cells in blocks
+    without the key are never even visited (presence pruning), and visited
+    candidates decode ONLY the referenced key's entry (``lookup_many``), so
+    ``bytes_decoded`` stays at the single-entry level, not the map-cell
+    level."""
+    from repro.core.schema import INT64, MAP, STRING, Schema
+
+    root = str(tmp_path / "d")
+    schema = Schema([("i", INT64()), ("attrs", MAP(STRING()))])
+    n = 4000
+    records = []
+    for i in range(n):
+        m = {"pad": "x" * 40, "lang": ["en", "jp"][i % 2]}
+        if i < 1000:  # key presence clustered in the first DCSL block
+            m["hot"] = "yes" if i % 4 == 0 else "no"
+        records.append({"i": i, "attrs": m})
+    w = COFWriter(root, schema, formats={"attrs": ColumnFormat("dcsl")},
+                  split_records=2000)
+    w.append_all(records)
+    w.close()
+
+    pred = col("attrs")["hot"] == "yes"
+    expect = [r["i"] for r in records
+              if r["attrs"].get("hot") == "yes"]
+
+    r_w = CIFReader(root, columns=["i"])
+    got = []
+    for b in r_w.scan_batches(batch_size=512, where=pred):
+        got.extend(_as_list(b["i"]))
+    assert got == expect  # bit-identical to the post-hoc oracle
+
+    st = r_w.stats
+    # split 1 (rows 2000-4000) pruned wholesale from _meta.json key
+    # presence; block 1 of split 0 pruned from the v3.1 stats-tag.  Only
+    # the 1000 rows of block 0 were candidates:
+    assert st.blocks_pruned_stats == 3
+    assert st.rows_short_circuited == 1000 - len(expect)
+    # attrs: 1000 single-key lookups; i: only the matching rows decode
+    assert st.cells_decoded == 1000 + len(expect)
+    # the real §6 claim: lookups decode single entries, never whole map
+    # cells — an eager scan of just the candidate block costs ~46KB here
+    assert st.bytes_decoded < 3000
+
+    # same result through a full unpruned scan + post-hoc filter, which
+    # decodes every map cell of every row
+    r_full = CIFReader(root, columns=["i", "attrs"])
+    got_full = []
+    for b in r_full.scan_batches(batch_size=512):
+        for i, m in zip(_as_list(b["i"]), b["attrs"]):
+            if m.get("hot") == "yes":
+                got_full.append(i)
+    assert got_full == expect
+    assert r_full.stats.cells_decoded == 2 * n  # the cost we avoided
+
+
+def test_mapkey_predicate_on_projected_map_column(crawl):
+    """A predicate map column that is ALSO projected decodes whole cells
+    once (the monotone reader cannot serve lookup_many and read_many over
+    the same rows) and the filtered span serves them from cache."""
+    root, records = crawl
+    pred = col("metadata")["language"] == "jp"
+    r = CIFReader(root, columns=["url", "metadata"])
+    got = []
+    for b in r.scan_batches(batch_size=256, where=pred):
+        for u, m in zip(_as_list(b["url"]), b["metadata"]):
+            assert m["language"] == "jp"
+            got.append((u, m["content-type"]))
+    expect = [(x["url"], x["metadata"]["content-type"]) for x in records
+              if x["metadata"].get("language") == "jp"]
+    assert got == expect
+
+
+def test_mapkey_multiple_keys_one_column(crawl):
+    """Two keys of one map column in one predicate: whole cells decode
+    once, both keys derive from them, result still bit-identical."""
+    root, records = crawl
+    pred = (col("metadata")["language"] == "jp") \
+        | (col("metadata")["content-type"] == "application/pdf")
+    r = CIFReader(root, columns=["fetchTime"])
+    got = []
+    for b in r.scan_batches(batch_size=300, where=pred):
+        got.extend(_as_list(b["fetchTime"]))
+    expect = [x["fetchTime"] for x in records
+              if x["metadata"].get("language") == "jp"
+              or x["metadata"].get("content-type") == "application/pdf"]
+    assert got == expect
+
+
+def test_float32_bounds_widened_for_literal_rounding(tmp_path):
+    """float32 cells evaluate against float64 literals at float32
+    precision, so zone-map bounds are widened by one float32 ULP — a
+    literal that is not the stored bound but ROUNDS to it must not prune
+    the rows it matches (where= == post-hoc, the core contract)."""
+    from repro.core.schema import FLOAT32, Schema
+
+    root = str(tmp_path / "d")
+    w = COFWriter(root, Schema([("x", FLOAT32())]), split_records=64)
+    w.append_all([{"x": 0.2} for _ in range(100)])
+    w.close()
+    for lit in (0.200000002, 0.1999999985, 0.21):
+        for pred in (col("x") >= lit, col("x") == lit, col("x") < lit):
+            r_w = CIFReader(root, columns=["x"])
+            rows = sum(len(b["x"]) for b in r_w.scan_batches(where=pred))
+            r_o = CIFReader(root, columns=["x"])
+            oracle = sum(
+                int(pred.mask(lambda _n, b=b: b["x"], len(b["x"])).sum())
+                for b in r_o.scan_batches())
+            assert rows == oracle, (lit, repr(pred), rows, oracle)
+    # a clearly-out-of-range literal still prunes
+    r = CIFReader(root, columns=["x"])
+    assert sum(len(b["x"]) for b in r.scan_batches(where=col("x") > 0.5)) == 0
+    assert r.stats.blocks_pruned_stats > 0
+
+
+def test_job_records_where_validates_and_filters(crawl):
+    """`job_records(where=)` validates literals against the schema (the
+    schema-agnostic run_job(where=) cannot) and filters records on the
+    lazy path."""
+    root, records = crawl
+    r = CIFReader(root, columns=["url", "fetchTime"], lazy=True)
+    with pytest.raises(AssertionError, match="literal"):
+        r.job_records(where=col("fetchTime") == "13OO")
+    ids, osp = r.job_records(where=col("url").contains("ibm.com/jp"))
+    res = run_job(ids, osp, lambda k, rec, emit: emit(None, rec.get("fetchTime")),
+                  n_hosts=3)
+    expect = sorted(x["fetchTime"] for x in records if "ibm.com/jp" in x["url"])
+    assert sorted(v for _, vs in res.output for v in vs) == expect
+
+
+def test_mapkey_validation():
+    from repro.core import validate_predicate
+
+    sch = urlinfo_schema()
+    with pytest.raises(AssertionError, match="need"):
+        validate_predicate(col("url")["k"] == "x", sch.type_of)  # not a map
+    with pytest.raises(AssertionError, match="literal"):
+        validate_predicate(col("metadata")["k"] == 7, sch.type_of)
+    validate_predicate(col("metadata")["k"] == "v", sch.type_of)  # ok
+
+
+def test_parse_predicate_map_key():
+    p = parse_predicate("metadata[content-type] == 'text/html'")
+    assert repr(p) == repr(col("metadata")["content-type"] == "text/html")
+    q = parse_predicate("annotations[topic] contains t1")
+    assert repr(q) == repr(col("annotations")["topic"].contains("t1"))
+
+
+def test_vectorized_string_order_masks(rnd):
+    """Ordering masks over RaggedColumn (incl. dict views) match brute
+    force; the tie-break-on-length edge cases are covered explicitly."""
+    from repro.core.varcodec import RaggedColumn
+
+    vals = ["", "a", "aa", "ab", "abc", "b", "ba"] + [
+        "".join(rnd.choice("abc") for _ in range(rnd.randint(0, 6)))
+        for _ in range(400)
+    ]
+    raw, _ = _build(STRING(), ColumnFormat("plain"), vals)
+    r = ColumnFileReader(raw, STRING())
+    rc = r.read_range(0, len(vals))
+    for pivot in ("", "a", "ab", "abd", "b", "c", "aab"):
+        for pred, brute in [
+            (col("s") < pivot, [v < pivot for v in vals]),
+            (col("s") <= pivot, [v <= pivot for v in vals]),
+            (col("s") > pivot, [v > pivot for v in vals]),
+            (col("s") >= pivot, [v >= pivot for v in vals]),
+        ]:
+            np.testing.assert_array_equal(
+                pred.mask(lambda _: rc, len(vals)), np.array(brute),
+                err_msg=f"{pred!r}")
+
+
+def test_cblock_stats_tags_prune_without_decompression():
+    """v3.1 per-block stats-tags: compressed string blocks prune eq/isin/
+    contains with ZERO inflate calls — the pushdown residual the zone maps
+    alone could not close (min/max spans everything here)."""
+    vals = [f"type-{(i // 256) % 4}" for i in range(2048)]  # clustered
+    raw, _ = _build(STRING(), ColumnFormat("cblock", codec="zlib"), vals)
+    r = ColumnFileReader(raw, STRING())
+    assert r.format_version == "3.1"
+    assert all(e is not None for e in r.block_extras)
+    assert r.prune(col("s") == "type-9").ranges == []
+    assert r.prune(col("s").contains("ype-9")).ranges == []
+    pr = r.prune(col("s").isin(["type-0", "no"]))
+    assert pr.blocks_pruned == 6 and len(pr.ranges) == 2
+    assert r.counters.blocks_decompressed == 0  # planning inflated nothing
+    # high-cardinality blocks degrade to per-block blooms: eq still prunes
+    hi = [f"u{i:06d}" for i in range(2048)]
+    raw2, _ = _build(STRING(), ColumnFormat("cblock", codec="zlib"), hi)
+    r2 = ColumnFileReader(raw2, STRING())
+    assert [e[0] for e in r2.block_extras] == ["bloom"] * len(r2.block_extras)
+    pr2 = r2.prune(col("s") == "u000300")
+    assert pr2.blocks_pruned >= len(r2.block_extras) - 1
+    assert any(a <= 300 < b for a, b in pr2.ranges)
+    assert r2.counters.blocks_decompressed == 0
+
+
+def test_v31_footer_ignored_bit_compatibly():
+    """The v3.1 trailing sections must be invisible to everything that
+    predates them: the header version byte stays 3, the v3 page prefix is
+    byte-identical, and unknown future section ids skip cleanly by their
+    declared length."""
+    from repro.core.stats import (
+        StatsCollector, decode_stats_page, encode_stats_page,
+    )
+    from repro.core.varcodec import write_uvarint
+
+    vals = [f"t{i % 3}" for i in range(1024)]
+    raw, w = _build(STRING(), ColumnFormat("cblock", codec="zlib"), vals)
+    r = ColumnFileReader(raw, STRING())
+    assert r.version == 3 and r.format_version == "3.1"
+    assert _as_list(r.read_range(0, 1024)) == vals
+    assert [z.count for z in r.block_stats()] == [256] * 4
+
+    # the v3.1 page == the v3 page + trailing sections, byte for byte
+    zc = w._zone
+    bloom = None
+    page_v3 = encode_stats_page(STRING(), zc.zone_maps, bloom)
+    page_v31 = encode_stats_page(STRING(), zc.zone_maps, bloom,
+                                 zc.block_extras)
+    assert page_v31[: len(page_v3)] == page_v3
+    # a v3-style parse (zone maps + bloom slot) reads the prefix unchanged
+    zms, bf, extras = decode_stats_page(STRING(), page_v3, 0)
+    assert extras is None and len(zms) == 4
+    # the v3.1 parse finds the per-block stats-tags
+    zms2, _, extras2 = decode_stats_page(STRING(), page_v31, 0)
+    assert [z.count for z in zms2] == [z.count for z in zms]
+    assert extras2 is not None and all(e is not None for e in extras2)
+
+    # splice an unknown future section in front: skipped by length, the
+    # known section still parses
+    known_ext = page_v31[len(page_v3) + 1:]  # sections minus the count byte
+    future = bytearray()
+    future.append(2)  # n_sections
+    future.append(0x7F)  # unknown id
+    write_uvarint(future, 5)
+    future += b"hello"
+    future += known_ext
+    _, _, extras3 = decode_stats_page(
+        STRING(), page_v3 + bytes(future), 0)
+    assert extras3 == extras2
 
 
 def test_filter_requires_opened_predicate_columns(crawl):
@@ -550,6 +827,43 @@ def test_v3_fixture_reads_with_stats():
         assert any(a <= i < b for a, b in pr2.ranges)
 
 
+def test_v31_fixtures_read_and_prune():
+    """Checked-in v3.1 fixtures next to the v1/v2/v3 matrix: values read
+    bit-for-bit, the per-block stats-tags parse, cblock pruning needs no
+    inflate call, and map-key presence pruning lands on the DICT_BLOCK
+    grid.  Regenerating these must keep this test green — that is the
+    fixture half of the FORMAT.md drift guard."""
+    with open(os.path.join(FIXTURES, "v31_expected.json")) as f:
+        exp = json.load(f)
+    with open(os.path.join(FIXTURES, "v31_cblock_zlib_string.col"), "rb") as f:
+        straw = f.read()
+    r = ColumnFileReader(straw, STRING())
+    assert r.version == 3 and r.format_version == "3.1"
+    assert _as_list(r.read_range(0, r.n)) == exp["cblock_zlib_string"]
+    r2 = ColumnFileReader(straw, STRING())
+    tags = [e[0] if e else None for e in r2.block_extras]
+    assert "values" in tags and "bloom" in tags  # clustered head, random tail
+    assert r2.prune(col("s") == "mime/9").ranges == []
+    pr = r2.prune(col("s") == "mime/0")
+    assert pr.blocks_pruned > 0
+    for i, v in enumerate(exp["cblock_zlib_string"]):
+        if v == "mime/0":
+            assert any(a <= i < b for a, b in pr.ranges), i
+    assert r2.counters.blocks_decompressed == 0
+
+    with open(os.path.join(FIXTURES, "v31_dcsl_map.col"), "rb") as f:
+        mraw = f.read()
+    rm = ColumnFileReader(mraw, MAP(STRING()))
+    assert rm.format_version == "3.1"
+    assert rm.read_range(0, rm.n) == exp["dcsl_map"]
+    rm2 = ColumnFileReader(mraw, MAP(STRING()))
+    assert [e[0] for e in rm2.block_extras] == ["keys"] * 3
+    pr2 = rm2.prune(col("m")["content-type"] == "text/html")
+    assert pr2.ranges == [(0, 1000)]  # key present only in block 0
+    assert rm2.prune(col("m")["absent"] == "x").ranges == []
+    assert rm2.prune(col("m")["lang"] == "jp").ranges == [(0, rm2.n)]
+
+
 # -- observability satellites -------------------------------------------------
 
 
@@ -563,7 +877,11 @@ def test_storage_report_zone_coverage(tmp_path):
     assert ft["blocks"] == 2  # one block per split
     assert ft["min"] == T0 and ft["max"] == T0 + 1023
     assert rep["url"]["zone"]["bloom"] is True
-    assert rep["metadata"]["zone"]["blocks"] == 0  # map column: no stats
+    # map columns: key-presence coverage (exact split-level key union)
+    md = rep["metadata"]["zone"]
+    assert md["blocks"] == 2 and md["min"] is None
+    assert md["keys"] == ["content-type", "encoding", "language", "server",
+                          "status"]
     # content cells exceed MINMAX_MAX_BYTES: blocks counted, bounds dropped
     assert rep["content"]["zone"]["blocks"] > 0
     assert rep["content"]["zone"]["min"] is None
