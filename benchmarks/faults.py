@@ -1,0 +1,154 @@
+"""faults — checksum overhead on the clean path + scan-engine recovery.
+
+Two claims, measured:
+
+  * **Integrity is (nearly) free.**  v3.2 files carry per-block CRC32C,
+    verified lazily on first touch — a full columnar scan with
+    verification on must cost < 2% over the same scan with verification
+    off (the blocks are already in cache lines the decode is about to
+    traverse; CRC32C itself runs at GB/s).
+  * **Recovery costs only the damaged reads.**  Under a seeded FaultPlan
+    with ~1% block corruption, a pinned primary-replica fault, and one
+    mid-job host death, a MapReduce job must return output bit-identical
+    to the clean run (serial and concurrent), re-reading only what failed;
+    the failure counters are deterministic across reruns.
+
+Emits ``BENCH_faults.json``:
+
+    {"results": {"scan_verify_off_s": .., "scan_verify_on_s": ..,
+                 "overhead_pct": .., "clean_job_s": .., "faulted_job_s": ..,
+                 "checksum_failures": .., "read_retries": ..,
+                 "replica_failovers": .., "splits_reexecuted": ..,
+                 "hosts_failed": ..}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core import (
+    CIFReader, COFWriter, ColumnFormat, FailurePolicy, FaultPlan, Placement,
+    run_job,
+)
+
+from .common import Csv, micro_records, micro_schema, timeit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_faults.json")
+
+N_SPLITS, N_HOSTS = 12, 4
+
+
+def _build(root: str, n: int) -> None:
+    w = COFWriter(root, micro_schema(),
+                  formats={"str0": ColumnFormat("cblock", codec="zlib"),
+                           "map0": ColumnFormat("dcsl")},
+                  split_records=-(-n // N_SPLITS))  # ceil: exactly N_SPLITS
+    w.append_all(micro_records(n, seed=11))
+    w.close()
+
+
+def _scan(root: str, policy=None):
+    r = CIFReader(root, columns=["str0", "int0", "map0"],
+                  failure_policy=policy)
+    total = 0
+    for batch in r.scan_batches(batch_size=512):
+        total += int(np.asarray(batch["int0"]).sum())
+    return total, r.stats
+
+
+def _sum_job(root: str, plan=None, policy=None, n_workers=1):
+    p = Placement(N_SPLITS, N_HOSTS)
+    r = CIFReader(root, columns=["int0"], fault_plan=plan,
+                  failure_policy=policy)
+    ids, ob = r.job_inputs(batch_size=512, placement=p)
+
+    def map_batch(split_id, cols, emit):
+        emit("rows", cols.n_rows)
+        emit("sum", int(np.asarray(cols["int0"]).sum()))
+
+    def red(key, vals, emit):
+        emit(key, sum(vals))
+
+    res = run_job(ids, reduce_fn=red, n_hosts=N_HOSTS, placement=p,
+                  open_split_batches=ob, map_batch_fn=map_batch,
+                  n_workers=n_workers, fault_plan=plan,
+                  failure_policy=policy, scan_stats=r.stats)
+    return res, r.stats, p
+
+
+def faults(csv: Csv, n: int = 24_000, write_json: bool = True) -> None:
+    tmp = tempfile.mkdtemp(prefix="bench-faults-")
+    try:
+        root = os.path.join(tmp, "d")
+        _build(root, n)
+
+        # -- clean-path checksum overhead --------------------------------
+        # interleave the arms: this container's run-to-run noise (~±20%)
+        # dwarfs the effect, so best-of must sample both under the same
+        # transient conditions
+        off_policy = FailurePolicy(verify=False)
+        _scan(root), _scan(root, off_policy)  # warm cache + imports
+        t_off = t_on = float("inf")
+        for _ in range(8):
+            d_off, (sum_off, _) = timeit(lambda: _scan(root, off_policy))
+            d_on, (sum_on, st_on) = timeit(lambda: _scan(root))
+            t_off, t_on = min(t_off, d_off), min(t_on, d_on)
+        assert sum_on == sum_off, "verification changed scan results"
+        assert st_on.checksum_failures == 0  # clean data, clean counters
+        overhead = t_on / t_off - 1.0
+        csv.add("faults/scan_verify_off", t_off)
+        csv.add("faults/scan_verify_on", t_on,
+                f"overhead={overhead * 100:.2f}%")
+        assert overhead < 0.02, (
+            f"lazy CRC32C verification costs {overhead * 100:.2f}% on a "
+            f"clean scan (budget: 2%)"
+        )
+
+        # -- recovery under corruption + mid-job host death ---------------
+        t_clean, (base, base_stats, p) = timeit(lambda: _sum_job(root))
+        plan = FaultPlan(
+            seed=5,
+            corrupt_rate=0.01,  # ~1% of (host, split, column, block) copies
+            corrupt_blocks=frozenset({(p.primary(1), 1, "int0", 0)}),
+            fail_at={p.primary(0): 1},  # dies holding its first claim
+        )
+        policy = FailurePolicy()
+        t_fault, (res, stats, _) = timeit(
+            lambda: _sum_job(root, plan, policy))
+        assert res.output == base.output, "recovery changed job output"
+        assert res.hosts_failed == 1 and res.splits_reexecuted >= 1
+        assert stats.checksum_failures >= 1  # the pinned fault fired
+        res2, stats2, _ = _sum_job(root, plan, policy, n_workers=4)
+        assert res2.output == base.output
+        keys = ("checksum_failures", "read_retries", "replica_failovers",
+                "splits_reexecuted")
+        assert {k: getattr(stats, k) for k in keys} == \
+            {k: getattr(stats2, k) for k in keys}, "counters not schedule-free"
+        csv.add("faults/job_clean", t_clean)
+        csv.add("faults/job_faulted", t_fault,
+                f"retries={stats.read_retries} "
+                f"failovers={stats.replica_failovers} "
+                f"reexec={stats.splits_reexecuted}")
+
+        if write_json:
+            with open(JSON_PATH, "w") as f:
+                json.dump({"results": {
+                    "scan_verify_off_s": t_off,
+                    "scan_verify_on_s": t_on,
+                    "overhead_pct": overhead * 100,
+                    "clean_job_s": t_clean,
+                    "faulted_job_s": t_fault,
+                    "checksum_failures": stats.checksum_failures,
+                    "read_retries": stats.read_retries,
+                    "replica_failovers": stats.replica_failovers,
+                    "splits_reexecuted": stats.splits_reexecuted,
+                    "hosts_failed": res.hosts_failed,
+                }}, f, indent=1)
+            print(f"# wrote {JSON_PATH}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

@@ -31,7 +31,8 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # fixture filename prefix -> the version heading FORMAT.md must carry
 _FIXTURE_VERSIONS = {"prepr": "Version 1", "v2": "Version 2",
-                     "v3": "Version 3", "v31": "Version 3.1"}
+                     "v3": "Version 3", "v31": "Version 3.1",
+                     "v32": "Version 3.2"}
 
 
 def check_docs_drift() -> None:

@@ -16,6 +16,18 @@ from .cif import (
 from .cof import COFWriter, add_column, split_name
 from .colfile import CBLOCK_RECORDS, ColumnFileReader, ColumnFileWriter, ColumnFormat
 from .encodings import ENCODINGS, DictPage, encode_block, plain_size
+from .errors import (
+    DEFAULT_POLICY,
+    BlockCorruptionError,
+    CorruptFileError,
+    CoverageError,
+    DeadlineExceeded,
+    FailurePolicy,
+    FailureStats,
+    InjectedIOError,
+    SplitRetryExhausted,
+)
+from .faults import FaultPlan, execution_epoch
 from .lazy import EagerRecord, LazyRecord, Record
 from .mapreduce import (
     JobResult, fig1_map, fig1_map_batch, fig1_reduce, fig1_where, run_job,
@@ -41,14 +53,20 @@ from .schema import (
 )
 
 __all__ = [
-    "ARRAY", "BOOL", "BYTES", "BatchColumns", "BloomFilter", "CBLOCK_RECORDS",
+    "ARRAY", "BOOL", "BYTES", "BatchColumns", "BlockCorruptionError",
+    "BloomFilter", "CBLOCK_RECORDS",
     "CIFReader", "COFWriter", "ColumnFileReader", "ColumnFileWriter",
-    "ColumnFormat", "ColumnType", "DictPage", "DictRaggedColumn",
+    "ColumnFormat", "ColumnType", "CorruptFileError", "CoverageError",
+    "DEFAULT_POLICY", "DeadlineExceeded", "DictPage", "DictRaggedColumn",
     "EagerRecord", "ENCODINGS", "Expr", "FLOAT32", "FLOAT64",
-    "FilteredBatchColumns", "INT32", "INT64", "JobResult", "LazyRecord",
+    "FailurePolicy", "FailureStats", "FaultPlan",
+    "FilteredBatchColumns", "INT32", "INT64", "InjectedIOError", "JobResult",
+    "LazyRecord",
     "MAP", "Placement", "PruneResult", "RECORD", "Record", "RaggedColumn",
-    "STRING", "ScanStats", "Schema", "WorkQueue", "ZoneMap", "add_column",
-    "col", "encode_block", "fig1_map", "fig1_map_batch", "fig1_reduce",
+    "STRING", "ScanStats", "Schema", "SplitRetryExhausted", "WorkQueue",
+    "ZoneMap", "add_column",
+    "col", "encode_block", "execution_epoch", "fig1_map", "fig1_map_batch",
+    "fig1_reduce",
     "fig1_where", "format_storage_report", "list_splits", "parse_predicate",
     "plain_size", "read_schema", "run_job", "split_name", "stable_partition",
     "storage_report", "urlinfo_schema", "validate_predicate",

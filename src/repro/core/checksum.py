@@ -1,0 +1,100 @@
+"""Block checksums for v3.2 column files (the integrity half of the
+fault-tolerant scan engine; ``errors.py`` defines what a mismatch raises).
+
+Algorithm: CRC32C (Castagnoli, reflected polynomial 0x1EDC6F41 — the iSCSI
+/ Parquet / HDFS checksum) when the ``google_crc32c`` backend is
+installed, else zlib's CRC-32 (polynomial 0x04C11DB7).  Files are
+self-describing — the page stores an algorithm byte — mirroring how the
+"lzo" codec carries its zstd-vs-zlib backend in-band (compression.py): a
+crc32c-written file still VERIFIES on a host without the native backend
+via the pure-Python table fallback below (slow, but correct), and a
+crc32-written file verifies everywhere.
+
+What gets summed (see FORMAT.md "Version 3.2" for the wire layout):
+
+  * one CRC per *checksum block* — the compressed-block frames (header
+    bytes included) for the block-structured kinds, or the whole body as
+    a single block for the monolithic kinds (skiplist / dcsl) — so a
+    lazily-read file verifies exactly the blocks it touches;
+  * ``meta_crc`` over the container header + stats page (the two CRC
+    fields themselves excluded), verified once at open;
+  * ``file_crc`` over every preceding byte of the file — the whole-file
+    audit used by ``verify_checksums()`` and by replica recovery to
+    accept a re-fetched copy wholesale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Union
+import zlib
+
+try:  # optional native backend (fast); the table fallback always works
+    import google_crc32c as _gcrc
+except ImportError:  # pragma: no cover - exercised only on stripped hosts
+    _gcrc = None
+
+ALGO_CRC32C = 1  # Castagnoli (google_crc32c backend, or the table below)
+ALGO_CRC32 = 2  # zlib CRC-32 (stdlib; the backend-less writer fallback)
+
+_ALGO_NAMES = {ALGO_CRC32C: "crc32c", ALGO_CRC32: "crc32"}
+
+# reflected-polynomial table for the pure-Python CRC32C fallback
+_CRC32C_POLY = 0x82F63B78
+_TABLE: List[int] = []
+
+
+def _table() -> List[int]:
+    if not _TABLE:
+        for i in range(256):
+            c = i
+            for _ in range(8):
+                c = (c >> 1) ^ _CRC32C_POLY if c & 1 else c >> 1
+            _TABLE.append(c)
+    return _TABLE
+
+
+def _crc32c_py(data: bytes) -> int:
+    t = _table()
+    c = 0xFFFFFFFF
+    for b in data:
+        c = t[(c ^ b) & 0xFF] ^ (c >> 8)
+    return c ^ 0xFFFFFFFF
+
+
+def crc_of(algo: int, data: Union[bytes, bytearray, memoryview]) -> int:
+    """CRC of ``data`` under ``algo`` (u32)."""
+    if algo == ALGO_CRC32C:
+        if _gcrc is not None:
+            return int(_gcrc.value(bytes(data)))
+        return _crc32c_py(bytes(data))
+    if algo == ALGO_CRC32:
+        return zlib.crc32(bytes(data)) & 0xFFFFFFFF
+    raise ValueError(f"unknown checksum algorithm {algo}")
+
+
+def best_algo() -> int:
+    """The algorithm new files are written with: crc32c when the fast
+    backend exists, else zlib crc32 (reading is backend-independent)."""
+    return ALGO_CRC32C if _gcrc is not None else ALGO_CRC32
+
+
+def algo_name(algo: int) -> str:
+    return _ALGO_NAMES.get(algo, f"unknown({algo})")
+
+
+@dataclass
+class ChecksumPage:
+    """Decoded ``SEC_CHECKSUMS`` stats-page section.
+
+    ``block_crcs[i]`` sums checksum block ``i``'s on-disk body bytes;
+    ``meta_crc`` sums header + stats page (CRC fields zeroed/excluded);
+    ``file_crc`` sums the whole file up to its own field.  ``fields_off``
+    is the absolute file offset of the ``meta_crc`` field — the writer
+    patches and the verifier excludes these 8 trailing bytes.
+    """
+
+    algo: int
+    block_crcs: List[int] = field(default_factory=list)
+    meta_crc: int = 0
+    file_crc: int = 0
+    fields_off: int = -1

@@ -46,6 +46,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -53,6 +54,14 @@ import numpy as np
 
 from .colfile import ColumnFileReader, ReadCounters
 from .cof import is_split_dir
+from .errors import (
+    CorruptFileError,
+    DeadlineExceeded,
+    FailurePolicy,
+    FailureStats,
+    SplitRetryExhausted,
+)
+from .faults import FaultPlan, attempt_base
 from .lazy import EagerRecord, LazyRecord, Record
 from .placement import Placement
 from .predicate import ColumnInfo, Expr, TRI_NONE, validate_predicate
@@ -72,8 +81,15 @@ def list_splits(root: str) -> List[Tuple[int, str]]:
 
 
 def read_schema(root: str) -> Schema:
-    with open(os.path.join(root, "schema.json")) as f:
-        return Schema.from_json(f.read())
+    path = os.path.join(root, "schema.json")
+    with open(path) as f:
+        text = f.read()
+    try:
+        return Schema.from_json(text)
+    except json.JSONDecodeError as e:
+        raise CorruptFileError(path, e.pos, f"unreadable schema ({e.msg})") from e
+    except (KeyError, TypeError, AssertionError) as e:
+        raise CorruptFileError(path, -1, f"malformed schema ({e})") from e
 
 
 def storage_report(root: str) -> Dict[str, Dict[str, Any]]:
@@ -179,6 +195,17 @@ class ScanStats:
     # hence bit-identical between serial, batch, and concurrent runs.
     blocks_pruned_stats: int = 0
     rows_short_circuited: int = 0
+    # failure accounting (PR 6; zero on clean runs).  The integer counters
+    # are deterministic for a given FaultPlan and bit-identical between
+    # serial and concurrent schedules (fault decisions key on the replica
+    # chain, not the executing worker).  simulated_delay_s is deterministic
+    # per split but, as a float sum, only schedule-identical up to
+    # summation order.
+    checksum_failures: int = 0  # CRC mismatches detected (incl. re-fetches)
+    read_retries: int = 0  # read attempts beyond each column's first
+    replica_failovers: int = 0  # retries served by a DIFFERENT replica host
+    splits_reexecuted: int = 0  # dead-owner steals + retry-exhaustion requeues
+    simulated_delay_s: float = 0.0
 
     def absorb(self, c: ReadCounters, file_bytes: int) -> None:
         self.bytes_io += file_bytes
@@ -188,6 +215,12 @@ class ScanStats:
         self.cells_skipped += c.cells_skipped
         self.blocks_decompressed += c.blocks_decompressed
         self.files_opened += 1
+
+    def absorb_failures(self, f: FailureStats) -> None:
+        self.checksum_failures += f.checksum_failures
+        self.read_retries += f.read_retries
+        self.replica_failovers += f.replica_failovers
+        self.simulated_delay_s += f.simulated_delay_s
 
 
 class _LazyReaders(dict):
@@ -206,7 +239,21 @@ class _LazyReaders(dict):
 
 
 class SplitReader:
-    """RecordReader for one split-directory."""
+    """RecordReader for one split-directory.
+
+    Fault tolerance (PR 6): with a ``policy`` (and optionally a
+    ``placement`` + ``split_id`` naming the replica chain, plus a
+    ``fault_plan`` injecting failures), every column-file open runs a
+    deterministic retry loop — attempt ``a`` reads from replica host
+    ``chain[a % len(chain)]``, corruption found MID-read recovers through
+    the same seam — and raises ``SplitRetryExhausted`` past the policy's
+    caps, at which point ``run_job`` re-enqueues the split.  All failure
+    accounting lands in ``self.fail`` (shared by every reader this split
+    opens, so it survives discarded open attempts) and folds into
+    ``ScanStats`` only when the split COMPLETES — an abandoned execution
+    contributes nothing, which is what keeps faulted-run stats identical
+    to the clean run's.
+    """
 
     def __init__(
         self,
@@ -215,6 +262,11 @@ class SplitReader:
         columns: Sequence[str],
         lazy_open: bool = False,
         project: Optional[Sequence[str]] = None,
+        *,
+        split_id: Optional[int] = None,
+        placement: Optional[Placement] = None,
+        fault_plan: Optional[FaultPlan] = None,
+        policy: Optional[FailurePolicy] = None,
     ):
         self.split_dir = split_dir
         self.schema = schema
@@ -224,9 +276,27 @@ class SplitReader:
         # appear in keys()/iteration, so where= and plain scans of the
         # same reader expose identical column sets.
         self.out_columns = list(project) if project is not None else self.columns
-        with open(os.path.join(split_dir, "_meta.json")) as f:
-            self.meta = json.load(f)
-        self.n_records = self.meta["n_records"]
+        self.split_id = split_id
+        self._placement = placement
+        self._fault_plan = fault_plan
+        self._policy = policy
+        self.fail = FailureStats()
+        # attempt numbers restart at epoch * ATTEMPT_STRIDE when a split is
+        # re-enqueued; captured once so every column of this execution
+        # shares the epoch it was claimed under
+        self._attempt_base = attempt_base()
+        self._attempts: Dict[str, int] = {}
+        mpath = os.path.join(split_dir, "_meta.json")
+        try:
+            with open(mpath) as f:
+                self.meta = json.load(f)
+            self.n_records = self.meta["n_records"]
+        except json.JSONDecodeError as e:
+            raise CorruptFileError(
+                mpath, e.pos, f"unreadable _meta.json ({e.msg})"
+            ) from e
+        except (KeyError, TypeError) as e:
+            raise CorruptFileError(mpath, -1, f"malformed _meta.json ({e})") from e
         # planner accounting, folded into ScanStats by finish_stats
         self.blocks_pruned_stats = 0
         self.rows_short_circuited = 0
@@ -236,11 +306,82 @@ class SplitReader:
         else:
             self.readers = {n: self._open_reader(n) for n in self.columns}
 
+    def _fetch_attempt(self, name: str, path: str) -> bytes:
+        """ONE read attempt of a column file: pick the replica host the
+        attempt number maps to, read, pass the bytes through the fault
+        plan.  Raises ``SplitRetryExhausted`` at the policy's attempt cap
+        and ``DeadlineExceeded`` when accumulated (simulated) backoff blows
+        the split's deadline.  Serves both the open-retry loop and the
+        reader's mid-read recovery seam — they share the attempt counter.
+        """
+        policy = self._policy
+        k = self._attempts.get(name, 0)
+        self._attempts[name] = k + 1
+        if policy is not None and k >= policy.max_attempts:
+            raise SplitRetryExhausted(
+                f"column {name!r} of split {self.split_id}: "
+                f"{k} attempts exhausted"
+            )
+        a = self._attempt_base + k
+        chain: Tuple[int, ...] = (0,)
+        if self._placement is not None and self.split_id is not None:
+            chain = self._placement.replicas(self.split_id)
+        host = chain[a % len(chain)]
+        if k > 0:
+            self.fail.read_retries += 1
+            if host != chain[self._attempt_base % len(chain)] and len(chain) > 1:
+                self.fail.replica_failovers += 1
+            if policy is not None:
+                d = policy.backoff_s(f"{self.split_id}:{name}", k)
+                self.fail.simulated_delay_s += d
+                if policy.real_sleep:  # pragma: no cover - opt-in only
+                    time.sleep(d)
+                if (
+                    policy.split_deadline is not None
+                    and self.fail.simulated_delay_s > policy.split_deadline
+                ):
+                    raise DeadlineExceeded(
+                        f"split {self.split_id}: retry-delay budget "
+                        f"({policy.split_deadline}s simulated) exhausted"
+                    )
+        with open(path, "rb") as f:
+            raw = f.read()
+        if self._fault_plan is not None:
+            raw = self._fault_plan.apply(
+                raw, host=host, split=self.split_id or 0, column=name,
+                attempt=a, fail=self.fail,
+            )
+        return raw
+
     def _open_reader(self, name: str) -> ColumnFileReader:
         assert name in self.columns, f"column {name!r} not opened by this split"
-        with open(os.path.join(self.split_dir, f"{name}.col"), "rb") as f:
-            raw = f.read()
-        return ColumnFileReader(raw, self.schema.type_of(name))
+        path = os.path.join(self.split_dir, f"{name}.col")
+        typ = self.schema.type_of(name)
+        if self._policy is None and self._fault_plan is None:
+            # no retry policy: plain open — still graceful typed errors and
+            # lazy verification, but corruption raises instead of recovering
+            with open(path, "rb") as f:
+                raw = f.read()
+            return ColumnFileReader(raw, typ, path=path, fail=self.fail)
+        verify = self._policy.verify if self._policy is not None else True
+
+        def fetch() -> bytes:
+            return self._fetch_attempt(name, path)
+
+        while True:
+            try:
+                raw = fetch()  # SplitRetryExhausted propagates to run_job
+            except OSError:
+                continue  # injected/real IO error: costs one attempt
+            try:
+                return ColumnFileReader(
+                    raw, typ, path=path, fail=self.fail, fetch=fetch,
+                    verify=verify,
+                )
+            except SplitRetryExhausted:
+                raise  # mid-recovery exhaustion inside the constructor
+            except (CorruptFileError, OSError):
+                continue  # damaged copy: next attempt, next replica
 
     # -- predicate planning + late materialization ---------------------------
     def _meta_zone(self, name: str) -> Optional[Dict[str, Any]]:
@@ -396,6 +537,7 @@ class SplitReader:
         stats.records_scanned += self.n_records
         stats.blocks_pruned_stats += self.blocks_pruned_stats
         stats.rows_short_circuited += self.rows_short_circuited
+        stats.absorb_failures(self.fail)
 
 
 def _compress(vals: Any, mask: np.ndarray) -> Any:
@@ -562,6 +704,9 @@ class CIFReader:
         root: str,
         columns: Optional[Sequence[str]] = None,
         lazy: bool = True,
+        *,
+        fault_plan: Optional[FaultPlan] = None,
+        failure_policy: Optional[FailurePolicy] = None,
     ):
         self.root = root
         self.schema = read_schema(root)
@@ -569,6 +714,8 @@ class CIFReader:
         for c in self.columns:
             assert c in self.schema, f"unknown column {c}"
         self.lazy = lazy
+        self.fault_plan = fault_plan
+        self.failure_policy = failure_policy
         self.stats = ScanStats()
         self._stats_lock = threading.Lock()
 
@@ -622,6 +769,9 @@ class CIFReader:
         split_dir: str,
         extra_columns: Sequence[str] = (),
         lazy_open: bool = False,
+        *,
+        split_id: Optional[int] = None,
+        placement: Optional[Placement] = None,
     ) -> SplitReader:
         cols = list(self.columns)
         for c in extra_columns:
@@ -629,7 +779,9 @@ class CIFReader:
             if c not in cols:
                 cols.append(c)
         return SplitReader(split_dir, self.schema, cols, lazy_open=lazy_open,
-                           project=self.columns)
+                           project=self.columns, split_id=split_id,
+                           placement=placement, fault_plan=self.fault_plan,
+                           policy=self.failure_policy)
 
     def _where_columns(self, where: Expr) -> List[str]:
         cols = sorted(where.columns())
@@ -651,8 +803,8 @@ class CIFReader:
         n_hosts: Optional[int] = None,
         placement: Optional[Placement] = None,
     ) -> Iterator[Record]:
-        for _, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
-            sr = self.open_split(sdir)
+        for idx, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
+            sr = self.open_split(sdir, split_id=idx, placement=placement)
             it = sr.iter_lazy() if self.lazy else sr.iter_eager()
             for rec in it:
                 yield rec
@@ -685,15 +837,16 @@ class CIFReader:
         yielded), bit-identical to filtering an unpruned scan post hoc.
         """
         if where is None:
-            for _, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
-                sr = self.open_split(sdir)
+            for idx, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
+                sr = self.open_split(sdir, split_id=idx, placement=placement)
                 for start in range(0, sr.n_records, batch_size):
                     yield sr.read_range(start, min(start + batch_size, sr.n_records))
                 self.absorb_stats(sr)
             return
         pcols = self._where_columns(where)
-        for _, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
-            sr = self.open_split(sdir, extra_columns=pcols, lazy_open=True)
+        for idx, sdir in self._scan_splits(split_ids, host, n_hosts, placement):
+            sr = self.open_split(sdir, extra_columns=pcols, lazy_open=True,
+                                 split_id=idx, placement=placement)
             plan = sr.plan(where)
             for a, b in plan.ranges:
                 for start in range(a, b, batch_size):
@@ -708,6 +861,7 @@ class CIFReader:
         batch_size: int = EAGER_CHUNK,
         *,
         where: Optional[Expr] = None,
+        placement: Optional[Placement] = None,
     ) -> Tuple[List[int], Callable[[int], Iterator[BatchColumns]]]:
         """``(split_ids, open_split_batches)`` for batch-mode ``run_job``.
 
@@ -727,12 +881,14 @@ class CIFReader:
 
         def open_split_batches(split_id: int) -> Iterator[BatchColumns]:
             if where is None:
-                sr = self.open_split(split_map[split_id])
+                sr = self.open_split(split_map[split_id], split_id=split_id,
+                                     placement=placement)
                 for start in range(0, sr.n_records, batch_size):
                     yield BatchColumns(sr, start, min(start + batch_size, sr.n_records))
             else:
                 sr = self.open_split(
-                    split_map[split_id], extra_columns=pcols, lazy_open=True
+                    split_map[split_id], extra_columns=pcols, lazy_open=True,
+                    split_id=split_id, placement=placement,
                 )
                 for a, b in sr.plan(where).ranges:
                     for start in range(a, b, batch_size):
@@ -744,7 +900,10 @@ class CIFReader:
         return sorted(split_map), open_split_batches
 
     def job_records(
-        self, *, where: Optional[Expr] = None
+        self,
+        *,
+        where: Optional[Expr] = None,
+        placement: Optional[Placement] = None,
     ) -> Tuple[List[int], Callable[[int], Iterator[Tuple[Any, Record]]]]:
         """``(split_ids, open_split)`` for record-at-a-time ``run_job`` —
         the compatibility path (lazy or eager per this reader's flag).
@@ -761,7 +920,8 @@ class CIFReader:
         split_map = dict(self.splits())
 
         def open_split(split_id: int) -> Iterator[Tuple[Any, Record]]:
-            sr = self.open_split(split_map[split_id])
+            sr = self.open_split(split_map[split_id], split_id=split_id,
+                                 placement=placement)
             it = sr.iter_lazy() if self.lazy else sr.iter_eager()
             for rec in it:
                 if where is None or where.matches_record(rec):

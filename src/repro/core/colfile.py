@@ -66,12 +66,19 @@ from __future__ import annotations
 
 import struct
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .checksum import ChecksumPage, algo_name, best_algo, crc_of
 from .compression import CODECS, compress_block, decompress_block, read_block_header
 from .dcsl import DICT_BLOCK, DCSLColumnReader, DCSLColumnWriter
+from .errors import (
+    BlockCorruptionError,
+    CorruptFileError,
+    FailureStats,
+    SplitRetryExhausted,
+)
 from .encodings import (
     ENC_TAGS,
     ENCODINGS,
@@ -188,6 +195,48 @@ def _write_str(buf: bytearray, s: str) -> None:
 def _read_str(data: bytes, off: int) -> Tuple[str, int]:
     n, off = read_uvarint(data, off)
     return data[off : off + n].decode(), off + n
+
+
+def _scan_frames(body: bytes) -> List[Tuple[int, int]]:
+    """Byte spans of the compressed-block frames tiling ``body`` — each
+    span starts at its frame HEADER (so a frame's CRC covers the header
+    bytes too) and ends where its payload ends."""
+    spans: List[Tuple[int, int]] = []
+    o = 0
+    while o < len(body):
+        _, plen, poff = read_block_header(body, o)
+        spans.append((o, poff + plen))
+        o = poff + plen
+    return spans
+
+
+def _body_block_spans(kind: str, body: bytes) -> List[Tuple[int, int]]:
+    """The checksum-block grid of a body (offsets relative to the body):
+    one span per compressed-block frame for the block-structured kinds,
+    one whole-body span for the monolithic kinds, none for an empty body."""
+    if kind in ("plain", "cblock"):
+        return _scan_frames(body)
+    return [(0, len(body))] if body else []
+
+
+def container_block_spans(raw: bytes) -> Tuple[int, List[Tuple[int, int]]]:
+    """``(body_start, spans)`` of a column file, spans ABSOLUTE into
+    ``raw`` — the grid ``core.faults`` keys block-level corruption on
+    (identical to the grid the writer checksums)."""
+    assert raw[:4] == MAGIC, "bad column file magic"
+    version = raw[4]
+    off = 5
+    kind, off = _read_str(raw, off)
+    _, off = _read_str(raw, off)  # codec
+    if version >= 2:
+        _, off = _read_str(raw, off)  # encoding
+    _, off = read_uvarint(raw, off)  # n_records
+    body_len, off = read_uvarint(raw, off)
+    if version < 2 and kind == "plain":  # v1 plain: raw per-cell body
+        spans = [(0, body_len)] if body_len else []
+    else:
+        spans = _body_block_spans(kind, raw[off : off + body_len])
+    return off, [(off + a, off + b) for a, b in spans]
 
 
 # ===========================================================================
@@ -364,11 +413,33 @@ class ColumnFileWriter:
         _write_str(out, encoding)
         write_uvarint(out, self.n)
         write_uvarint(out, len(body))
+        body_start = len(out)
         out += body
-        # v3 footer: advisory stats page (empty for kinds without zone maps)
-        page = self._zone.finish()
+        # v3.2 integrity section: one CRC per checksum block (the
+        # compressed-block frames for the block-structured kinds, the whole
+        # body for the monolithic ones), written with zeroed meta/file CRC
+        # fields and patched below once the file is byte-final.
+        algo = best_algo()
+        spans = _body_block_spans(self.fmt.kind, body)
+        checks = ChecksumPage(
+            algo, [crc_of(algo, body[a:b]) for a, b in spans]
+        )
+        # stats page (never empty now: it carries the checksums even for
+        # kinds without zone maps)
+        page = self._zone.finish(checksums=checks)
         out.append(1 if page else 0)
         out += page
+        # patch pass: meta_crc covers header + stats page minus the final
+        # 8 bytes (the CRC fields themselves); file_crc covers everything
+        # up to its own field.  SEC_CHECKSUMS is the last section, so both
+        # fields sit at the file's tail.
+        fields_off = len(out) - 8
+        body_end = body_start + len(body)
+        meta_crc = crc_of(
+            algo, bytes(out[:body_start]) + bytes(out[body_end:fields_off])
+        )
+        struct.pack_into("<I", out, fields_off, meta_crc)
+        struct.pack_into("<I", out, fields_off + 4, crc_of(algo, out[:-4]))
         return bytes(out)
 
     def encoding_stats(self) -> Dict[str, Any]:
@@ -389,39 +460,114 @@ class ColumnFileWriter:
 
 class ColumnFileReader:
     """Monotone reader over one column file; dispatches on the stored kind
-    and, within block-structured kinds, on each block's encoding tag."""
+    and, within block-structured kinds, on each block's encoding tag.
 
-    def __init__(self, raw: bytes, typ: ColumnType):
-        assert raw[:4] == MAGIC, "bad column file magic"
-        self.version = raw[4]
-        assert self.version in (1, 2, VERSION), f"unknown column file version {raw[4]}"
-        off = 5
-        self.kind, off = _read_str(raw, off)
-        self.codec, off = _read_str(raw, off)
-        if self.version >= 2:
-            self.encoding, off = _read_str(raw, off)
-        else:
-            self.encoding = "legacy"  # raw per-cell bodies, pre-encoding-layer
-        self.n, off = read_uvarint(raw, off)
-        body_len, off = read_uvarint(raw, off)
+    Integrity + recovery (v3.2): when the stats page carries checksums
+    (``checksum.py``), the header/stats bytes verify once at open and each
+    checksum block verifies lazily on FIRST touch — before any counter
+    moves, so a verified scan reports the same ``ReadCounters`` as an
+    unverified one, and skipped blocks pay nothing.  A mismatch raises
+    ``BlockCorruptionError`` — unless a ``fetch`` callable was supplied
+    (the replica-failover seam: each call returns the next replica
+    attempt's raw bytes, raising ``SplitRetryExhausted`` past the retry
+    policy's cap), in which case the reader re-fetches, accepts a copy
+    whose whole-file CRC verifies, and swaps the body in place (replicas
+    are byte-identical, so offsets and already-decoded caches stay valid).
+    ``fail`` collects checksum/retry counters shared across a split's
+    readers; ``verify=False`` skips all CRC checks (the benchmark knob).
+    Files without checksums (v3.1 and older) read exactly as before and
+    report ``checksum == "absent"``.
+    """
+
+    def __init__(
+        self,
+        raw: bytes,
+        typ: ColumnType,
+        *,
+        path: str = "<memory>",
+        fail: Optional[FailureStats] = None,
+        fetch: Optional[Callable[[], bytes]] = None,
+        verify: bool = True,
+    ):
+        self.path = path
+        self._fail = fail if fail is not None else FailureStats()
+        self._fetch = fetch
+        self._verify = verify
+        try:
+            if raw[:4] != MAGIC:
+                raise CorruptFileError(path, 0, "bad column file magic")
+            self.version = raw[4]
+            if self.version not in (1, 2, VERSION):
+                raise CorruptFileError(
+                    path, 4, f"unknown column file version {raw[4]}"
+                )
+            off = 5
+            self.kind, off = _read_str(raw, off)
+            self.codec, off = _read_str(raw, off)
+            if self.version >= 2:
+                self.encoding, off = _read_str(raw, off)
+            else:
+                self.encoding = "legacy"  # raw per-cell bodies, pre-encoding
+            self.n, off = read_uvarint(raw, off)
+            body_len, off = read_uvarint(raw, off)
+        except (IndexError, struct.error, UnicodeDecodeError) as e:
+            raise CorruptFileError(
+                path, min(len(raw), 5), f"truncated header ({e})"
+            ) from e
         self.body = raw[off : off + body_len]
+        if len(self.body) != body_len:
+            raise CorruptFileError(
+                path, len(raw),
+                f"body truncated: header promises {body_len} bytes, "
+                f"{len(self.body)} present",
+            )
+        self._body_start = off
+        self._body_len = body_len
         self.typ = typ
         self.counters = ReadCounters()
         self.file_bytes = len(raw)
         # v3 footer: advisory zone maps + optional bloom + v3.1 per-block
-        # stats-tags.  Parsing moves NO counter — stats are metadata, not
-        # data read.
+        # stats-tags + v3.2 checksums.  Parsing moves NO counter — stats
+        # are metadata, not data read.
         self.zone_maps: Optional[List[ZoneMap]] = None
         self.bloom = None
         self.block_extras = None  # v3.1 stats-tags (None on v3-and-older)
+        self._checks: Optional[ChecksumPage] = None
         soff = off + body_len
         if self.version >= 3 and soff < len(raw) and raw[soff]:
-            self.zone_maps, self.bloom, self.block_extras = decode_stats_page(
-                typ, raw, soff + 1
-            )
+            try:
+                zone_maps, self.bloom, self.block_extras, self._checks = (
+                    decode_stats_page(typ, raw, soff + 1)
+                )
+            except (IndexError, struct.error, ValueError, UnicodeDecodeError) as e:
+                raise CorruptFileError(
+                    path, soff, f"unreadable stats page ({e})"
+                ) from e
+            # a checksums-only page decodes zero zone maps; keep the
+            # "no zone maps" contract as None, like pre-v3.2 files
+            self.zone_maps = zone_maps or None
+        self._raw = raw if self._checks is not None else None
+        self._ck_ok: set = set()
+        if self._checks is not None and verify:
+            self._verify_meta(raw)
         # v2+ block-structured kinds carry per-block encoding tags
         self._enc = self.version >= 2 and self.kind in ("plain", "cblock")
         self._sl_dict = self.kind == "skiplist" and self.encoding == "dict"
+        if not (self._enc or self.kind == "cblock"):
+            # monolithic kinds (skiplist / dcsl / v1 plain): ONE checksum
+            # block spanning the whole body, verified up front — their
+            # sub-readers hold views into the body, so it must be known
+            # good (or replica-recovered) before _init_kind builds them.
+            self._spans = [(0, len(self.body))] if self.body else []
+            if self._checks is not None and verify:
+                if len(self._checks.block_crcs) != len(self._spans):
+                    raise CorruptFileError(
+                        path, self._body_start,
+                        f"{len(self._spans)} checksum block(s) expected, "
+                        f"page carries {len(self._checks.block_crcs)}",
+                    )
+                if self._spans:
+                    self._verify_block(0)
         self._init_kind()
 
     def _init_kind(self) -> None:
@@ -455,21 +601,170 @@ class ColumnFileReader:
         else:
             raise ValueError(k)
 
+    def _compute_blocks(
+        self,
+    ) -> Tuple[List[Tuple[int, int, int, int]], List[Tuple[int, int]]]:
+        """Parse the compressed-block framing of the current body into
+        ``(blocks, spans)`` — (n_records, payload_off, payload_len,
+        first_idx) per block plus each block's (frame_start, frame_end)
+        byte span (the checksum grid).  Raises ``CorruptFileError`` when
+        the framing does not parse or does not tile the body."""
+        blocks: List[Tuple[int, int, int, int]] = []
+        spans: List[Tuple[int, int]] = []
+        o, idx = 0, 0
+        try:
+            while o < len(self.body):
+                nrec, plen, poff = read_block_header(self.body, o)
+                blocks.append((nrec, poff, plen, idx))
+                spans.append((o, poff + plen))
+                idx += nrec
+                o = poff + plen
+        except (IndexError, struct.error) as e:
+            raise CorruptFileError(
+                self.path, self._body_start + o, f"unreadable block header ({e})"
+            ) from e
+        if self._checks is not None and self._verify:
+            # structural guard: a damaged header could misalign every
+            # following frame before any CRC gets a chance to object
+            if o != len(self.body) or (
+                blocks and spans[-1][1] > len(self.body)
+            ):
+                raise CorruptFileError(
+                    self.path, self._body_start + o,
+                    "block framing does not tile the body",
+                )
+            if len(blocks) != len(self._checks.block_crcs):
+                raise CorruptFileError(
+                    self.path, self._body_start,
+                    f"{len(blocks)} blocks framed, page carries "
+                    f"{len(self._checks.block_crcs)} checksums",
+                )
+        return blocks, spans
+
     def _scan_block_headers(self) -> None:
         """Header-only scan of the compressed-block framing (shared by the
         v2 encoded reader and the v1 legacy cblock reader): fills
         ``_blocks`` with (n_records, payload_off, payload_len, first_idx)
         and counts the header bytes as touched."""
-        self._blocks: List[Tuple[int, int, int, int]] = []
-        o, idx = 0, 0
-        while o < len(self.body):
-            nrec, plen, poff = read_block_header(self.body, o)
-            self._blocks.append((nrec, poff, plen, idx))
-            idx += nrec
-            o = poff + plen
+        self._blocks, self._spans = self._compute_blocks()
         self._cur_block = -1
         self._decompress = CODECS[self.codec][1]  # resolved once per reader
-        self.counters.bytes_touched += o - sum(b[2] for b in self._blocks)
+        self.counters.bytes_touched += sum(
+            (b - a) for a, b in self._spans
+        ) - sum(b[2] for b in self._blocks)
+
+    # -- integrity: lazy CRC verification + replica recovery ------------------
+    def _verify_meta(self, raw: bytes) -> None:
+        """Verify the header+stats checksum once at open (the CRC fields
+        themselves — the file's trailing 8 bytes — are excluded)."""
+        ck = self._checks
+        end = ck.fields_off
+        body_end = self._body_start + self._body_len
+        if end < body_end or end + 8 != len(raw):
+            raise CorruptFileError(
+                self.path, end, "checksum fields are not the file's tail"
+            )
+        got = crc_of(ck.algo, raw[: self._body_start] + raw[body_end:end])
+        if got != ck.meta_crc:
+            self._fail.checksum_failures += 1
+            raise BlockCorruptionError(
+                self.path, 0,
+                f"header/stats checksum mismatch "
+                f"(stored {ck.meta_crc:#010x}, computed {got:#010x})",
+            )
+
+    def _verify_block(self, bi: int) -> None:
+        """Verify checksum block ``bi`` on first touch — BEFORE any counter
+        moves, so verified and unverified scans report identical
+        ``ReadCounters``.  On mismatch: count it, then either recover the
+        body from the next replica (``fetch`` seam) or raise."""
+        ck = self._checks
+        if ck is None or not self._verify or bi in self._ck_ok:
+            return
+        a, b = self._spans[bi]
+        if crc_of(ck.algo, self.body[a:b]) == ck.block_crcs[bi]:
+            self._ck_ok.add(bi)
+            return
+        self._fail.checksum_failures += 1
+        if not self._recover_body():
+            raise BlockCorruptionError(
+                self.path, self._body_start + a,
+                f"block {bi} checksum mismatch over bytes "
+                f"[{self._body_start + a}, {self._body_start + b})",
+            )
+
+    def _recover_body(self) -> bool:
+        """Replica failover: pull fresh copies through ``fetch`` until one
+        whole file verifies, then swap the body in place.  Replicas are
+        byte-identical, so every offset, decoded cache, and reader position
+        stays valid; the block grid is re-derived in case the ORIGINAL
+        copy's framing bytes were what was damaged.  Returns False when no
+        fetch seam exists or the retry policy is exhausted (the caller
+        raises ``BlockCorruptionError``)."""
+        if self._fetch is None:
+            return False
+        ck = self._checks
+        while True:
+            try:
+                raw = self._fetch()  # raises SplitRetryExhausted at the cap
+            except SplitRetryExhausted:
+                return False
+            except OSError:
+                continue  # injected/real IO error: costs one attempt
+            if len(raw) != self.file_bytes:
+                self._fail.checksum_failures += 1
+                continue
+            (file_crc,) = struct.unpack_from("<I", raw, len(raw) - 4)
+            if crc_of(ck.algo, raw[:-4]) != file_crc:
+                self._fail.checksum_failures += 1
+                continue
+            self.body = raw[self._body_start : self._body_start + self._body_len]
+            self._raw = raw
+            if self._enc or (self.kind == "cblock" and hasattr(self, "_blocks")):
+                # rebuild the framing WITHOUT recounting header bytes; the
+                # recovered copy verified whole, so every block is good
+                self._blocks, self._spans = self._compute_blocks()
+                if hasattr(self, "_firsts"):
+                    self._firsts = np.array(
+                        [blk[3] for blk in self._blocks] or [0], np.int64
+                    )
+            else:
+                self._spans = [(0, len(self.body))] if self.body else []
+            self._ck_ok = set(range(len(ck.block_crcs)))
+            return True
+
+    @property
+    def checksum(self) -> str:
+        """``"crc32c"``/``"crc32"`` when the file carries a v3.2 checksum
+        section, ``"absent"`` for older files."""
+        return algo_name(self._checks.algo) if self._checks else "absent"
+
+    def verify_checksums(self) -> str:
+        """Full integrity audit: header/stats, every block, and the
+        whole-file CRC — regardless of what has been read so far.  Raises
+        ``BlockCorruptionError`` on the first mismatch; returns the
+        algorithm name (``"absent"`` when the file carries no checksums).
+        """
+        ck = self._checks
+        if ck is None:
+            return "absent"
+        raw = self._raw
+        self._verify_meta(raw)
+        for bi in range(len(self._spans)):
+            a, b = self._spans[bi]
+            if crc_of(ck.algo, self.body[a:b]) != ck.block_crcs[bi]:
+                self._fail.checksum_failures += 1
+                raise BlockCorruptionError(
+                    self.path, self._body_start + a,
+                    f"block {bi} checksum mismatch",
+                )
+        (file_crc,) = struct.unpack_from("<I", raw, len(raw) - 4)
+        if crc_of(ck.algo, raw[:-4]) != file_crc:
+            self._fail.checksum_failures += 1
+            raise BlockCorruptionError(
+                self.path, len(raw) - 4, "whole-file checksum mismatch"
+            )
+        return algo_name(ck.algo)
 
     # -- v2 encoded blocks (plain + cblock share this machinery) -------------
     def _init_blocks(self) -> None:
@@ -482,6 +777,10 @@ class ColumnFileReader:
         self._page_touched = False
 
     def _enc_load(self, bi: int) -> None:
+        if bi != self._cur_block:
+            # first touch of this block: CRC-check (and possibly replica-
+            # recover) BEFORE any counter moves
+            self._verify_block(bi)
         nrec, poff, plen, first = self._blocks[bi]
         c = self.counters
         # re-decoding the current block (read_packed touched it raw, see
@@ -520,6 +819,12 @@ class ColumnFileReader:
             if bi != self._cur_block or self._vals is None:
                 # _vals is None when read_packed served this block raw
                 self._enc_load(bi)
+                nb = int(np.searchsorted(self._firsts, i, side="right") - 1)
+                if nb != bi:
+                    # replica recovery rebuilt the block grid (the damaged
+                    # copy's framing had misplaced the boundaries): re-aim
+                    self._enc_load(nb)
+                    bi = nb
             nrec, _, _, first = self._blocks[bi]
             gap_from = max(self._pos, first)
             if i > gap_from:
@@ -539,6 +844,7 @@ class ColumnFileReader:
         )
         assert len(self._blocks) == 1, "packed-code access needs the one-block layout"
         if self._page is None:
+            self._verify_block(0)
             nrec, poff, plen, _ = self._blocks[0]
             tag = self.body[poff]
             assert TAG_NAMES[tag] == "dict", (
@@ -683,6 +989,7 @@ class ColumnFileReader:
         for j in range(max(bi, 0), len(self._blocks)):
             nrec, poff, plen, first = self._blocks[j]
             if first <= index < first + nrec:
+                self._verify_block(j)
                 if j != bi:
                     self.counters.blocks_skipped += len(range(max(bi + 1, 0), j))
                 self._payload = self._decompress(self.body[poff : poff + plen])
@@ -736,9 +1043,12 @@ class ColumnFileReader:
     # -- predicate pushdown (advisory planning; never decodes, never counts) --
     @property
     def format_version(self) -> str:
-        """Human-readable format version: ``"1"``/``"2"``/``"3"``, or
-        ``"3.1"`` when the stats page carries per-block stats-tags (the
-        header version byte stays 3 — v3 readers ignore the extension)."""
+        """Human-readable format version: ``"1"``/``"2"``/``"3"``, ``"3.1"``
+        when the stats page carries per-block stats-tags, or ``"3.2"`` when
+        it also carries checksums (the header version byte stays 3 — v3
+        readers ignore the trailing sections bit-compatibly)."""
+        if self.version == 3 and self._checks is not None:
+            return "3.2"
         if self.version == 3 and self.block_extras is not None:
             return "3.1"
         return str(self.version)
@@ -772,6 +1082,9 @@ class ColumnFileReader:
             return None
         if self.typ.kind not in ("int32", "int64", "string", "bytes"):
             return None
+        # pruning decisions read block bytes, so a damaged dictionary could
+        # prune away live rows — verify first (moves no ReadCounters)
+        self._verify_block(bi)
         nrec, poff, plen, _ = self._blocks[bi]
         if TAG_NAMES[self.body[poff]] != "dict":
             return None

@@ -1,0 +1,141 @@
+"""Typed failures + the retry policy of the fault-tolerant scan engine.
+
+This module is the dependency root of the failure subsystem: ``colfile``
+raises the corruption errors and consumes a ``FailurePolicy`` through its
+recovery seam, ``faults.py`` injects them, and ``mapreduce``/``cif`` thread
+the policy end-to-end — so everything lives here, below all of them.
+
+Exception taxonomy (what a caller can catch and what it means):
+
+  CorruptFileError      — a container failed to PARSE: truncated file, bad
+                          magic, framing that does not tile the body,
+                          malformed ``_meta.json``/``schema.json``.  Names
+                          the path and byte offset instead of surfacing a
+                          raw ``struct.error``/``json.JSONDecodeError``.
+  BlockCorruptionError  — a CRC mismatch: the bytes parsed but are provably
+                          not what the writer wrote (subclass of
+                          CorruptFileError, so one except-clause covers
+                          both "damaged" flavors).
+  InjectedIOError       — an ``OSError`` raised by the fault-injection
+                          harness (``core.faults``); recovery paths treat
+                          it exactly like a real IO error.
+  SplitRetryExhausted   — one split's read attempts hit the policy cap;
+                          ``run_job`` reacts by re-enqueuing the split.
+  DeadlineExceeded      — the per-split (simulated) retry-delay budget ran
+                          out first (subclass of SplitRetryExhausted).
+  CoverageError         — some unfinished split has no live replica left,
+                          so the job cannot complete; subclasses
+                          AssertionError to keep the pre-existing
+                          "coverage lost" contract catchable as before.
+
+Determinism contract: every retry decision below is a pure function of
+``(seed, key, attempt)`` — backoff jitter is sha256-seeded, delays are
+*simulated* seconds accumulated in ``FailureStats`` (no wall-clock sleeps
+unless ``real_sleep`` is set), so failure counters are bit-identical
+across reruns and across serial vs concurrent schedules.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Optional
+
+
+def _stable_hash(s: str) -> int:
+    return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8], "little")
+
+
+def stable_unit(s: str) -> float:
+    """Deterministic uniform draw in [0, 1) keyed by ``s``."""
+    return _stable_hash(s) / 2.0**64
+
+
+class CorruptFileError(ValueError):
+    """A container file (or sidecar) failed to parse.
+
+    ``path`` names the damaged file, ``offset`` the byte where parsing
+    gave up (-1 when unknown), ``detail`` says what was expected.
+    """
+
+    def __init__(self, path: str, offset: int = -1, detail: str = ""):
+        self.path = path
+        self.offset = offset
+        self.detail = detail
+        at = f" at byte {offset}" if offset >= 0 else ""
+        super().__init__(f"corrupt file {path!r}{at}: {detail or 'unreadable'}")
+
+
+class BlockCorruptionError(CorruptFileError):
+    """A checksum mismatch: stored CRC disagrees with the bytes on disk."""
+
+
+class InjectedIOError(OSError):
+    """An IO error raised by the deterministic fault-injection harness."""
+
+
+class SplitRetryExhausted(RuntimeError):
+    """A split's column reads failed through every allowed attempt."""
+
+
+class DeadlineExceeded(SplitRetryExhausted):
+    """The split's simulated retry-delay budget ran out before success."""
+
+
+class CoverageError(AssertionError):
+    """An unfinished split has no live replica host — the job cannot run
+    to completion and fails fast instead of spinning."""
+
+
+@dataclass(frozen=True)
+class FailurePolicy:
+    """How aggressively a reader retries, and on what budget.
+
+    ``max_attempts`` caps per-column-file read attempts within one split
+    execution (each attempt sources the next host in the replica chain);
+    ``max_reexecutions`` caps how often a split may be re-enqueued into
+    the ``WorkQueue`` after exhausting its attempts.  Backoff is
+    exponential with deterministic seeded jitter and accumulates into
+    ``FailureStats.simulated_delay_s`` — real sleeping is opt-in
+    (``real_sleep``), so tests and benchmarks never wait.  ``verify=False``
+    disables read-side checksum verification (the benchmark knob that
+    measures the clean-path overhead); written files always carry CRCs.
+    """
+
+    max_attempts: int = 4
+    max_reexecutions: int = 2
+    backoff_base: float = 0.05  # simulated seconds before the first retry
+    backoff_mult: float = 2.0
+    backoff_jitter: float = 0.1  # +/- fraction, sha256-seeded
+    seed: int = 0
+    split_deadline: Optional[float] = 30.0  # simulated seconds per split
+    verify: bool = True
+    real_sleep: bool = False
+
+    def backoff_s(self, key: str, retry: int) -> float:
+        """Simulated delay before retry number ``retry`` (1-based) of the
+        read identified by ``key`` — deterministic given (seed, key, retry).
+        """
+        base = self.backoff_base * (self.backoff_mult ** max(retry - 1, 0))
+        u = stable_unit(f"backoff:{self.seed}:{key}:{retry}")  # [0, 1)
+        return base * (1.0 + self.backoff_jitter * (2.0 * u - 1.0))
+
+
+DEFAULT_POLICY = FailurePolicy()
+
+
+@dataclass
+class FailureStats:
+    """Mutable failure counters for ONE split execution, shared by every
+    column reader the split opens (so counts survive a discarded reader).
+
+    The integer counters are deterministic and bit-identical between
+    serial and concurrent runs of the same fault plan (fault decisions are
+    keyed on the replica chain, not the executing worker).
+    ``simulated_delay_s`` is deterministic per split but — being a float
+    sum — is only identical across schedules up to summation order.
+    """
+
+    checksum_failures: int = 0
+    read_retries: int = 0
+    replica_failovers: int = 0
+    simulated_delay_s: float = 0.0

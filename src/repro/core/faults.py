@@ -1,0 +1,185 @@
+"""Deterministic fault injection for the scan engine (tentpole PR 6).
+
+A ``FaultPlan`` decides — as a pure function of ``(seed, host, split,
+column, block, attempt)`` — whether a given read observes corruption, an
+IO error, or extra latency, and when a host dies mid-job.  It installs at
+the reader's file-open seam (``SplitReader._fetch_attempt``): the plan
+never touches files on disk, it transforms the bytes as they are "read
+from" a host.  Because every decision is sha256-keyed, the same plan
+replays bit-identically across reruns and across serial vs concurrent
+schedules — no sleeps, no flakes — which is what lets ordinary tier-1
+tests exercise every recovery path (tests/test_faults.py).
+
+Keying model:
+
+  * The REPLICA CHAIN, not the executing worker, determines which host a
+    given attempt reads from (``chain[attempt % len(chain)]`` in
+    ``SplitReader``), so fault decisions are schedule-independent.
+  * Attempt numbers restart from ``epoch * ATTEMPT_STRIDE`` when a split
+    is re-enqueued after retry exhaustion (``execution_epoch`` below), so
+    a re-executed split replays against fresh fault rolls — and
+    ``corrupt_until`` thresholds can express "fails the whole first
+    execution, succeeds on re-execution".
+  * Latency is SIMULATED: it accumulates into
+    ``FailureStats.simulated_delay_s`` and counts against the policy's
+    split deadline; nothing sleeps.
+
+Corruption flips exactly one deterministic byte inside one checksum block
+of the file (the grid ``container_block_spans`` reports — identical to
+the grid the writer checksums), so every injected fault is detectable by
+construction and the reader's recovery path, not luck, is what makes the
+job succeed.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import FrozenSet, Iterator, Mapping, Optional, Set, Tuple
+
+from .colfile import container_block_spans
+from .errors import FailureStats, InjectedIOError, _stable_hash, stable_unit
+
+# Attempts per execution epoch: re-enqueued splits retry with attempt
+# numbers offset by this stride, so their fault rolls are independent of
+# the first execution's.  Prime, and far above any sane retry cap.
+ATTEMPT_STRIDE = 1009
+
+_tls = threading.local()
+
+
+@contextmanager
+def execution_epoch(epoch: int) -> Iterator[None]:
+    """Scope the current thread's split-execution epoch (0 on first
+    execution, bumped by ``WorkQueue.requeue``).  ``run_job`` wraps each
+    split execution in this, and ``SplitReader`` captures
+    ``attempt_base()`` at open."""
+    prev = getattr(_tls, "epoch", 0)
+    _tls.epoch = epoch
+    try:
+        yield
+    finally:
+        _tls.epoch = prev
+
+
+def current_epoch() -> int:
+    return getattr(_tls, "epoch", 0)
+
+
+def attempt_base() -> int:
+    """First attempt number of the current execution epoch."""
+    return current_epoch() * ATTEMPT_STRIDE
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, replayable schedule of injected failures.
+
+    Rate-based faults roll independently per key (see each field); the
+    explicit collections pin faults for targeted tests.  All of it is
+    deterministic — two runs of the same plan observe the same faults in
+    the same places.
+
+    ``corrupt_blocks``   — {(host, split, column, block)}: that host's copy
+                           of that block is ALWAYS damaged (a bad disk
+                           sector; failover to another replica recovers).
+    ``io_errors``        — {(host, split, column)}: opening that column
+                           from that host always raises InjectedIOError.
+    ``corrupt_until``    — {(split, column): attempt_threshold}: EVERY
+                           replica's copy reads damaged while
+                           ``attempt < threshold``.  A threshold above the
+                           policy's ``max_attempts`` but below
+                           ``ATTEMPT_STRIDE`` forces retry exhaustion and
+                           re-enqueue, after which the re-execution's
+                           attempts (>= ATTEMPT_STRIDE) succeed.
+    ``fail_at``          — {host: k}: the host dies upon claiming its k-th
+                           split (1-based) while still holding it — the
+                           split is stolen and re-executed.  k <= 0 means
+                           dead from the start.
+    ``corrupt_rate``     — per-(host, split, column, block) probability of
+                           persistent corruption (like corrupt_blocks).
+    ``io_error_rate``    — per-(host, split, column, attempt) probability
+                           of a TRANSIENT IO error on that attempt.
+    ``latency_rate``     — per-(host, split, column, attempt) probability
+                           of adding ``latency_s`` simulated seconds.
+    """
+
+    seed: int = 0
+    corrupt_rate: float = 0.0
+    io_error_rate: float = 0.0
+    latency_rate: float = 0.0
+    latency_s: float = 0.01
+    corrupt_blocks: FrozenSet[Tuple[str, int, str, int]] = frozenset()
+    io_errors: FrozenSet[Tuple[str, int, str]] = frozenset()
+    corrupt_until: Mapping[Tuple[int, str], int] = field(default_factory=dict)
+    fail_at: Mapping[str, int] = field(default_factory=dict)
+
+    def _roll(self, tag: str, rate: float, *key: object) -> bool:
+        if rate <= 0.0:
+            return False
+        parts = ":".join(str(k) for k in key)
+        return stable_unit(f"fault:{self.seed}:{tag}:{parts}") < rate
+
+    # -- host death -----------------------------------------------------------
+    def start_dead(self) -> Set[str]:
+        """Hosts dead before the job starts (``fail_at`` k <= 0)."""
+        return {h for h, k in self.fail_at.items() if k <= 0}
+
+    def dies_after_claims(self, host: str) -> Optional[int]:
+        """The claim count at which ``host`` dies, or None if it survives."""
+        k = self.fail_at.get(host)
+        return k if k is not None and k > 0 else None
+
+    # -- the file-open seam ---------------------------------------------------
+    def apply(
+        self,
+        raw: bytes,
+        *,
+        host: str,
+        split: int,
+        column: str,
+        attempt: int,
+        fail: Optional[FailureStats] = None,
+    ) -> bytes:
+        """The bytes ``host`` serves for ``column`` of ``split`` on read
+        ``attempt`` — possibly damaged, possibly after simulated latency,
+        possibly an ``InjectedIOError`` instead."""
+        if self._roll("latency", self.latency_rate, host, split, column, attempt):
+            if fail is not None:
+                fail.simulated_delay_s += self.latency_s
+        if (host, split, column) in self.io_errors or self._roll(
+            "io", self.io_error_rate, host, split, column, attempt
+        ):
+            raise InjectedIOError(
+                f"injected IO error: {column!r} of split {split} from {host!r}"
+                f" (attempt {attempt})"
+            )
+        until = self.corrupt_until.get((split, column))
+        all_bad = until is not None and attempt < until
+        if not (
+            all_bad
+            or self.corrupt_rate > 0.0
+            or any(
+                h == host and s == split and c == column
+                for h, s, c, _ in self.corrupt_blocks
+            )
+        ):
+            return raw
+        try:
+            _, spans = container_block_spans(raw)
+        except (AssertionError, IndexError):  # not a column file: leave as-is
+            return raw
+        out = None
+        for bi, (a, b) in enumerate(spans):
+            hit = (
+                (host, split, column, bi) in self.corrupt_blocks
+                or self._roll("corrupt", self.corrupt_rate, host, split, column, bi)
+                or (all_bad and bi == 0)
+            )
+            if not hit or b <= a:
+                continue
+            if out is None:
+                out = bytearray(raw)
+            h = _stable_hash(f"flip:{self.seed}:{host}:{split}:{column}:{bi}")
+            out[a + h % (b - a)] ^= 1 + (h >> 8) % 255  # nonzero xor: always flips
+        return bytes(out) if out is not None else raw

@@ -44,12 +44,21 @@ across processes.
 from __future__ import annotations
 
 import os
+import threading
 import time
 from collections import defaultdict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
+from .errors import (
+    DEFAULT_POLICY,
+    CorruptFileError,
+    CoverageError,
+    FailurePolicy,
+    SplitRetryExhausted,
+)
+from .faults import FaultPlan, execution_epoch
 from .placement import Placement, WorkQueue, stable_partition
 
 MapFn = Callable[[Any, Any, Callable[[Any, Any], None]], None]
@@ -70,6 +79,12 @@ class JobResult:
     remote_reads: int = 0
     mode: str = "records"  # "records" | "batches"
     n_workers: int = 1
+    # fault tolerance (PR 6): splits whose work ran more than once — dead-
+    # owner steals plus retry-exhaustion requeues — and hosts that died
+    # MID-job (start-time dead_hosts excluded).  Both deterministic for a
+    # given FaultPlan, serial or concurrent.
+    splits_reexecuted: int = 0
+    hosts_failed: int = 0
 
 
 def run_job(
@@ -87,6 +102,9 @@ def run_job(
     map_batch_fn: Optional[MapBatchFn] = None,
     n_workers: int = 1,
     where: Optional[Any] = None,
+    fault_plan: Optional[FaultPlan] = None,
+    failure_policy: Optional[FailurePolicy] = None,
+    scan_stats: Optional[Any] = None,
 ) -> JobResult:
     """Execute a MapReduce job.
 
@@ -110,6 +128,20 @@ def run_job(
     literal silently matches nothing.  When a schema is available,
     prefer ``CIFReader.job_records(where=)`` / ``job_inputs(where=)``,
     which validate up front.
+
+    Fault tolerance (PR 6): ``fault_plan`` contributes start-time dead
+    hosts (``fail_at`` <= 0) and kills hosts MID-job on their scheduled
+    claim — the in-flight split is stolen by a replica holder and
+    re-executed.  A split whose reads exhaust the ``failure_policy``
+    (``SplitRetryExhausted``/``CorruptFileError``/``OSError`` from the
+    split iterator, which the CIF layer raises when its own retry loop
+    gives up) is re-enqueued with a bumped execution epoch, up to
+    ``max_reexecutions`` times.  Output, ``remote_reads``, and the
+    pre-existing ScanStats stay bit-identical to the no-fault serial run;
+    ``scan_stats`` (if given) additionally absorbs ``splits_reexecuted``.
+    Note the plan injects READ faults only through a reader wired with it
+    (``CIFReader(fault_plan=..., failure_policy=...)``) — pass the same
+    plan to both layers.
     """
     t0 = time.perf_counter()
     batch_mode = map_batch_fn is not None or open_split_batches is not None
@@ -137,10 +169,15 @@ def run_job(
                 if where.matches_record(rec):
                     inner_map(key, rec, emit)
     placement = placement or Placement(n_splits=len(split_ids), n_hosts=n_hosts)
-    wq = WorkQueue(placement, dead_hosts=dead_hosts)
-    assert wq.coverage_possible(), "a split lost all replicas — job cannot run"
+    start_dead = set(dead_hosts or ())
+    if fault_plan is not None:
+        start_dead |= fault_plan.start_dead()
+    wq = WorkQueue(placement, dead_hosts=start_dead)
+    if not wq.coverage_possible():
+        raise CoverageError("a split lost all replicas — job cannot run")
+    policy = failure_policy or (DEFAULT_POLICY if fault_plan is not None else None)
 
-    live_hosts = [h for h in range(placement.n_hosts) if h not in (dead_hosts or set())]
+    live_hosts = [h for h in range(placement.n_hosts) if h not in start_dead]
 
     def run_split(sidx: int) -> Tuple[List[Tuple[Any, Any]], float]:
         split_id = split_ids[sidx]
@@ -164,20 +201,87 @@ def run_job(
                 combiner(k, vs, emit_c)
         return local_out, dt
 
+    # mid-job host death: a host dies upon making its fail_at-th claim,
+    # WHILE holding that split — the claim stays on the books so a replica
+    # holder steals it through the dead-owner branch (a re-execution).
+    # Claim counts are per host and schedule-independent for the primary
+    # splits (each host drains its primaries in order before stealing).
+    claim_counts: Dict[int, int] = defaultdict(int)
+    claims_lock = threading.Lock()
+
+    def claim(host: int) -> Optional[int]:
+        if host in wq.dead:
+            return None
+        sidx = wq.next_split(host)
+        if sidx is None or fault_plan is None:
+            return sidx
+        with claims_lock:
+            claim_counts[host] += 1
+            k = claim_counts[host]
+        dies = fault_plan.dies_after_claims(host)
+        if dies is not None and k >= dies:
+            wq.mark_dead(host)  # raises CoverageError when coverage is lost
+            return None
+        return sidx
+
+    def process(sidx: int) -> Optional[Tuple[List[Tuple[Any, Any]], float]]:
+        """Run one split under its execution epoch; on read exhaustion
+        re-enqueue it (None) so another worker — with fresh attempt numbers
+        — retries, or re-raise once the re-execution cap is hit."""
+        try:
+            with execution_epoch(wq.epoch(sidx)):
+                return run_split(sidx)
+        except (SplitRetryExhausted, CorruptFileError, OSError):
+            if policy is None or not wq.requeue(sidx, policy.max_reexecutions):
+                raise
+            return None
+
     # Task = (sidx, host, local_out, map_seconds).  Each split is claimed and
     # processed exactly once; the post-barrier fold below is ordered by sidx,
     # which is what makes serial and concurrent output identical.
     def host_loop(host: int) -> List[Tuple[int, int, List[Tuple[Any, Any]], float]]:
         done: List[Tuple[int, int, List[Tuple[Any, Any]], float]] = []
         while True:
-            sidx = wq.next_split(host)
+            sidx = claim(host)
             if sidx is None:
                 return done
-            local_out, dt = run_split(sidx)
+            got = process(sidx)
+            if got is None:
+                # requeued: keep looping — this host holds a replica of the
+                # split it just failed, so it can re-claim it even after
+                # every other worker has exited
+                continue
+            local_out, dt = got
             wq.complete(sidx)
             done.append((sidx, host, local_out, dt))
 
     tasks: List[Tuple[int, int, List[Tuple[Any, Any]], float]] = []
+
+    def drain(into: List[Tuple[int, int, List[Tuple[Any, Any]], float]]) -> None:
+        # serial round-robin over the live hosts (the original simulated
+        # cluster); also the post-pool sweep for splits orphaned by a host
+        # that died after every other worker had already exited
+        pending = True
+        while pending:
+            pending = False
+            for h in live_hosts:
+                if h in wq.dead:
+                    continue
+                sidx = claim(h)
+                if sidx is None:
+                    # the claim itself may have just killed this host,
+                    # orphaning its split — run another pass to steal it
+                    if h in wq.dead and not wq.all_done():
+                        pending = True
+                    continue
+                pending = True
+                got = process(sidx)
+                if got is None:
+                    continue
+                local_out, dt = got
+                wq.complete(sidx)
+                into.append((sidx, h, local_out, dt))
+
     # pool size: one thread per live host, capped by the request and by the
     # hardware — more threads than cores only adds GIL/scheduler thrash in a
     # single-process simulated cluster.  Every live host's loop still runs.
@@ -186,19 +290,9 @@ def run_job(
         with ThreadPoolExecutor(max_workers=pool_size) as pool:
             for fut in [pool.submit(host_loop, h) for h in live_hosts]:
                 tasks.extend(fut.result())
+        drain(tasks)  # no-op unless a late death orphaned an in-flight split
     else:
-        # serial: round-robin the live hosts (the original simulated cluster)
-        pending = True
-        while pending:
-            pending = False
-            for h in live_hosts:
-                sidx = wq.next_split(h)
-                if sidx is None:
-                    continue
-                pending = True
-                local_out, dt = run_split(sidx)
-                wq.complete(sidx)
-                tasks.append((sidx, h, local_out, dt))
+        drain(tasks)
     assert len(tasks) == len(split_ids), "scheduler lost or duplicated a split"
 
     # deterministic fold: split order, stable partitioning
@@ -237,6 +331,9 @@ def run_job(
                 reduce_fn(k, vs, emit_r)
     t_end = time.perf_counter()
 
+    if scan_stats is not None:
+        scan_stats.splits_reexecuted += wq.reexecutions
+
     return JobResult(
         output=output,
         map_time=map_time,
@@ -249,6 +346,8 @@ def run_job(
         remote_reads=remote_reads,
         mode="batches" if batch_mode else "records",
         n_workers=max(1, pool_size),
+        splits_reexecuted=wq.reexecutions,
+        hosts_failed=len(wq.dead) - len(start_dead),
     )
 
 

@@ -33,6 +33,8 @@ from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Any, Dict, List, Optional, Sequence, Set
 
+from .errors import CoverageError
+
 
 def _stable_hash(s: str) -> int:
     return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8], "little")
@@ -115,13 +117,22 @@ class WorkQueue:
     Each host processes its primary splits first.  When done, it steals
     unfinished splits for which it holds a replica (never a remote read —
     CPP's invariant).  A dead host's splits are picked up the same way.
+
+    Fault tolerance (PR 6): hosts may die MID-JOB (``mark_dead``) — their
+    in-flight splits become stealable and count as re-executions; a split
+    whose read attempts exhausted may be re-enqueued (``requeue``), which
+    bumps its execution epoch so the retrying worker's fault rolls are
+    fresh (``core.faults.execution_epoch``).
     """
 
     def __init__(self, placement: Placement, dead_hosts: Optional[Set[int]] = None):
         self.p = placement
-        self.dead = dead_hosts or set()
+        # copy: mark_dead must not mutate the caller's set
+        self.dead = set(dead_hosts or ())
         self.done: Set[int] = set()
         self.claimed: Dict[int, int] = {}  # split -> host
+        self.epochs: Dict[int, int] = {}  # split -> execution epoch
+        self.reexecutions = 0  # deterministic: dead-owner steals + requeues
         self._lock = threading.Lock()
 
     def next_split(self, host: int) -> Optional[int]:
@@ -132,12 +143,24 @@ class WorkQueue:
                 if s not in self.done and s not in self.claimed:
                     self.claimed[s] = host
                     return s
-            # then steal: any unfinished split whose replica set includes us
+            # then steal — but ONLY work whose owner is gone: a split a dead
+            # host died holding, or an unclaimed split whose primary is
+            # dead.  Live hosts' unclaimed primaries are off limits, so
+            # every host's claim sequence stays a deterministic prefix of
+            # its primary list — the property that makes FaultPlan.fail_at
+            # death identity (and with it every failure counter)
+            # schedule-independent between serial and concurrent runs.
             for s in self.p.splits_of(host, include_replicas=True):
                 if s in self.done:
                     continue
                 owner = self.claimed.get(s)
-                if owner is None or owner in self.dead:
+                if owner is not None and owner in self.dead:
+                    # stolen from a host that died holding it: the split's
+                    # work is genuinely re-executed
+                    self.reexecutions += 1
+                    self.claimed[s] = host
+                    return s
+                if owner is None and self.p.primary(s) in self.dead:
                     self.claimed[s] = host
                     return s
             return None
@@ -146,12 +169,51 @@ class WorkQueue:
         with self._lock:
             self.done.add(split_id)
 
+    def epoch(self, split_id: int) -> int:
+        with self._lock:
+            return self.epochs.get(split_id, 0)
+
+    def requeue(self, split_id: int, max_reexecutions: int) -> bool:
+        """Give a split whose attempts exhausted back to the queue with a
+        bumped execution epoch.  Returns False once the split has been
+        re-enqueued more than ``max_reexecutions`` times (the caller fails
+        the job)."""
+        with self._lock:
+            e = self.epochs.get(split_id, 0) + 1
+            self.epochs[split_id] = e
+            self.claimed.pop(split_id, None)
+            self.reexecutions += 1
+            return e <= max_reexecutions
+
+    def mark_dead(self, host: int) -> None:
+        """A host died mid-job: its claimed splits become stealable.  Raises
+        ``CoverageError`` when some unfinished split just lost its last
+        live replica."""
+        with self._lock:
+            self.dead.add(host)
+            lost = self._not_covered()
+        if lost:
+            raise CoverageError(
+                f"host {host} died; split(s) {sorted(lost)} have no live "
+                f"replica left"
+            )
+
     def all_done(self) -> bool:
         return len(self.done) == self.p.n_splits
 
-    def coverage_possible(self) -> bool:
-        """True iff every split has at least one live replica host."""
+    def _not_covered(self) -> Set[int]:
+        """Unfinished splits with no live replica (callers hold _lock or
+        tolerate a racy read)."""
         live = set(range(self.p.n_hosts)) - self.dead
-        return all(
-            any(h in live for h in self.p.replicas(s)) for s in range(self.p.n_splits)
-        )
+        return {
+            s
+            for s in range(self.p.n_splits)
+            if s not in self.done
+            and not any(h in live for h in self.p.replicas(s))
+        }
+
+    def coverage_possible(self) -> bool:
+        """True iff every UNFINISHED split still has a live replica host —
+        consulting the current dead set, which mid-job deaths grow."""
+        with self._lock:
+            return not self._not_covered()

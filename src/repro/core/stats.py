@@ -51,11 +51,13 @@ bound the stats-tag stream the same way.
 from __future__ import annotations
 
 import hashlib
+import struct
 from dataclasses import dataclass
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .checksum import ChecksumPage
 from .predicate import ColumnInfo
 from .schema import ColumnType
 from .varcodec import (
@@ -86,6 +88,11 @@ _FLAG_MINMAX = 1
 
 # v3.1 trailing-section ids + per-block stats tags
 SEC_BLOCK_STATS = 1
+# v3.2: per-block CRCs + header/file checksums (checksum.py).  MUST be the
+# LAST section of the page — the writer patches the two trailing CRC
+# fields in place after assembling the full file, and the verifier
+# excludes exactly the file's last 8 bytes from meta_crc/file_crc.
+SEC_CHECKSUMS = 2
 TAG_NONE = 0
 TAG_BLOOM = 1
 TAG_VALUES = 2
@@ -288,13 +295,14 @@ class StatsCollector:
         self.zone_maps.append(ZoneMap(first, n, 0, int(n_distinct), vmin, vmax))
         self.block_extras.append(extra)
 
-    def finish(self) -> bytes:
-        """Serialize the stats page (empty bytes when nothing collected)."""
+    def finish(self, checksums: Optional[ChecksumPage] = None) -> bytes:
+        """Serialize the stats page (empty bytes when nothing collected
+        and no checksums were supplied)."""
         bloom = None
         if self._bloom_values:
             bloom = BloomFilter.from_values(sorted(self._bloom_values, key=_raw))
         return encode_stats_page(self.typ, self.zone_maps, bloom,
-                                 self.block_extras)
+                                 self.block_extras, checksums)
 
     def summary(self) -> Optional[dict]:
         """JSON-safe zone coverage for ``_meta.json``: blocks with stats
@@ -363,6 +371,21 @@ def _meta_bound(v: Any) -> Any:
 #     [u8 TAG_BLOOM][uvarint n_bits][u8 k][raw bits]   per-block bloom
 #     [u8 TAG_VALUES][uvarint V][V cells]              exact value set
 #     [u8 TAG_KEYS][uvarint K][K * (uvarint len, utf8)] map-key presence
+#
+# v3.2 (checksums; rides the same self-describing section framing, so v3
+# and v3.1 readers skip it by length and read the file bit-identically):
+#
+#   SEC_CHECKSUMS payload := [u8 algo][uvarint n_blocks]
+#                            [n_blocks x u32le block_crc]
+#                            [u32le meta_crc][u32le file_crc]
+#   It is always the LAST section (the page is the file's tail), so
+#   meta_crc/file_crc are the file's final 8 bytes — patched in place by
+#   the writer after the rest of the file is byte-final.  The checksum
+#   block grid is the COMPRESSED-BLOCK frame grid for plain/cblock kinds
+#   (it can be denser than the zone-map grid and exists even for columns
+#   with no zone maps at all) and a single whole-body block for the
+#   monolithic kinds — hence its own n_blocks count.  A page may carry
+#   checksums with ZERO zone maps (n_blocks = 0 up top).
 # ---------------------------------------------------------------------------
 
 BlockExtra = Optional[Tuple[str, Any]]
@@ -443,13 +466,27 @@ def _decode_block_stats(
     return extras
 
 
+def _encode_checksums(checks: ChecksumPage) -> bytes:
+    out = bytearray()
+    out.append(checks.algo)
+    write_uvarint(out, len(checks.block_crcs))
+    for c in checks.block_crcs:
+        out += struct.pack("<I", c)
+    out += struct.pack("<II", checks.meta_crc, checks.file_crc)
+    return bytes(out)
+
+
 def encode_stats_page(
     typ: ColumnType,
     zone_maps: List[ZoneMap],
     bloom: Optional[BloomFilter],
     block_extras: Optional[List[BlockExtra]] = None,
+    checksums: Optional[ChecksumPage] = None,
 ) -> bytes:
-    if not zone_maps:
+    # checksums force a page even for columns with no zone maps at all
+    # (kinds outside STATS_KINDS, e.g. array token columns): zero zone-map
+    # blocks, no bloom, sections only.
+    if not zone_maps and checksums is None:
         return b""
     stats_typ = typ.value if typ.kind == "map" else typ
     out = bytearray()
@@ -469,27 +506,57 @@ def encode_stats_page(
         _encode_bloom(out, bloom)
     else:
         out.append(0)
-    # v3.1 ext: emitted only when some block actually carries a stats-tag,
-    # so files without per-block stats stay byte-identical to v3 output
+    # trailing sections: emitted only when some section has content, so
+    # plain-v3 output stays byte-identical.  SEC_CHECKSUMS goes LAST (its
+    # two CRC fields must be the file's final 8 bytes — the writer patches
+    # them after assembly).
+    sections: List[Tuple[int, bytes]] = []
     if block_extras is not None and any(e is not None for e in block_extras):
         assert len(block_extras) == len(zone_maps), "extras must tile blocks"
-        out.append(1)  # n_sections
-        payload = _encode_block_stats(stats_typ, block_extras)
-        out.append(SEC_BLOCK_STATS)
-        write_uvarint(out, len(payload))
-        out += payload
+        sections.append(
+            (SEC_BLOCK_STATS, _encode_block_stats(stats_typ, block_extras))
+        )
+    if checksums is not None:
+        sections.append((SEC_CHECKSUMS, _encode_checksums(checksums)))
+    if sections:
+        out.append(len(sections))
+        for sec_id, payload in sections:
+            out.append(sec_id)
+            write_uvarint(out, len(payload))
+            out += payload
     return bytes(out)
+
+
+def _decode_checksums(data: bytes, off: int) -> ChecksumPage:
+    algo = data[off]
+    off += 1
+    n_blocks, off = read_uvarint(data, off)
+    crcs = [
+        struct.unpack_from("<I", data, off + 4 * i)[0] for i in range(n_blocks)
+    ]
+    off += 4 * n_blocks
+    meta_crc, file_crc = struct.unpack_from("<II", data, off)
+    return ChecksumPage(algo, crcs, meta_crc, file_crc, fields_off=off)
 
 
 def decode_stats_page(
     typ: ColumnType, data: bytes, off: int
-) -> Tuple[List[ZoneMap], Optional[BloomFilter], Optional[List[BlockExtra]]]:
-    """Parse a stats page -> ``(zone_maps, file_bloom, block_extras)``.
+) -> Tuple[
+    List[ZoneMap],
+    Optional[BloomFilter],
+    Optional[List[BlockExtra]],
+    Optional[ChecksumPage],
+]:
+    """Parse a stats page -> ``(zone_maps, file_bloom, block_extras,
+    checksums)``.
 
     ``block_extras`` is None when the page has no v3.1 extension (plain v3
-    files); otherwise one entry per zone-map block.  Unknown trailing
-    section ids are skipped by their length — the forward-compatibility
-    contract of the v3.1 framing.
+    files); otherwise one entry per zone-map block.  ``checksums`` is None
+    below v3.2.  Unknown trailing section ids are skipped by their length
+    — the forward-compatibility contract of the v3.1 framing.  When
+    ``data`` is the whole file and ``off`` an absolute offset (how
+    ``ColumnFileReader`` calls this), ``checksums.fields_off`` is the
+    absolute offset of the trailing CRC fields.
     """
     stats_typ = typ.value if typ.kind == "map" else typ
     n_blocks, off = read_uvarint(data, off)
@@ -511,8 +578,9 @@ def decode_stats_page(
         bloom, off = _decode_bloom(data, off + 1)
     else:
         off += 1
-    # a v3 reader stops here; the v3.1 extension is whatever follows
+    # a v3 reader stops here; the v3.1+ extension is whatever follows
     extras: Optional[List[BlockExtra]] = None
+    checks: Optional[ChecksumPage] = None
     if off < len(data):
         n_sections = data[off]
         off += 1
@@ -521,8 +589,10 @@ def decode_stats_page(
             plen, poff = read_uvarint(data, off + 1)
             if sec_id == SEC_BLOCK_STATS:
                 extras = _decode_block_stats(typ, data, poff, n_blocks)
+            elif sec_id == SEC_CHECKSUMS:
+                checks = _decode_checksums(data, poff)
             off = poff + plen
-    return zone_maps, bloom, extras
+    return zone_maps, bloom, extras, checks
 
 
 def merge_zone_maps(zone_maps: Sequence[ZoneMap]) -> Optional[ZoneMap]:

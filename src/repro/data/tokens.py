@@ -161,13 +161,26 @@ class TokenSplit:
     dict page (``dict_page()``); packed words for a batch come from ONE
     ``read_packed`` gather.  No sidecar files, no private dictionary."""
 
-    def __init__(self, split_dir: str, schema: Schema):
+    def __init__(
+        self,
+        split_dir: str,
+        schema: Schema,
+        *,
+        split_id=None,
+        placement=None,
+        fault_plan=None,
+        policy=None,
+    ):
         self.split_dir = split_dir
         self.legacy = schema.type_of("tokens").kind == "bytes"
         from ..core.cif import SplitReader
 
         # projection pushdown: meta.col is never opened for training
-        self.reader = SplitReader(split_dir, schema, ["tokens", "n_tokens", "loss_mask"])
+        self.reader = SplitReader(
+            split_dir, schema, ["tokens", "n_tokens", "loss_mask"],
+            split_id=split_id, placement=placement, fault_plan=fault_plan,
+            policy=policy,
+        )
         if self.legacy:
             self.dictionary = np.load(os.path.join(split_dir, "tokens.dict.npy"))
             with open(os.path.join(split_dir, "tokens.meta.json")) as f:
@@ -263,8 +276,13 @@ class TokenSplit:
 
 
 class TokenCorpus:
-    def __init__(self, root: str):
+    def __init__(self, root: str, *, placement=None, fault_plan=None,
+                 failure_policy=None):
         self.root = root
+        # fault-tolerant read wiring (PR 6), threaded into every TokenSplit
+        self.placement = placement
+        self.fault_plan = fault_plan
+        self.failure_policy = failure_policy
         # the dataset's own schema.json tells new (ARRAY tokens) from legacy
         # (BYTES tokens + sidecar) corpora
         try:
@@ -284,7 +302,10 @@ class TokenCorpus:
 
     def open_split(self, split_id: int) -> TokenSplit:
         d = dict(self.splits)[split_id]
-        return TokenSplit(d, self.schema)
+        return TokenSplit(
+            d, self.schema, split_id=split_id, placement=self.placement,
+            fault_plan=self.fault_plan, policy=self.failure_policy,
+        )
 
     def split_ids(self) -> List[int]:
         return [i for i, _ in self.splits]

@@ -53,33 +53,63 @@ class PromptStore:
     ``bitunpack``/``dict_decode`` kernels instead of host shifts.  Splits
     are cached; a split whose forward-only readers are already past the
     lowest requested id is reopened (same policy as the training pipeline).
+
+    Fault tolerance (PR 6): with a ``policy``, a fetch that hits corruption
+    or an IO error drops the cached split, bumps its execution epoch (fresh
+    read-attempt numbers against the corpus's fault plan), and reopens —
+    the serving analog of the scan engine's re-enqueue.  Past
+    ``max_reexecutions`` epochs the ``SplitRetryExhausted`` surfaces to the
+    engine (production would fail the request, not the server).
     """
 
-    def __init__(self, corpus, max_prompt: int = 32, decode: str = "np"):
+    def __init__(self, corpus, max_prompt: int = 32, decode: str = "np",
+                 policy=None):
         self.corpus = corpus
         self.max_prompt = max_prompt
         self.decode = decode
+        self.policy = policy
         self._open: Dict[int, Any] = {}
+        self._epochs: Dict[int, int] = {}
 
     def _split(self, sid: int):
         sp = self._open.get(sid)
         if sp is None:
-            sp = self._open[sid] = self.corpus.open_split(sid)
+            from ..core.faults import execution_epoch
+
+            with execution_epoch(self._epochs.get(sid, 0)):
+                sp = self._open[sid] = self.corpus.open_split(sid)
         return sp
 
     def fetch(self, refs: Sequence[Tuple[int, int]]) -> List[List[int]]:
         """Resolve refs to prompts; one columnar batch read per split."""
+        from ..core.errors import CorruptFileError, SplitRetryExhausted
+        from ..core.faults import execution_epoch
+
         by_split: Dict[int, List[Tuple[int, int]]] = {}
         for slot, (sid, rid) in enumerate(refs):
             by_split.setdefault(sid, []).append((rid, slot))
         out: List[Optional[List[int]]] = [None] * len(refs)
         for sid, rid_slots in by_split.items():
             uniq = sorted({r for r, _ in rid_slots})
-            sp = self._split(sid)
-            if sp.position > uniq[0]:  # forward-only readers: reopen
-                del self._open[sid]
-                sp = self._split(sid)
-            toks, mask = sp.record_batch(uniq, decode=self.decode)
+            while True:
+                try:
+                    sp = self._split(sid)
+                    if sp.position > uniq[0]:  # forward-only readers: reopen
+                        del self._open[sid]
+                        sp = self._split(sid)
+                    with execution_epoch(self._epochs.get(sid, 0)):
+                        toks, mask = sp.record_batch(uniq, decode=self.decode)
+                    break
+                except (SplitRetryExhausted, CorruptFileError, OSError):
+                    # retry via the scan engine's re-execution policy: new
+                    # epoch, fresh split, fresh attempt numbers
+                    cap = (self.policy.max_reexecutions
+                           if self.policy is not None else 0)
+                    e = self._epochs.get(sid, 0) + 1
+                    if e > cap:
+                        raise
+                    self._epochs[sid] = e
+                    self._open.pop(sid, None)
             row_of = {r: i for i, r in enumerate(uniq)}
             for rid, slot in rid_slots:
                 row = row_of[rid]

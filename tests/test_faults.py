@@ -1,0 +1,423 @@
+"""Fault-tolerant scan engine (PR 6): block checksums, graceful container
+errors, deterministic fault injection, replica failover, split re-execution,
+and mid-job host death.
+
+The load-bearing invariant throughout: under any seeded FaultPlan that
+leaves every split at least one surviving replica, job OUTPUT, remote_reads,
+and the pre-existing ScanStats fields are bit-identical to a no-fault serial
+run — and the new failure counters are themselves deterministic."""
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    CIFReader, COFWriter, ColumnFileReader, ColumnFileWriter, ColumnFormat,
+    ColumnType, BlockCorruptionError, CorruptFileError, CoverageError,
+    FailurePolicy, FaultPlan, Placement, SplitRetryExhausted, WorkQueue,
+    read_schema, urlinfo_schema,
+)
+from repro.core.faults import ATTEMPT_STRIDE
+from repro.core.mapreduce import (
+    fig1_map_batch, fig1_reduce, fig1_where, run_job,
+)
+from conftest import make_crawl_records
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+V32_TYPES = {
+    "plain_int64": ColumnType("int64"),
+    "cblock_zlib_string": ColumnType("string"),
+    "skiplist_string": ColumnType("string"),
+    "dcsl_map": ColumnType("map", value=ColumnType("string")),
+}
+
+# tests never sleep: backoff is simulated (real_sleep=False is the default)
+POLICY = FailurePolicy()
+
+
+def _fix(name):
+    with open(os.path.join(FIXTURES, f"v32_{name}.col"), "rb") as f:
+        return f.read()
+
+
+def _as_list(vals):
+    return vals.tolist() if hasattr(vals, "tolist") else list(vals)
+
+
+# -- v3.2 fixtures in the compat matrix ---------------------------------------
+
+
+def test_v32_fixtures_read_verify_and_match_expected():
+    with open(os.path.join(FIXTURES, "v32_expected.json")) as f:
+        exp = json.load(f)
+    for name, typ in V32_TYPES.items():
+        raw = _fix(name)
+        r = ColumnFileReader(raw, typ)
+        assert r.version == 3 and r.format_version == "3.2"
+        assert r.checksum == "crc32c"
+        assert r.verify_checksums() == "crc32c"
+        assert _as_list(r.read_range(0, r.n)) == exp[name], name
+
+
+def test_old_files_report_absent_checksum():
+    for fname, typ in [
+        ("v3_plain_int64.col", ColumnType("int64")),
+        ("v31_cblock_zlib_string.col", ColumnType("string")),
+        ("prepr_plain_int64.col", ColumnType("int64")),
+    ]:
+        with open(os.path.join(FIXTURES, fname), "rb") as f:
+            r = ColumnFileReader(f.read(), typ)
+        assert r.checksum == "absent"
+        assert r.verify_checksums() == "absent"  # audit is a no-op, not a crash
+
+
+def test_fresh_files_carry_checksums_for_every_kind():
+    cases = [
+        (ColumnType("int64"), ColumnFormat("plain", enc_block=32),
+         list(range(100))),
+        (ColumnType("string"), ColumnFormat("cblock", codec="zlib",
+                                            block_records=32),
+         [f"v{i % 7}" for i in range(100)]),
+        (ColumnType("string"), ColumnFormat("skiplist"),
+         [f"url/{i}" for i in range(100)]),
+        (ColumnType("map", value=ColumnType("string")), ColumnFormat("dcsl"),
+         [{"k": str(i % 5)} for i in range(100)]),
+    ]
+    for typ, fmt, vals in cases:
+        w = ColumnFileWriter(typ, fmt)
+        for v in vals:
+            w.append(v)
+        r = ColumnFileReader(w.finish(), typ)
+        assert r.format_version == "3.2" and r.checksum == "crc32c"
+        assert r.verify_checksums() == "crc32c"
+        assert _as_list(r.read_range(0, r.n)) == vals
+
+
+def test_verification_leaves_read_counters_untouched():
+    """Lazy verification must not perturb the PR 1-5 instrumentation:
+    counters with verify on == counters with verify off, bit for bit."""
+    raw = _fix("cblock_zlib_string")
+    typ = V32_TYPES["cblock_zlib_string"]
+    r_on = ColumnFileReader(raw, typ, verify=True)
+    r_off = ColumnFileReader(raw, typ, verify=False)
+    assert _as_list(r_on.read_range(0, r_on.n)) == \
+        _as_list(r_off.read_range(0, r_off.n))
+    assert vars(r_on.counters) == vars(r_off.counters)
+
+
+# -- byte-flip property: detect or be bit-identical, never silently wrong ----
+
+
+@pytest.mark.parametrize("name", sorted(V32_TYPES))
+def test_single_byte_flip_never_silently_wrong(name):
+    """Flip ONE byte at deterministic offsets across the whole file.  The
+    reader must either raise a typed corruption error (at open or on first
+    touch) or return bit-identical data (the flip landed on a byte only
+    covered by the whole-file CRC, which lazy reads don't consult) — a
+    silently different value list is the one forbidden outcome."""
+    import random
+
+    raw = _fix(name)
+    typ = V32_TYPES[name]
+    r0 = ColumnFileReader(raw, typ)
+    truth = _as_list(r0.read_range(0, r0.n))
+    rnd = random.Random(20260809)
+    offsets = sorted(rnd.sample(range(len(raw)), 48))
+    detected = 0
+    for off in offsets:
+        bad = bytearray(raw)
+        bad[off] ^= 1 + rnd.randrange(255)
+        try:
+            r = ColumnFileReader(bytes(bad), typ)
+            got = _as_list(r.read_range(0, r.n))
+        except (CorruptFileError, OSError) as e:
+            assert isinstance(e, (BlockCorruptionError, CorruptFileError))
+            detected += 1
+            continue
+        assert got == truth, f"silent corruption at offset {off}"
+    # the grid really bites: most flips in a dense file are detected
+    assert detected > len(offsets) // 2, (name, detected)
+
+
+def test_full_audit_catches_what_lazy_reads_may_not():
+    """verify_checksums() walks meta + every block + the whole-file CRC, so
+    ANY single-byte flip is detected, including in never-read regions."""
+    import random
+
+    raw = _fix("plain_int64")
+    rnd = random.Random(7)
+    for off in sorted(rnd.sample(range(len(raw)), 32)):
+        bad = bytearray(raw)
+        bad[off] ^= 0x40
+        with pytest.raises(CorruptFileError):
+            r = ColumnFileReader(bytes(bad), ColumnType("int64"))
+            r.verify_checksums()
+
+
+# -- graceful container errors (satellite a) ----------------------------------
+
+
+def test_truncated_column_file_raises_corrupt_file_error():
+    raw = _fix("skiplist_string")
+    for cut in (0, 3, 10, len(raw) // 2, len(raw) - 5):
+        with pytest.raises(CorruptFileError) as ei:
+            ColumnFileReader(raw[:cut], ColumnType("string"),
+                             path="/data/x.col")
+        assert ei.value.path == "/data/x.col"
+        assert ei.value.offset >= 0  # names where parsing fell off the end
+
+
+def test_truncated_meta_and_schema_raise_corrupt_file_error(tmp_path):
+    root = str(tmp_path / "d")
+    w = COFWriter(root, urlinfo_schema(), split_records=64)
+    w.append_all(make_crawl_records(100))
+    w.close()
+    # truncate schema.json mid-token
+    spath = os.path.join(root, "schema.json")
+    blob = open(spath, "rb").read()
+    with open(spath, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(CorruptFileError) as ei:
+        read_schema(root)
+    assert "schema.json" in ei.value.path and ei.value.offset >= 0
+    with open(spath, "wb") as f:
+        f.write(blob)  # restore
+    # truncate a split's _meta.json
+    split0 = CIFReader(root).splits()[0][1]
+    mpath = os.path.join(split0, "_meta.json")
+    mblob = open(mpath, "rb").read()
+    with open(mpath, "wb") as f:
+        f.write(mblob[: len(mblob) // 2])
+    with pytest.raises(CorruptFileError) as ei:
+        CIFReader(root, columns=["url"]).open_split(split0)
+    assert "_meta.json" in ei.value.path
+
+
+# -- WorkQueue mid-job death (satellite b) ------------------------------------
+
+
+def test_workqueue_mark_dead_makes_claims_stealable():
+    p = Placement(n_splits=4, n_hosts=3, replication=2)
+    wq = WorkQueue(p)
+    s = wq.next_split(0)
+    assert wq.claimed[s] == 0
+    wq.mark_dead(0)
+    # a replica holder steals the in-flight split; the steal is counted
+    thief = next(h for h in p.replicas(s) if h != 0)
+    got = set()
+    while (n := wq.next_split(thief)) is not None:
+        got.add(n)
+        wq.complete(n)
+    assert s in got and wq.reexecutions == 1
+
+
+def test_workqueue_mark_dead_raises_when_last_replica_lost():
+    p = Placement(n_splits=3, n_hosts=3, replication=1)  # one copy per split
+    assert len({p.primary(s) for s in range(3)}) == 3  # round-robin: distinct
+    wq = WorkQueue(p)
+    wq.complete(0)
+    wq.mark_dead(p.primary(0))  # its only split already finished: fine
+    assert wq.coverage_possible()
+    with pytest.raises(CoverageError):
+        wq.mark_dead(p.primary(1))  # split 1 just lost its only copy
+    assert not wq.coverage_possible()
+
+
+def test_workqueue_requeue_bumps_epoch_and_caps():
+    p = Placement(n_splits=2, n_hosts=2)
+    wq = WorkQueue(p)
+    s = wq.next_split(0)
+    assert wq.epoch(s) == 0
+    assert wq.requeue(s, max_reexecutions=2) and wq.epoch(s) == 1
+    assert s in {wq.next_split(0)}  # claimable again
+    assert wq.requeue(s, max_reexecutions=2) and wq.epoch(s) == 2
+    assert not wq.requeue(s, max_reexecutions=2)  # third strike: caller fails
+    assert wq.reexecutions == 3
+
+
+# -- replica failover keeps jobs bit-identical (tentpole) ---------------------
+
+
+N_SPLITS, N_HOSTS = 6, 4
+
+
+@pytest.fixture(scope="module")
+def crawl(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("faults-crawl") / "d")
+    records = make_crawl_records(600)
+    w = COFWriter(root, urlinfo_schema(),
+                  formats={"metadata": ColumnFormat("dcsl"),
+                           "url": ColumnFormat("skiplist")},
+                  split_records=100)
+    w.append_all(records)
+    w.close()
+    return root
+
+
+def _pre_existing(stats):
+    """The PR 1-5 ScanStats fields — the ones faults must not move."""
+    return {k: getattr(stats, k) for k in (
+        "bytes_io", "bytes_touched", "bytes_decoded", "cells_decoded",
+        "cells_skipped", "blocks_decompressed", "records_scanned",
+        "files_opened", "blocks_pruned_stats", "rows_short_circuited")}
+
+
+def _failure_counters(stats):
+    return {k: getattr(stats, k) for k in (
+        "checksum_failures", "read_retries", "replica_failovers",
+        "splits_reexecuted")}
+
+
+def _run(root, plan=None, policy=None, n_workers=1, dead_hosts=None):
+    p = Placement(N_SPLITS, N_HOSTS)
+    r = CIFReader(root, columns=["url", "metadata"],
+                  fault_plan=plan, failure_policy=policy)
+    ids, ob = r.job_inputs(batch_size=64, where=fig1_where(), placement=p)
+    res = run_job(ids, reduce_fn=fig1_reduce, n_hosts=N_HOSTS, placement=p,
+                  dead_hosts=dead_hosts, open_split_batches=ob,
+                  map_batch_fn=fig1_map_batch(), n_workers=n_workers,
+                  fault_plan=plan, failure_policy=policy, scan_stats=r.stats)
+    return res, r.stats, p
+
+
+def test_corrupt_replica_fails_over_bit_identically(crawl):
+    base, base_stats, p = _run(crawl)
+    # damage the PRIMARY replica's copy of two splits plus a persistent IO
+    # error on a third — every split keeps >= 1 clean replica
+    plan = FaultPlan(
+        corrupt_blocks=frozenset({(p.primary(1), 1, "url", 0),
+                                  (p.primary(4), 4, "metadata", 0)}),
+        io_errors=frozenset({(p.primary(2), 2, "url")}),
+    )
+    for n_workers in (1, 4):
+        res, stats, _ = _run(crawl, plan, POLICY, n_workers=n_workers)
+        assert res.output == base.output
+        assert res.remote_reads == base.remote_reads == 0
+        assert _pre_existing(stats) == _pre_existing(base_stats)
+        fc = _failure_counters(stats)
+        assert fc["checksum_failures"] >= 2  # both corrupt blocks detected
+        assert fc["read_retries"] >= 3 and fc["replica_failovers"] >= 3
+        assert fc["splits_reexecuted"] == 0  # in-read failover, no requeue
+        assert res.splits_reexecuted == 0 and res.hosts_failed == 0
+    # and the counters themselves are deterministic across reruns/schedules
+    s1 = _failure_counters(_run(crawl, plan, POLICY, n_workers=1)[1])
+    s4 = _failure_counters(_run(crawl, plan, POLICY, n_workers=4)[1])
+    assert s1 == s4 == _failure_counters(stats)
+
+
+def test_rate_based_transient_faults_deterministic(crawl):
+    base, base_stats, _ = _run(crawl)
+    plan = FaultPlan(seed=3, io_error_rate=0.25, latency_rate=0.5,
+                     latency_s=0.005)
+    res1, st1, _ = _run(crawl, plan, POLICY, n_workers=1)
+    res2, st2, _ = _run(crawl, plan, POLICY, n_workers=4)
+    assert res1.output == res2.output == base.output
+    assert _pre_existing(st1) == _pre_existing(base_stats)
+    assert _failure_counters(st1) == _failure_counters(st2)
+    assert st1.read_retries > 0  # the rate actually fired
+    assert st1.simulated_delay_s > 0.0  # latency simulated, never slept
+
+
+def test_retry_exhaustion_requeues_split_with_fresh_epoch(crawl):
+    base, base_stats, _ = _run(crawl)
+    # every replica of split 2's url column is damaged while attempt <
+    # threshold; threshold > max_attempts forces exhaustion + re-enqueue,
+    # and the re-execution's attempts (>= ATTEMPT_STRIDE) read clean
+    threshold = POLICY.max_attempts + 3
+    assert threshold < ATTEMPT_STRIDE
+    plan = FaultPlan(corrupt_until={(2, "url"): threshold})
+    for n_workers in (1, 4):
+        res, stats, _ = _run(crawl, plan, POLICY, n_workers=n_workers)
+        assert res.output == base.output
+        assert res.splits_reexecuted == 1
+        assert stats.splits_reexecuted == 1
+        assert _pre_existing(stats) == _pre_existing(base_stats)
+
+
+def test_unrecoverable_corruption_fails_the_job(crawl):
+    # corrupt beyond the re-execution budget: epochs 0..max_reexecutions
+    # all read damaged -> the job surfaces the failure instead of looping
+    plan = FaultPlan(corrupt_until={
+        (0, "url"): (POLICY.max_reexecutions + 1) * ATTEMPT_STRIDE})
+    with pytest.raises((SplitRetryExhausted, CorruptFileError)):
+        _run(crawl, plan, POLICY)
+
+
+def test_midjob_host_death_steals_in_flight_split(crawl):
+    base, base_stats, p = _run(crawl)
+    victim = p.primary(0)
+    plan = FaultPlan(fail_at={victim: 1})  # dies holding its first claim
+    for n_workers in (1, 4):
+        res, stats, _ = _run(crawl, plan, POLICY, n_workers=n_workers)
+        assert res.output == base.output
+        assert res.hosts_failed == 1
+        assert res.splits_reexecuted == 1  # the stolen in-flight split
+        assert res.remote_reads == 0  # thief held a replica (CPP invariant)
+        assert victim not in set(res.host_of_split.values())
+        assert _pre_existing(stats) == _pre_existing(base_stats)
+
+
+def test_start_dead_hosts_via_fail_at_zero(crawl):
+    base, _, p = _run(crawl)
+    plan = FaultPlan(fail_at={p.primary(3): 0})  # k <= 0: dead at start
+    res, _, _ = _run(crawl, plan, POLICY)
+    assert res.output == base.output
+    assert res.hosts_failed == 0  # start-time deaths aren't MID-job failures
+    assert res.splits_reexecuted == 0  # never claimed, so never re-executed
+
+
+def test_death_plus_corruption_compose(crawl):
+    base, base_stats, p = _run(crawl)
+    victim = p.primary(5)
+    plan = FaultPlan(
+        fail_at={victim: 1},
+        corrupt_blocks=frozenset({(p.primary(1), 1, "url", 0)}),
+    )
+    outs, counters = [], []
+    for n_workers in (1, 4):
+        res, stats, _ = _run(crawl, plan, POLICY, n_workers=n_workers)
+        outs.append(res.output)
+        counters.append(_failure_counters(stats))
+        assert res.hosts_failed == 1 and res.splits_reexecuted == 1
+        assert _pre_existing(stats) == _pre_existing(base_stats)
+    assert outs[0] == outs[1] == base.output
+    assert counters[0] == counters[1]
+
+
+# -- serving-path recovery (PromptStore) --------------------------------------
+
+
+@pytest.fixture(scope="module")
+def token_root(tmp_path_factory):
+    from repro.data.tokens import TokenCorpusWriter
+    from repro.launch.load_data import synth_token_docs
+
+    root = str(tmp_path_factory.mktemp("faults-corpus"))
+    w = TokenCorpusWriter(root, seq_len=32, split_records=16)
+    for toks, meta in synth_token_docs(40, vocab=120, seed=3):
+        w.add_document(toks % 50 + 1, meta)
+    w.close()
+    return root
+
+
+def test_prompt_store_reexecutes_through_corruption(token_root):
+    from repro.data.tokens import TokenCorpus
+    from repro.serving.engine import PromptStore
+
+    clean = PromptStore(TokenCorpus(token_root), max_prompt=5)
+    refs = [(0, 3), (1, 7), (0, 9), (1, 2)]
+    truth = clean.fetch(refs)
+
+    threshold = POLICY.max_attempts + 2  # exhaust epoch 0, clean at epoch 1
+    plan = FaultPlan(corrupt_until={(0, "tokens"): threshold})
+    corpus = TokenCorpus(token_root, fault_plan=plan, failure_policy=POLICY)
+    store = PromptStore(corpus, max_prompt=5, policy=POLICY)
+    assert store.fetch(refs) == truth
+
+    # without a policy the store has no re-execution budget: it surfaces
+    strict = PromptStore(
+        TokenCorpus(token_root, fault_plan=plan, failure_policy=POLICY),
+        max_prompt=5)
+    with pytest.raises((SplitRetryExhausted, CorruptFileError)):
+        strict.fetch(refs)

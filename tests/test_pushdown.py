@@ -213,7 +213,7 @@ def test_zone_maps_emitted_for_every_stats_kind(rnd):
     (zm,) = r.block_stats()
     assert (zm.first, zm.count, zm.vmin, zm.vmax) == (0, 100, None, None)
     assert r.block_extras == [("keys", frozenset({"k"}))]
-    assert r.format_version == "3.1"
+    assert r.format_version == "3.2"  # fresh files also carry checksums
 
 
 def test_prune_is_advisory_and_decodes_nothing(rnd):
@@ -617,7 +617,7 @@ def test_cblock_stats_tags_prune_without_decompression():
     vals = [f"type-{(i // 256) % 4}" for i in range(2048)]  # clustered
     raw, _ = _build(STRING(), ColumnFormat("cblock", codec="zlib"), vals)
     r = ColumnFileReader(raw, STRING())
-    assert r.format_version == "3.1"
+    assert r.format_version == "3.2" and r.block_extras is not None
     assert all(e is not None for e in r.block_extras)
     assert r.prune(col("s") == "type-9").ranges == []
     assert r.prune(col("s").contains("ype-9")).ranges == []
@@ -648,7 +648,7 @@ def test_v31_footer_ignored_bit_compatibly():
     vals = [f"t{i % 3}" for i in range(1024)]
     raw, w = _build(STRING(), ColumnFormat("cblock", codec="zlib"), vals)
     r = ColumnFileReader(raw, STRING())
-    assert r.version == 3 and r.format_version == "3.1"
+    assert r.version == 3 and r.format_version == "3.2"
     assert _as_list(r.read_range(0, 1024)) == vals
     assert [z.count for z in r.block_stats()] == [256] * 4
 
@@ -660,10 +660,10 @@ def test_v31_footer_ignored_bit_compatibly():
                                  zc.block_extras)
     assert page_v31[: len(page_v3)] == page_v3
     # a v3-style parse (zone maps + bloom slot) reads the prefix unchanged
-    zms, bf, extras = decode_stats_page(STRING(), page_v3, 0)
+    zms, bf, extras, _ = decode_stats_page(STRING(), page_v3, 0)
     assert extras is None and len(zms) == 4
     # the v3.1 parse finds the per-block stats-tags
-    zms2, _, extras2 = decode_stats_page(STRING(), page_v31, 0)
+    zms2, _, extras2, _ = decode_stats_page(STRING(), page_v31, 0)
     assert [z.count for z in zms2] == [z.count for z in zms]
     assert extras2 is not None and all(e is not None for e in extras2)
 
@@ -676,7 +676,7 @@ def test_v31_footer_ignored_bit_compatibly():
     write_uvarint(future, 5)
     future += b"hello"
     future += known_ext
-    _, _, extras3 = decode_stats_page(
+    _, _, extras3, _ = decode_stats_page(
         STRING(), page_v3 + bytes(future), 0)
     assert extras3 == extras2
 
