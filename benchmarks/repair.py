@@ -1,0 +1,247 @@
+"""repair — commit-protocol overhead on the clean path + scrub/heal cost.
+
+Three claims, measured:
+
+  * **Atomic commits are (nearly) free.**  The v3.2 writer stages each
+    split in a hidden building directory and publishes it with a commit
+    manifest + one atomic rename.  The 2% budget is asserted on a DIRECT
+    measurement of the protocol's extra work — per split: whole-file
+    CRCs of every column payload, the manifest JSON, the sidecar
+    renames, the directory publish — as a fraction of the committed
+    write path, because this container's run-to-run noise (individual
+    A/B pair ratios span ±40%) cannot resolve a <2% effect end-to-end
+    in any sane time budget.  The interleaved ``commit=False`` A/B arms
+    are still built and reported (fsyncs off in both, so the protocol
+    and not fsync latency is compared), with a coarse 15% tripwire that
+    catches a structurally broken commit path (accidental double write,
+    fsync on the cold path) without flaking on noise.  The fsync-on arm
+    is reported separately — durability's price is the device's, not
+    the protocol's.
+  * **Scrub cost is a read pass.**  ``fsck`` walks every committed copy
+    and whole-file-CRCs it against the manifest; throughput is reported
+    in MB/s over the corpus's on-disk bytes.
+  * **Repair restores coverage.**  With one replica of a split corrupt
+    and the only other replica unreachable, the job dies with
+    ``CoverageError``; after ``repair()`` re-replicates the damaged copy
+    from the clean one, the same doomed fault plan completes with output
+    bit-identical to the clean run.
+
+Emits ``BENCH_repair.json``:
+
+    {"results": {"write_legacy_s": .., "write_commit_s": ..,
+                 "commit_overhead_pct": .., "protocol_ops_s": ..,
+                 "protocol_overhead_pct": .., "write_commit_fsync_s": ..,
+                 "fsck_s": .., "fsck_mb_per_s": .., "repair_s": ..,
+                 "copies_scanned": .., "copies_repaired": ..}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core import (
+    CIFReader, COFWriter, ColumnFormat, CoverageError, FailurePolicy,
+    FaultPlan, Placement, fsck, repair, run_job,
+)
+
+from .common import Csv, micro_records, micro_schema, timeit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_repair.json")
+
+N_SPLITS, N_HOSTS = 8, 4
+FORMATS = {"str0": ColumnFormat("cblock", codec="zlib"),
+           "map0": ColumnFormat("dcsl")}
+
+
+def _build(root: str, records, n: int, *, commit: bool, fsync: bool) -> None:
+    w = COFWriter(root, micro_schema(), formats=FORMATS,
+                  split_records=-(-n // N_SPLITS),  # ceil: exactly N_SPLITS
+                  fsync=fsync, commit=commit)
+    w.append_all(records)
+    w.close()
+
+
+def _read_payloads(root: str):
+    """Column payloads per split, read once OUTSIDE the timed region —
+    the real writer holds these bytes in memory at commit time."""
+    from repro.core import list_splits
+
+    out = []
+    for si, sdir in list_splits(root):
+        files = {}
+        for name in sorted(os.listdir(sdir)):
+            if name.endswith(".col"):
+                with open(os.path.join(sdir, name), "rb") as f:
+                    files[name] = f.read()
+        out.append((si, files))
+    return out
+
+
+def _protocol_ops(payloads, scratch: str, _rep=[0]) -> None:
+    """One pass of exactly the work the commit protocol adds per split
+    beyond the legacy writer: the building-dir mkdir, a durable
+    ``_meta.json`` write (legacy writes it in place — the delta is the
+    tmp + rename), the commit manifest (whole-file CRC of every column
+    payload + durable JSON), and the atomic publish rename.  Fresh names
+    per repetition so no cleanup pollutes the timing."""
+    from repro.core import durable_write_json
+    from repro.core.cof import write_manifest
+
+    _rep[0] += 1
+    for si, files in payloads:
+        bdir = os.path.join(scratch, f".split-{si:05d}.r{_rep[0]}.building")
+        final = os.path.join(scratch, f"split-{si:05d}.r{_rep[0]}")
+        os.makedirs(bdir)
+        durable_write_json(
+            os.path.join(bdir, "_meta.json"), {"n_records": 0}, fsync=False)
+        write_manifest(bdir, files, 0, fsync=False)
+        os.replace(bdir, final)
+
+
+def _corpus_bytes(root: str) -> int:
+    total = 0
+    for dirpath, _, names in os.walk(root):
+        for name in names:
+            total += os.path.getsize(os.path.join(dirpath, name))
+    return total
+
+
+def _sum_job(root: str, plan=None, policy=None, n_workers=1):
+    p = Placement(N_SPLITS, N_HOSTS, replication=2)
+    r = CIFReader(root, columns=["int0"], fault_plan=plan,
+                  failure_policy=policy)
+    ids, ob = r.job_inputs(batch_size=512, placement=p)
+
+    def map_batch(split_id, cols, emit):
+        emit("rows", cols.n_rows)
+        emit("sum", int(np.asarray(cols["int0"]).sum()))
+
+    def red(key, vals, emit):
+        emit(key, sum(vals))
+
+    res = run_job(ids, reduce_fn=red, n_hosts=N_HOSTS, placement=p,
+                  open_split_batches=ob, map_batch_fn=map_batch,
+                  n_workers=n_workers, fault_plan=plan,
+                  failure_policy=policy, scan_stats=r.stats)
+    return res, p
+
+
+def repair_bench(csv: Csv, n: int = 24_000, write_json: bool = True) -> None:
+    tmp = tempfile.mkdtemp(prefix="bench-repair-")
+    try:
+        # -- clean-path commit overhead -----------------------------------
+        # interleave the arms (same discipline as faults.py): container
+        # noise dwarfs the effect, so best-of must sample both arms under
+        # the same transient conditions.  fsync off in both arms — the
+        # protocol's extra work is the manifest write + rename, and that
+        # is what the 2% budget covers.  Records are generated ONCE and the
+        # old tree is removed OUTSIDE the timed region: both would dilute
+        # the write path under noise that dwarfs the protocol cost.
+        records = list(micro_records(n, seed=13))
+
+        def arm(tag: str, commit: bool, fsync: bool = False) -> float:
+            root = os.path.join(tmp, tag)
+            shutil.rmtree(root, ignore_errors=True)
+            timed, _ = timeit(
+                lambda: _build(root, records, n, commit=commit, fsync=fsync))
+            return timed
+
+        arm("warm", commit=True)  # warm imports + page cache
+        t_legacy = t_commit = float("inf")
+        for _ in range(16):
+            d_l = arm("legacy", commit=False)
+            d_c = arm("commit", commit=True)
+            t_legacy, t_commit = min(t_legacy, d_l), min(t_commit, d_c)
+        overhead = t_commit / t_legacy - 1.0
+        csv.add("repair/write_legacy", t_legacy)
+        csv.add("repair/write_commit", t_commit,
+                f"overhead={overhead * 100:.2f}%")
+        # coarse A/B tripwire only — a structurally broken commit path
+        # (double write, fsync leak) lands far above this; noise does not
+        assert overhead < 0.15, (
+            f"commit arm costs {overhead * 100:.2f}% over the legacy arm "
+            f"— the commit path is doing work far beyond the protocol"
+        )
+        t_fsync = arm("durable", commit=True, fsync=True)
+        csv.add("repair/write_commit_fsync", t_fsync)
+        arm("commit", commit=True)  # leave a committed tree for the scrub
+
+        # the 2% budget, asserted where noise can't drown it: the
+        # protocol's extra ops measured directly, as a fraction of the
+        # committed write path
+        root = os.path.join(tmp, "commit")
+        scratch = os.path.join(tmp, "protocol")
+        os.makedirs(scratch, exist_ok=True)
+        payloads = _read_payloads(root)
+        _protocol_ops(payloads, scratch)  # warm
+        # each pass is ~10ms, so a deep best-of is cheap — and needed:
+        # this FS's metadata-op latency has a long tail
+        t_proto, _ = timeit(
+            lambda: _protocol_ops(payloads, scratch), repeat=32)
+        proto_overhead = t_proto / t_commit
+        csv.add("repair/protocol_ops", t_proto,
+                f"of write path={proto_overhead * 100:.2f}%")
+        assert proto_overhead < 0.02, (
+            f"commit-protocol ops cost {proto_overhead * 100:.2f}% of the "
+            f"committed write path (budget: 2%)"
+        )
+
+        # -- scrub throughput ---------------------------------------------
+        nbytes = _corpus_bytes(root)
+        fsck(root)  # warm
+        t_fsck, report = timeit(lambda: fsck(root))
+        assert report.clean, f"fresh corpus failed fsck:\n{report.format()}"
+        mbps = nbytes / t_fsck / 1e6
+        csv.add("repair/fsck", t_fsck,
+                f"{report.copies_scanned} copies {mbps:.0f}MB/s")
+
+        # -- repair restores coverage -------------------------------------
+        base, p = _sum_job(root)
+        S = 1
+        h_bad, h_dead = p.replicas(S)[:2]
+        doomed = FaultPlan(
+            seed=7,
+            corrupt_blocks=frozenset({(h_bad, S, "int0", 0)}),
+            io_errors=frozenset({(h_dead, S, "int0")}),
+        )
+        policy = FailurePolicy()
+        try:
+            _sum_job(root, doomed, policy)
+            raise AssertionError("doomed plan completed without repair")
+        except CoverageError:
+            pass
+        damage_only = FaultPlan(
+            seed=7, corrupt_blocks=doomed.corrupt_blocks)
+        t_repair, rep = timeit(
+            lambda: repair(root, p, fault_plan=damage_only))
+        assert rep.repaired, "repair healed nothing"
+        res, _ = _sum_job(root, doomed, policy)
+        assert res.output == base.output, (
+            "post-repair output differs from the clean run"
+        )
+        csv.add("repair/heal", t_repair,
+                f"repaired={len(rep.repaired)}")
+
+        if write_json:
+            with open(JSON_PATH, "w") as f:
+                json.dump({"results": {
+                    "write_legacy_s": t_legacy,
+                    "write_commit_s": t_commit,
+                    "commit_overhead_pct": overhead * 100,
+                    "protocol_ops_s": t_proto,
+                    "protocol_overhead_pct": proto_overhead * 100,
+                    "write_commit_fsync_s": t_fsync,
+                    "fsck_s": t_fsck,
+                    "fsck_mb_per_s": mbps,
+                    "repair_s": t_repair,
+                    "copies_scanned": rep.copies_scanned,
+                    "copies_repaired": len(rep.repaired),
+                }}, f, indent=1)
+            print(f"# wrote {JSON_PATH}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

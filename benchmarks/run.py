@@ -20,7 +20,7 @@ def main() -> None:
                          "whole suite doubles as a tier-2 check")
     ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
                     "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode,"
-                    "sharded_scan,encodings,pushdown,faults")
+                    "sharded_scan,encodings,pushdown,faults,repair")
     args = ap.parse_args()
     assert not (args.full and args.smoke), "pick one of --full / --smoke"
     only = set(args.only.split(",")) if args.only else None
@@ -32,6 +32,7 @@ def main() -> None:
     from . import encodings as ec
     from . import faults as fl
     from . import pushdown as pd
+    from . import repair as rp
     from . import sharded_scan as ss
     from . import storage_formats as sf
 
@@ -63,6 +64,8 @@ def main() -> None:
                                          write_json=not args.smoke)),
         ("faults", lambda: fl.faults(csv, n=size(24_000, 4000),
                                      write_json=not args.smoke)),
+        ("repair", lambda: rp.repair_bench(csv, n=size(24_000, 4000),
+                                           write_json=not args.smoke)),
     ]
     failures = []
     for name, fn in jobs:

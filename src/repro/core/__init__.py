@@ -11,10 +11,12 @@ Baselines: seqfile (SEQ), textfile (TXT), rowgroup (RCFile).
 """
 from .cif import (
     BatchColumns, CIFReader, FilteredBatchColumns, ScanStats,
-    format_storage_report, list_splits, read_schema, storage_report,
+    format_storage_report, fsck, list_splits, quarantined_splits,
+    read_schema, repair, storage_report,
 )
 from .cof import COFWriter, add_column, split_name
 from .colfile import CBLOCK_RECORDS, ColumnFileReader, ColumnFileWriter, ColumnFormat
+from .durable import durable_write, durable_write_json, fsync_dir
 from .encodings import ENCODINGS, DictPage, encode_block, plain_size
 from .errors import (
     DEFAULT_POLICY,
@@ -26,7 +28,12 @@ from .errors import (
     FailureStats,
     InjectedIOError,
     SplitRetryExhausted,
+    SplitUnserveableError,
 )
+from .repair import CopyState, RepairReport
+# importing the ``repair`` SUBMODULE above rebinds the package attribute —
+# restore the façade function so ``repro.core.repair(root, placement)`` works
+from .cif import repair  # noqa: F811
 from .faults import FaultPlan, execution_epoch
 from .lazy import EagerRecord, LazyRecord, Record
 from .mapreduce import (
@@ -56,18 +63,24 @@ __all__ = [
     "ARRAY", "BOOL", "BYTES", "BatchColumns", "BlockCorruptionError",
     "BloomFilter", "CBLOCK_RECORDS",
     "CIFReader", "COFWriter", "ColumnFileReader", "ColumnFileWriter",
-    "ColumnFormat", "ColumnType", "CorruptFileError", "CoverageError",
+    "ColumnFormat", "ColumnType", "CopyState", "CorruptFileError",
+    "CoverageError",
     "DEFAULT_POLICY", "DeadlineExceeded", "DictPage", "DictRaggedColumn",
     "EagerRecord", "ENCODINGS", "Expr", "FLOAT32", "FLOAT64",
     "FailurePolicy", "FailureStats", "FaultPlan",
     "FilteredBatchColumns", "INT32", "INT64", "InjectedIOError", "JobResult",
     "LazyRecord",
     "MAP", "Placement", "PruneResult", "RECORD", "Record", "RaggedColumn",
-    "STRING", "ScanStats", "Schema", "SplitRetryExhausted", "WorkQueue",
+    "RepairReport",
+    "STRING", "ScanStats", "Schema", "SplitRetryExhausted",
+    "SplitUnserveableError", "WorkQueue",
     "ZoneMap", "add_column",
-    "col", "encode_block", "execution_epoch", "fig1_map", "fig1_map_batch",
+    "col", "durable_write", "durable_write_json", "encode_block",
+    "execution_epoch", "fig1_map", "fig1_map_batch",
     "fig1_reduce",
-    "fig1_where", "format_storage_report", "list_splits", "parse_predicate",
-    "plain_size", "read_schema", "run_job", "split_name", "stable_partition",
+    "fig1_where", "format_storage_report", "fsck", "fsync_dir", "list_splits",
+    "parse_predicate",
+    "plain_size", "quarantined_splits", "read_schema", "repair", "run_job",
+    "split_name", "stable_partition",
     "storage_report", "urlinfo_schema", "validate_predicate",
 ]

@@ -82,6 +82,15 @@ def algo_name(algo: int) -> str:
     return _ALGO_NAMES.get(algo, f"unknown({algo})")
 
 
+def algo_from_name(name: str) -> int:
+    """Inverse of ``algo_name`` — commit manifests (cof.py) store the
+    algorithm by name, so fsck/repair must resolve it back."""
+    for algo, n in _ALGO_NAMES.items():
+        if n == name:
+            return algo
+    raise ValueError(f"unknown checksum algorithm {name!r}")
+
+
 @dataclass
 class ChecksumPage:
     """Decoded ``SEC_CHECKSUMS`` stats-page section.

@@ -53,7 +53,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 import numpy as np
 
 from .colfile import ColumnFileReader, ReadCounters
-from .cof import is_split_dir
+from .cof import COMMIT_MARKER, QUARANTINE_MARKER, REPLICA_OVERLAY, is_split_dir
 from .errors import (
     CorruptFileError,
     DeadlineExceeded,
@@ -72,11 +72,58 @@ from .varcodec import RaggedColumn
 EAGER_CHUNK = 1024  # records decoded per column pass in iter_eager
 
 
-def list_splits(root: str) -> List[Tuple[int, str]]:
+def list_splits(
+    root: str, *, include_quarantined: bool = False
+) -> List[Tuple[int, str]]:
+    """Committed, serveable splits of a dataset directory.
+
+    Visibility rules (PR 7, docs/FORMAT.md "Commit protocol"):
+
+      * A split under construction lives in a hidden ``.split-*.building``
+        directory — the naming convention alone hides it, so a writer
+        killed at ANY byte offset leaves the corpus readable at its prior
+        committed state.
+      * A committed split carries a ``_committed.json`` marker/manifest.
+        Final-named directories WITHOUT one are grandfathered as legacy
+        (pre-marker) splits — but only while the whole corpus is legacy:
+        once any split carries a marker, markerless siblings are treated
+        as uncommitted debris and skipped.  (New writers publish by
+        directory rename, so they can never produce such a directory —
+        this guards against manual tampering.)
+      * Splits ``core.repair`` quarantined (zero clean replica copies
+        left) are excluded unless ``include_quarantined`` — the
+        ``CoverageError`` downgrade path: jobs planned off this listing
+        complete on the surviving data instead of dying.
+    """
+    dirs = []
+    any_marker = False
+    for name in sorted(os.listdir(root)):
+        if not is_split_dir(name):
+            continue
+        sdir = os.path.join(root, name)
+        committed = os.path.exists(os.path.join(sdir, COMMIT_MARKER))
+        any_marker = any_marker or committed
+        dirs.append((int(name.split("-")[1]), sdir, committed))
+    out = []
+    for idx, sdir, committed in dirs:
+        if any_marker and not committed:
+            continue
+        if not include_quarantined and os.path.exists(
+            os.path.join(sdir, QUARANTINE_MARKER)
+        ):
+            continue
+        out.append((idx, sdir))
+    return out
+
+
+def quarantined_splits(root: str) -> List[int]:
+    """Split ids ``core.repair`` has quarantined (sorted)."""
     out = []
     for name in sorted(os.listdir(root)):
-        if is_split_dir(name):
-            out.append((int(name.split("-")[1]), os.path.join(root, name)))
+        if is_split_dir(name) and os.path.exists(
+            os.path.join(root, name, QUARANTINE_MARKER)
+        ):
+            out.append(int(name.split("-")[1]))
     return out
 
 
@@ -172,6 +219,12 @@ def format_storage_report(root: str) -> str:
             f"{name:<12} {col['kind']:<9} {blocks:<28} "
             f"{col['raw_bytes']:>10} {col['encoded_bytes']:>10} {col['ratio']:>6}  {zone}"
         )
+    quarantined = quarantined_splits(root)
+    if quarantined:
+        lines.append(
+            f"QUARANTINED splits (zero clean replica copies — excluded from "
+            f"scans until repaired): {quarantined}"
+        )
     return "\n".join(lines)
 
 
@@ -206,6 +259,14 @@ class ScanStats:
     replica_failovers: int = 0  # retries served by a DIFFERENT replica host
     splits_reexecuted: int = 0  # dead-owner steals + retry-exhaustion requeues
     simulated_delay_s: float = 0.0
+    # read repair (PR 7): distinct replica copies observed corrupt during
+    # the scan, queued for post-job healing — ``cif.repair(root, placement,
+    # queue=stats.repair_queue)`` drains them.  Schedule-free like the PR-6
+    # counters: enqueue decisions key on the replica chain, entries fold in
+    # only when a split COMPLETES, and the queue is a set — bit-identical
+    # serial vs concurrent.
+    repairs_enqueued: int = 0
+    repair_queue: set = field(default_factory=set)  # {(split, column, host)}
 
     def absorb(self, c: ReadCounters, file_bytes: int) -> None:
         self.bytes_io += file_bytes
@@ -221,6 +282,12 @@ class ScanStats:
         self.read_retries += f.read_retries
         self.replica_failovers += f.replica_failovers
         self.simulated_delay_s += f.simulated_delay_s
+        # set-difference first: a copy already queued (e.g. by an earlier
+        # execution epoch absorbed by PromptStore) never counts twice, so
+        # ``repairs_enqueued == len(repair_queue)`` is an invariant here
+        new = f.repair_queue - self.repair_queue
+        self.repair_queue |= new
+        self.repairs_enqueued += len(new)
 
 
 class _LazyReaders(dict):
@@ -267,6 +334,7 @@ class SplitReader:
         placement: Optional[Placement] = None,
         fault_plan: Optional[FaultPlan] = None,
         policy: Optional[FailurePolicy] = None,
+        fail: Optional[FailureStats] = None,
     ):
         self.split_dir = split_dir
         self.schema = schema
@@ -280,12 +348,19 @@ class SplitReader:
         self._placement = placement
         self._fault_plan = fault_plan
         self._policy = policy
-        self.fail = FailureStats()
+        # ``fail=`` lets a caller keep the failure ledger even when THIS
+        # CONSTRUCTOR raises (PromptStore: corruption during open would
+        # otherwise discard the repair queue with the half-built reader)
+        self.fail = fail if fail is not None else FailureStats()
         # attempt numbers restart at epoch * ATTEMPT_STRIDE when a split is
         # re-enqueued; captured once so every column of this execution
         # shares the epoch it was claimed under
         self._attempt_base = attempt_base()
         self._attempts: Dict[str, int] = {}
+        # read repair (PR 7): which replica host served each column's
+        # CURRENT bytes — the copy to blame (and queue for healing) when a
+        # checksum mismatch fires through the ``on_corrupt`` seam
+        self._last_served: Dict[str, int] = {}
         mpath = os.path.join(split_dir, "_meta.json")
         try:
             with open(mpath) as f:
@@ -344,14 +419,35 @@ class SplitReader:
                         f"split {self.split_id}: retry-delay budget "
                         f"({policy.split_deadline}s simulated) exhausted"
                     )
-        with open(path, "rb") as f:
+        # replica overlay (PR 7): ``core.repair`` persists healed per-host
+        # copies under ``_replicas/h<host>/``; when one exists for the host
+        # this attempt maps to, it supersedes the (possibly damaged) base
+        # copy and reads back clean — repaired media, fresh sectors
+        opath = os.path.join(
+            self.split_dir, REPLICA_OVERLAY, f"h{host}", os.path.basename(path)
+        )
+        healed = os.path.exists(opath)
+        with open(opath if healed else path, "rb") as f:
             raw = f.read()
         if self._fault_plan is not None:
             raw = self._fault_plan.apply(
                 raw, host=host, split=self.split_id or 0, column=name,
-                attempt=a, fail=self.fail,
+                attempt=a, fail=self.fail, healed=healed,
             )
+        self._last_served[name] = host
         return raw
+
+    def _enqueue_repair(self, name: str) -> None:
+        """The bytes ``_last_served[name]`` handed over are known corrupt:
+        queue that replica copy for post-job healing.  Meaningful only when
+        a placement names real replica identities."""
+        host = self._last_served.get(name)
+        if (
+            host is not None
+            and self.split_id is not None
+            and self._placement is not None
+        ):
+            self.fail.enqueue_repair(self.split_id, name, host)
 
     def _open_reader(self, name: str) -> ColumnFileReader:
         assert name in self.columns, f"column {name!r} not opened by this split"
@@ -368,6 +464,9 @@ class SplitReader:
         def fetch() -> bytes:
             return self._fetch_attempt(name, path)
 
+        def on_corrupt() -> None:
+            self._enqueue_repair(name)
+
         while True:
             try:
                 raw = fetch()  # SplitRetryExhausted propagates to run_job
@@ -376,11 +475,16 @@ class SplitReader:
             try:
                 return ColumnFileReader(
                     raw, typ, path=path, fail=self.fail, fetch=fetch,
-                    verify=verify,
+                    verify=verify, on_corrupt=on_corrupt,
                 )
             except SplitRetryExhausted:
                 raise  # mid-recovery exhaustion inside the constructor
-            except (CorruptFileError, OSError):
+            except (CorruptFileError, OSError) as e:
+                if isinstance(e, CorruptFileError):
+                    # parse-level damage never reaches a CRC check, so the
+                    # on_corrupt seam did not fire — queue the copy here
+                    # (enqueue_repair dedups the CRC-detected case)
+                    self._enqueue_repair(name)
                 continue  # damaged copy: next attempt, next replica
 
     # -- predicate planning + late materialization ---------------------------
@@ -929,3 +1033,42 @@ class CIFReader:
             self.absorb_stats(sr)
 
         return sorted(split_map), open_split
+
+
+# ---------------------------------------------------------------------------
+# Corpus integrity: the public faces of core.repair (PR 7)
+# ---------------------------------------------------------------------------
+
+
+def fsck(root: str):
+    """Audit-only integrity walk of the PHYSICAL corpus (base files plus
+    any healed ``_replicas`` overlays): verify every committed split
+    against its manifest (size + whole-file CRC per column file,
+    structural parse of ``_meta.json``) and report damage without writing
+    anything.  Returns a deterministic ``RepairReport``; a corpus a writer
+    crashed into mid-split audits CLEAN — the torn build directory is
+    invisible debris, not damage."""
+    from .repair import fsck as _fsck  # late import: repair sits above cif
+
+    return _fsck(root)
+
+
+def repair(
+    root: str,
+    placement: Placement,
+    *,
+    fault_plan: Optional[FaultPlan] = None,
+    queue: Optional[set] = None,
+):
+    """Scrub every replica copy (splits × ``placement.replicas``) through
+    the same read seam jobs use — ``fault_plan`` included, so repair is
+    testable under injected faults — classify each copy
+    (clean / corrupt / torn / missing), re-replicate damaged copies
+    byte-for-byte from a clean replica under the whole-file-CRC acceptance
+    rule, and quarantine splits with zero clean copies.  ``queue=`` (a
+    ``ScanStats.repair_queue``) restricts the scrub to the copies a scan
+    observed corrupt — the read-repair drain.  Returns a ``RepairReport``.
+    """
+    from .repair import repair as _repair
+
+    return _repair(root, placement, fault_plan=fault_plan, queue=queue)

@@ -21,22 +21,85 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 from dataclasses import asdict
 from typing import Any, Dict, Iterable, List, Optional
 
+from .checksum import best_algo, crc_of, algo_name
 from .colfile import ColumnFileWriter, ColumnFormat
+from .durable import durable_write, durable_write_json, fsync_dir
 from .schema import Schema
 
 SPLIT_PREFIX = "split-"
 DEFAULT_SPLIT_RECORDS = 4096
+
+# Atomic split commits (PR 7).  A split under construction lives in a
+# hidden ``.split-NNNNN.building`` directory that no reader pattern
+# matches; the LAST file written there is the commit marker/manifest
+# (``_committed.json``: per-file byte size + whole-file CRC — the repair
+# acceptance rule's reference), and the directory is then atomically
+# renamed to its final ``split-NNNNN`` name.  A writer killed at any byte
+# offset therefore leaves either a fully committed split or an invisible
+# building directory — never a partial split (docs/FORMAT.md "Commit
+# protocol").
+COMMIT_MARKER = "_committed.json"
+QUARANTINE_MARKER = "_quarantined.json"  # written by core.repair only
+REPLICA_OVERLAY = "_replicas"  # per-host healed copies: _replicas/h<id>/
+BUILDING_SUFFIX = ".building"
 
 
 def split_name(i: int) -> str:
     return f"{SPLIT_PREFIX}{i:05d}"
 
 
+def building_name(i: int) -> str:
+    return f".{split_name(i)}{BUILDING_SUFFIX}"
+
+
 def is_split_dir(name: str) -> bool:
     return name.startswith(SPLIT_PREFIX) and name[len(SPLIT_PREFIX) :].isdigit()
+
+
+def is_building_dir(name: str) -> bool:
+    return (
+        name.startswith("." + SPLIT_PREFIX) and name.endswith(BUILDING_SUFFIX)
+    )
+
+
+def write_manifest(
+    sdir: str, files: Dict[str, bytes], n_records: int, *, fsync: bool = True
+) -> None:
+    """Write the commit marker/manifest for a split directory: each
+    ``.col`` file's byte size and whole-file CRC.  ``_meta.json`` is NOT
+    listed — it legitimately evolves under ``add_column``, so fsck
+    validates it structurally (parseable JSON), while ``.col`` files are
+    immutable once committed and must match their CRC byte-for-byte."""
+    algo = best_algo()
+    durable_write_json(
+        os.path.join(sdir, COMMIT_MARKER),
+        {
+            "v": 1,
+            "algo": algo_name(algo),
+            "n_records": n_records,
+            "files": {
+                name: [len(raw), crc_of(algo, raw)]
+                for name, raw in sorted(files.items())
+            },
+        },
+        fsync=fsync,
+    )
+
+
+def read_manifest(sdir: str) -> Optional[Dict[str, Any]]:
+    """The split's commit manifest, or None for legacy (pre-marker)
+    splits.  Torn manifests cannot exist on the commit path (the marker is
+    durably replaced), but a damaged disk can still produce one — surface
+    it as unparseable JSON for fsck to classify."""
+    path = os.path.join(sdir, COMMIT_MARKER)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 class COFWriter:
@@ -52,6 +115,9 @@ class COFWriter:
         schema: Schema,
         formats: Optional[Dict[str, ColumnFormat]] = None,
         split_records: int = DEFAULT_SPLIT_RECORDS,
+        *,
+        fsync: bool = True,
+        commit: bool = True,
     ):
         self.root = root
         self.schema = schema
@@ -59,9 +125,18 @@ class COFWriter:
         if formats:
             self.formats.update(formats)
         self.split_records = split_records
+        # ``fsync=False`` keeps the atomic commit protocol but skips the
+        # durability syscalls; ``commit=False`` reproduces the pre-PR-7
+        # write path (in-place files, no marker) — the benchmark baseline
+        # (benchmarks/repair.py), never a production mode.
+        self.fsync = fsync
+        self.commit = commit
         os.makedirs(root, exist_ok=True)
-        with open(os.path.join(root, "schema.json"), "w") as f:
-            f.write(schema.to_json())
+        durable_write(
+            os.path.join(root, "schema.json"),
+            schema.to_json().encode("utf-8"),
+            fsync=fsync,
+        )
         self._split_idx = 0
         self._writers: Optional[Dict[str, ColumnFileWriter]] = None
         self._split_n = 0
@@ -90,17 +165,28 @@ class COFWriter:
 
     def _close_split(self) -> None:
         assert self._writers is not None
-        sdir = os.path.join(self.root, split_name(self._split_idx))
+        final = os.path.join(self.root, split_name(self._split_idx))
+        if self.commit:
+            sdir = os.path.join(self.root, building_name(self._split_idx))
+            if os.path.exists(sdir):  # leftover from a crashed writer
+                shutil.rmtree(sdir)
+        else:
+            sdir = final
         os.makedirs(sdir, exist_ok=True)
         sizes = {}
+        col_bytes: Dict[str, bytes] = {}
         for name, w in self._writers.items():
             raw = w.finish()
             path = os.path.join(sdir, f"{name}.col")
-            tmp = path + ".tmp"
-            with open(tmp, "wb") as f:
-                f.write(raw)
-            os.replace(tmp, path)  # atomic: readers never see partial files
+            if self.commit:
+                durable_write(path, raw, fsync=self.fsync)
+            else:  # pre-PR-7 benchmark baseline: tmp + rename, no fsync
+                tmp = path + ".tmp"
+                with open(tmp, "wb") as f:
+                    f.write(raw)
+                os.replace(tmp, path)
             sizes[name] = len(raw)
+            col_bytes[f"{name}.col"] = raw
         meta = {
             "n_records": self._split_n,
             "columns": {n: asdict(self.formats[n]) for n in self.schema.names()},
@@ -110,8 +196,21 @@ class COFWriter:
             # aggregates these across splits)
             "encodings": {n: w.encoding_stats() for n, w in self._writers.items()},
         }
-        with open(os.path.join(sdir, "_meta.json"), "w") as f:
-            json.dump(meta, f)
+        if self.commit:
+            durable_write_json(
+                os.path.join(sdir, "_meta.json"), meta, fsync=self.fsync
+            )
+            # the commit point: manifest last, then one atomic directory
+            # rename publishes the whole split
+            write_manifest(sdir, col_bytes, self._split_n, fsync=self.fsync)
+            if os.path.exists(final):  # rewriting an existing corpus
+                shutil.rmtree(final)
+            os.replace(sdir, final)
+            if self.fsync:
+                fsync_dir(self.root)
+        else:
+            with open(os.path.join(sdir, "_meta.json"), "w") as f:
+                json.dump(meta, f)
         self._split_idx += 1
         self._writers = None
         self._split_n = 0
@@ -150,15 +249,37 @@ def add_column(
             count += 1
         assert count == n, f"split {si}: expected {n} values, got {count}"
         raw = w.finish()
-        path = os.path.join(sdir, f"{name}.col")
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(raw)
-        os.replace(tmp, path)
+        durable_write(os.path.join(sdir, f"{name}.col"), raw)
         meta["columns"][name] = asdict(fmt)
         meta["bytes"][name] = len(raw)
         meta.setdefault("encodings", {})[name] = w.encoding_stats()
-        with open(os.path.join(sdir, "_meta.json"), "w") as f:
-            json.dump(meta, f)
-    with open(os.path.join(root, "schema.json"), "w") as f:
-        f.write(new_schema.to_json())
+        durable_write_json(os.path.join(sdir, "_meta.json"), meta)
+        # refresh the commit manifest — but ONLY where one exists: writing
+        # a first marker into a legacy corpus would flip the corpus into
+        # marker mode and hide its other (markerless) splits
+        manifest = read_manifest(sdir)
+        if manifest is not None:
+            algo = best_algo()
+            files = dict(manifest.get("files", {}))
+            files[f"{name}.col"] = [len(raw), crc_of(algo, raw)]
+            if algo_name(algo) != manifest.get("algo"):
+                # CRC backend changed since the split was written: re-sum
+                # every file so the manifest stays single-algorithm
+                for fn in files:
+                    p = os.path.join(sdir, fn)
+                    with open(p, "rb") as f:
+                        files[fn] = [
+                            os.path.getsize(p), crc_of(algo, f.read())
+                        ]
+            durable_write_json(
+                os.path.join(sdir, COMMIT_MARKER),
+                {
+                    "v": 1,
+                    "algo": algo_name(algo),
+                    "n_records": n,
+                    "files": files,
+                },
+            )
+    durable_write(
+        os.path.join(root, "schema.json"), new_schema.to_json().encode("utf-8")
+    )

@@ -488,11 +488,17 @@ class ColumnFileReader:
         fail: Optional[FailureStats] = None,
         fetch: Optional[Callable[[], bytes]] = None,
         verify: bool = True,
+        on_corrupt: Optional[Callable[[], None]] = None,
     ):
         self.path = path
         self._fail = fail if fail is not None else FailureStats()
         self._fetch = fetch
         self._verify = verify
+        # read-repair seam (PR 7): fired on EVERY checksum mismatch this
+        # reader observes, at the moment the current bytes are known bad —
+        # the caller (SplitReader) still knows which replica host served
+        # them, so it can queue that copy for post-job healing
+        self._on_corrupt = on_corrupt
         try:
             if raw[:4] != MAGIC:
                 raise CorruptFileError(path, 0, "bad column file magic")
@@ -654,6 +660,13 @@ class ColumnFileReader:
         ) - sum(b[2] for b in self._blocks)
 
     # -- integrity: lazy CRC verification + replica recovery ------------------
+    def _note_corruption(self) -> None:
+        """Count a checksum mismatch and fire the read-repair seam: the
+        bytes CURRENTLY held came from a replica copy now known bad."""
+        self._fail.checksum_failures += 1
+        if self._on_corrupt is not None:
+            self._on_corrupt()
+
     def _verify_meta(self, raw: bytes) -> None:
         """Verify the header+stats checksum once at open (the CRC fields
         themselves — the file's trailing 8 bytes — are excluded)."""
@@ -666,7 +679,7 @@ class ColumnFileReader:
             )
         got = crc_of(ck.algo, raw[: self._body_start] + raw[body_end:end])
         if got != ck.meta_crc:
-            self._fail.checksum_failures += 1
+            self._note_corruption()
             raise BlockCorruptionError(
                 self.path, 0,
                 f"header/stats checksum mismatch "
@@ -685,7 +698,7 @@ class ColumnFileReader:
         if crc_of(ck.algo, self.body[a:b]) == ck.block_crcs[bi]:
             self._ck_ok.add(bi)
             return
-        self._fail.checksum_failures += 1
+        self._note_corruption()
         if not self._recover_body():
             raise BlockCorruptionError(
                 self.path, self._body_start + a,
@@ -712,11 +725,11 @@ class ColumnFileReader:
             except OSError:
                 continue  # injected/real IO error: costs one attempt
             if len(raw) != self.file_bytes:
-                self._fail.checksum_failures += 1
+                self._note_corruption()
                 continue
             (file_crc,) = struct.unpack_from("<I", raw, len(raw) - 4)
             if crc_of(ck.algo, raw[:-4]) != file_crc:
-                self._fail.checksum_failures += 1
+                self._note_corruption()
                 continue
             self.body = raw[self._body_start : self._body_start + self._body_len]
             self._raw = raw
@@ -753,14 +766,14 @@ class ColumnFileReader:
         for bi in range(len(self._spans)):
             a, b = self._spans[bi]
             if crc_of(ck.algo, self.body[a:b]) != ck.block_crcs[bi]:
-                self._fail.checksum_failures += 1
+                self._note_corruption()
                 raise BlockCorruptionError(
                     self.path, self._body_start + a,
                     f"block {bi} checksum mismatch",
                 )
         (file_crc,) = struct.unpack_from("<I", raw, len(raw) - 4)
         if crc_of(ck.algo, raw[:-4]) != file_crc:
-            self._fail.checksum_failures += 1
+            self._note_corruption()
             raise BlockCorruptionError(
                 self.path, len(raw) - 4, "whole-file checksum mismatch"
             )

@@ -37,8 +37,8 @@ across reruns and across serial vs concurrent schedules.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Optional, Set, Tuple
 
 
 def _stable_hash(s: str) -> int:
@@ -84,6 +84,15 @@ class DeadlineExceeded(SplitRetryExhausted):
 class CoverageError(AssertionError):
     """An unfinished split has no live replica host — the job cannot run
     to completion and fails fast instead of spinning."""
+
+
+class SplitUnserveableError(CoverageError, SplitRetryExhausted):
+    """A split exhausted its re-execution budget because NO replica could
+    serve a clean copy — coverage is lost in substance even though hosts
+    are alive, so this is a ``CoverageError`` (and, for the pre-existing
+    give-up contract, still a ``SplitRetryExhausted``).  ``cif.repair``
+    is the way out: re-replicate the damaged copies from a clean one, or
+    quarantine the split (docs/ARCHITECTURE.md "Failure model")."""
 
 
 @dataclass(frozen=True)
@@ -139,3 +148,19 @@ class FailureStats:
     read_retries: int = 0
     replica_failovers: int = 0
     simulated_delay_s: float = 0.0
+    # Read repair (PR 7): every time bytes served by a replica host are
+    # determined corrupt, the copy's identity is queued for post-job
+    # healing.  Entries are ``(split_id, column, host)``; the decision is
+    # the same pure function of (plan, chain, attempt) as the counters
+    # above, so the queue is bit-identical across schedules.
+    repairs_enqueued: int = 0
+    repair_queue: Set[Tuple[int, str, int]] = field(default_factory=set)
+
+    def enqueue_repair(self, split_id: int, column: str, host: int) -> None:
+        """Queue one replica copy for healing — idempotent, so the counter
+        reads "distinct corrupt copies observed", not "mismatch events"
+        (one bad copy probed on several attempts still counts once)."""
+        key = (split_id, column, host)
+        if key not in self.repair_queue:
+            self.repair_queue.add(key)
+            self.repairs_enqueued += 1

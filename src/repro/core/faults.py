@@ -140,10 +140,18 @@ class FaultPlan:
         column: str,
         attempt: int,
         fail: Optional[FailureStats] = None,
+        healed: bool = False,
     ) -> bytes:
         """The bytes ``host`` serves for ``column`` of ``split`` on read
         ``attempt`` — possibly damaged, possibly after simulated latency,
-        possibly an ``InjectedIOError`` instead."""
+        possibly an ``InjectedIOError`` instead.
+
+        ``healed=True`` marks a copy that ``core.repair`` re-replicated
+        onto this host (a ``_replicas/`` overlay file): the plan's
+        corruption models latent media damage in the ORIGINAL copy's
+        sectors, so rewritten bytes read back clean — while host-level
+        faults (IO errors, latency) still apply.
+        """
         if self._roll("latency", self.latency_rate, host, split, column, attempt):
             if fail is not None:
                 fail.simulated_delay_s += self.latency_s
@@ -154,6 +162,8 @@ class FaultPlan:
                 f"injected IO error: {column!r} of split {split} from {host!r}"
                 f" (attempt {attempt})"
             )
+        if healed:
+            return raw
         until = self.corrupt_until.get((split, column))
         all_bad = until is not None and attempt < until
         if not (

@@ -57,6 +57,7 @@ from .errors import (
     CoverageError,
     FailurePolicy,
     SplitRetryExhausted,
+    SplitUnserveableError,
 )
 from .faults import FaultPlan, execution_epoch
 from .placement import Placement, WorkQueue, stable_partition
@@ -227,13 +228,20 @@ def run_job(
     def process(sidx: int) -> Optional[Tuple[List[Tuple[Any, Any]], float]]:
         """Run one split under its execution epoch; on read exhaustion
         re-enqueue it (None) so another worker — with fresh attempt numbers
-        — retries, or re-raise once the re-execution cap is hit."""
+        — retries.  Once the re-execution cap is hit no replica can serve
+        the split: that is coverage lost in substance, so the terminal
+        error is ``SplitUnserveableError`` (both a ``CoverageError`` and a
+        ``SplitRetryExhausted``) and the remedy is ``cif.repair``."""
         try:
             with execution_epoch(wq.epoch(sidx)):
                 return run_split(sidx)
-        except (SplitRetryExhausted, CorruptFileError, OSError):
+        except (SplitRetryExhausted, CorruptFileError, OSError) as e:
             if policy is None or not wq.requeue(sidx, policy.max_reexecutions):
-                raise
+                raise SplitUnserveableError(
+                    f"split {split_ids[sidx]}: no replica served a clean "
+                    f"copy within {0 if policy is None else policy.max_reexecutions} "
+                    f"re-execution(s); last error: {e}"
+                ) from e
             return None
 
     # Task = (sidx, host, local_out, map_seconds).  Each split is claimed and

@@ -1,0 +1,463 @@
+"""Checksum scrubber + replica repair (tentpole PR 7, layer 2).
+
+PR 6 closed half the failure loop: v3.2 CRCs *detect* corruption and the
+scan engine *routes around* it (replica failover, re-enqueue).  Nothing
+ever healed the corpus — a corrupt replica stayed corrupt forever, and
+losing the last clean copy was a hard ``CoverageError``.  This module is
+the anti-entropy half (HAIL keeps every replica independently checksummed
+as an upload-pipeline invariant; Cassandra pairs detection with repair):
+
+  * ``fsck(root)``   — audit-only walk of the PHYSICAL corpus: every
+    committed split verifies against its commit manifest (per-file byte
+    size + whole-file CRC — ``cof.write_manifest``), ``_meta.json``
+    parses structurally, healed ``_replicas`` overlays verify too.
+    Nothing is written.
+  * ``repair(root, placement[, fault_plan][, queue])`` — scrub every
+    logical replica copy (splits × ``placement.replicas``) through the
+    same read seam jobs use, classify each copy (clean / corrupt / torn /
+    missing), then re-replicate damaged copies byte-for-byte from a clean
+    replica and quarantine splits with zero clean copies.  ``queue=``
+    restricts the scrub to the copies a scan observed corrupt
+    (``ScanStats.repair_queue`` — the Cassandra read-repair drain).
+
+Replica model.  The corpus is one shared directory; per-host replica
+divergence exists on two axes.  PHYSICAL damage lives in the base files
+(every host's copy reads bad) and is healed by durably rewriting the base.
+LOGICAL per-host damage is injected by a ``FaultPlan`` (a bad disk sector
+on ONE host's copy) and is healed by persisting a clean copy into the
+split's ``_replicas/h<host>/`` overlay — the read path serves overlay
+bytes with the plan's corruption suppressed (``FaultPlan.apply(healed=
+True)``: rewritten media, fresh sectors), so a healed host keeps serving
+clean even after every other replica dies.
+
+Acceptance rule.  A copy may be used as a repair source — and a written
+repair is accepted — only if its WHOLE-FILE CRC matches the commit
+manifest (legacy splits: the embedded v3.2 ``file_crc``).  Block-level
+partial repair is deliberately not attempted: replicas are byte-identical
+by contract, so healing is whole-file replication, exactly like
+``ColumnFileReader._recover_body`` accepts a re-fetched copy.
+
+Determinism.  Splits, files, and hosts are walked in sorted/chain order
+and every decision is a pure function of (corpus bytes, placement, plan),
+so the ``RepairReport`` is bit-identical across runs and schedules.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from .checksum import algo_from_name, crc_of
+from .cof import (
+    COMMIT_MARKER,
+    QUARANTINE_MARKER,
+    REPLICA_OVERLAY,
+    is_building_dir,
+    is_split_dir,
+    read_manifest,
+)
+from .durable import durable_write, durable_write_json, fsync_dir
+from .errors import CorruptFileError
+from .faults import FaultPlan
+from .placement import Placement
+from .schema import ColumnType, Schema
+
+# copy states, in increasing severity (for report sorting stability)
+CLEAN, CORRUPT, TORN, MISSING = "clean", "corrupt", "torn", "missing"
+
+
+@dataclass(frozen=True, order=True)
+class CopyState:
+    """Verdict on ONE replica copy of one file of one split.  ``host`` is
+    the replica host id, or -1 for the physical base copy (fsck view)."""
+
+    split_id: int
+    file: str
+    host: int
+    state: str
+    detail: str = ""
+
+
+@dataclass
+class RepairReport:
+    """Deterministic outcome of an fsck/repair walk.  ``damage`` lists
+    every non-clean copy observed (BEFORE healing); ``repaired`` the
+    copies re-replicated; ``quarantined`` splits left with zero clean
+    copies of some file; ``released`` previously-quarantined splits whose
+    every file has a clean copy again.  ``uncommitted`` names writer
+    debris (building dirs, markerless dirs in a marker-era corpus) —
+    visible-corpus state is intact, so debris is NOT damage and
+    ``clean`` stays True."""
+
+    splits_scanned: int = 0
+    copies_scanned: int = 0
+    copies_clean: int = 0
+    copies_corrupt: int = 0
+    copies_torn: int = 0
+    copies_missing: int = 0
+    damage: List[CopyState] = field(default_factory=list)
+    repaired: List[Tuple[int, str, int]] = field(default_factory=list)
+    quarantined: List[int] = field(default_factory=list)
+    released: List[int] = field(default_factory=list)
+    uncommitted: List[str] = field(default_factory=list)
+
+    @property
+    def clean(self) -> bool:
+        return not self.damage and not self.quarantined
+
+    def count(self, st: CopyState) -> None:
+        self.copies_scanned += 1
+        if st.state == CLEAN:
+            self.copies_clean += 1
+            return
+        self.damage.append(st)
+        if st.state == CORRUPT:
+            self.copies_corrupt += 1
+        elif st.state == TORN:
+            self.copies_torn += 1
+        else:
+            self.copies_missing += 1
+
+    def finish(self) -> "RepairReport":
+        self.damage.sort()
+        self.repaired.sort()
+        self.quarantined.sort()
+        self.released.sort()
+        self.uncommitted.sort()
+        return self
+
+    def format(self) -> str:
+        lines = [
+            f"splits={self.splits_scanned} copies={self.copies_scanned} "
+            f"clean={self.copies_clean} corrupt={self.copies_corrupt} "
+            f"torn={self.copies_torn} missing={self.copies_missing}"
+        ]
+        for st in self.damage:
+            host = "base" if st.host < 0 else f"h{st.host}"
+            lines.append(
+                f"  DAMAGE split {st.split_id:>5} {st.file:<16} {host:<5} "
+                f"{st.state}{': ' + st.detail if st.detail else ''}"
+            )
+        for split_id, fname, host in self.repaired:
+            lines.append(
+                f"  REPAIRED split {split_id:>4} {fname:<16} -> h{host}"
+            )
+        if self.quarantined:
+            lines.append(f"  QUARANTINED splits: {self.quarantined}")
+        if self.released:
+            lines.append(f"  RELEASED from quarantine: {self.released}")
+        if self.uncommitted:
+            lines.append(f"  uncommitted writer debris: {self.uncommitted}")
+        verdict = "CLEAN" if self.clean else "DAMAGED"
+        return "\n".join([f"fsck/repair: {verdict}"] + lines)
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+
+
+def _expected(manifest: Optional[Dict[str, Any]], fname: str):
+    """(size, crc, algo) the manifest promises for ``fname``, or None for
+    legacy splits / files the manifest does not track."""
+    if manifest is None:
+        return None
+    ent = manifest.get("files", {}).get(fname)
+    if ent is None:
+        return None
+    try:
+        algo = algo_from_name(manifest.get("algo", ""))
+    except ValueError:
+        return None
+    return int(ent[0]), int(ent[1]), algo
+
+
+def _classify_bytes(
+    raw: Optional[bytes], expected, *, path: str, typ: Optional[ColumnType]
+) -> Tuple[str, str]:
+    """State of one copy's bytes against the manifest expectation (or the
+    embedded v3.2 whole-file CRC for legacy splits)."""
+    if raw is None:
+        return MISSING, "no copy on disk"
+    if expected is not None:
+        size, crc, algo = expected
+        if len(raw) != size:
+            return TORN, f"{len(raw)} bytes, manifest promises {size}"
+        if crc_of(algo, raw) != crc:
+            return CORRUPT, "whole-file CRC mismatch vs manifest"
+        return CLEAN, ""
+    # legacy: fall back to the container's own checksums (v3.2 file_crc
+    # covers the whole file; older files can only be parse-checked)
+    return _classify_container(raw, path=path, typ=typ)
+
+
+def _classify_container(
+    raw: bytes, *, path: str, typ: Optional[ColumnType]
+) -> Tuple[str, str]:
+    from .colfile import ColumnFileReader  # late: avoid import cycle at load
+
+    try:
+        r = ColumnFileReader(
+            raw, typ if typ is not None else ColumnType("bytes"),
+            path=path, verify=True,
+        )
+        r.verify_checksums()
+        return CLEAN, ""
+    except CorruptFileError as e:
+        detail = e.detail or str(e)
+        if "truncated" in detail:
+            return TORN, detail
+        return CORRUPT, detail
+    except Exception as e:  # pragma: no cover - defensive
+        return CORRUPT, str(e)
+
+
+def _load_schema(root: str) -> Optional[Schema]:
+    path = os.path.join(root, "schema.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return Schema.from_json(f.read())
+    except (ValueError, KeyError, UnicodeDecodeError):
+        return None
+
+
+def _type_of(schema: Optional[Schema], fname: str) -> Optional[ColumnType]:
+    if schema is None or not fname.endswith(".col"):
+        return None
+    try:
+        return schema.type_of(fname[:-4])
+    except KeyError:
+        return None
+
+
+def _classify_meta(raw: Optional[bytes]) -> Tuple[str, str]:
+    if raw is None:
+        return MISSING, "no copy on disk"
+    try:
+        meta = json.loads(raw.decode("utf-8"))
+        int(meta["n_records"])
+        return CLEAN, ""
+    except json.JSONDecodeError as e:
+        state = TORN if e.pos >= len(raw) - 1 else CORRUPT
+        return state, f"unparseable _meta.json ({e.msg})"
+    except (KeyError, TypeError, ValueError, UnicodeDecodeError) as e:
+        return CORRUPT, f"malformed _meta.json ({e})"
+
+
+# ---------------------------------------------------------------------------
+# copy IO (the scrub read seam)
+# ---------------------------------------------------------------------------
+
+
+def _overlay_path(sdir: str, host: int, fname: str) -> str:
+    return os.path.join(sdir, REPLICA_OVERLAY, f"h{host}", fname)
+
+
+def _read_file(path: str) -> Optional[bytes]:
+    if not os.path.exists(path):
+        return None
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def _read_copy(
+    sdir: str,
+    split_id: int,
+    fname: str,
+    host: int,
+    fault_plan: Optional[FaultPlan],
+) -> Optional[bytes]:
+    """What replica ``host`` serves for ``fname`` — the same resolution
+    order as ``SplitReader._fetch_attempt``: healed overlay first (plan
+    corruption suppressed), else the base copy through the plan.  Returns
+    None when the copy is missing or the host is unreachable (injected IO
+    error ≈ the copy cannot be fetched)."""
+    opath = _overlay_path(sdir, host, fname)
+    healed = os.path.exists(opath)
+    raw = _read_file(opath if healed else os.path.join(sdir, fname))
+    if raw is None:
+        return None
+    if fault_plan is not None:
+        column = fname[:-4] if fname.endswith(".col") else fname
+        try:
+            raw = fault_plan.apply(
+                raw, host=host, split=split_id, column=column, attempt=0,
+                healed=healed,
+            )
+        except OSError:
+            return None
+    return raw
+
+
+# ---------------------------------------------------------------------------
+# the walks
+# ---------------------------------------------------------------------------
+
+
+def _walk_root(root: str):
+    """(splits, uncommitted): final committed/legacy split dirs in index
+    order, plus writer-debris names.  Mirrors ``cif.list_splits`` but keeps
+    quarantined splits (repair must revisit them) and surfaces debris."""
+    dirs, debris = [], []
+    any_marker = False
+    for name in sorted(os.listdir(root)):
+        if is_building_dir(name):
+            debris.append(name)
+            continue
+        if not is_split_dir(name):
+            continue
+        sdir = os.path.join(root, name)
+        committed = os.path.exists(os.path.join(sdir, COMMIT_MARKER))
+        any_marker = any_marker or committed
+        dirs.append((int(name.split("-")[1]), name, sdir, committed))
+    splits = []
+    for idx, name, sdir, committed in dirs:
+        if any_marker and not committed:
+            debris.append(name)
+        else:
+            splits.append((idx, sdir))
+    return splits, debris
+
+
+def _split_files(sdir: str, manifest: Optional[Dict[str, Any]]) -> List[str]:
+    if manifest is not None:
+        return sorted(manifest.get("files", {}))
+    return sorted(
+        n for n in os.listdir(sdir)
+        if n.endswith(".col") and not n.endswith(".col.tmp")
+    )
+
+
+def fsck(root: str) -> RepairReport:
+    """Audit-only physical integrity walk — see ``cif.fsck``."""
+    report = RepairReport()
+    splits, report.uncommitted = _walk_root(root)
+    schema = _load_schema(root)
+    for split_id, sdir in splits:
+        report.splits_scanned += 1
+        manifest = read_manifest(sdir)
+        for fname in _split_files(sdir, manifest):
+            expected = _expected(manifest, fname)
+            typ = _type_of(schema, fname)
+            copies = [(-1, _read_file(os.path.join(sdir, fname)))]
+            odir = os.path.join(sdir, REPLICA_OVERLAY)
+            if os.path.isdir(odir):
+                for hname in sorted(os.listdir(odir)):
+                    opath = os.path.join(odir, hname, fname)
+                    if hname.startswith("h") and os.path.exists(opath):
+                        copies.append((int(hname[1:]), _read_file(opath)))
+            for host, raw in copies:
+                state, detail = _classify_bytes(
+                    raw, expected, path=os.path.join(sdir, fname), typ=typ
+                )
+                report.count(CopyState(split_id, fname, host, state, detail))
+        state, detail = _classify_meta(
+            _read_file(os.path.join(sdir, "_meta.json"))
+        )
+        report.count(CopyState(split_id, "_meta.json", -1, state, detail))
+        if os.path.exists(os.path.join(sdir, QUARANTINE_MARKER)):
+            report.quarantined.append(split_id)
+    return report.finish()
+
+
+def repair(
+    root: str,
+    placement: Placement,
+    *,
+    fault_plan: Optional[FaultPlan] = None,
+    queue: Optional[Set[Tuple[int, str, int]]] = None,
+) -> RepairReport:
+    """Scrub + heal — see ``cif.repair`` for the contract."""
+    report = RepairReport()
+    splits, report.uncommitted = _walk_root(root)
+    schema = _load_schema(root)
+    todo: Optional[Dict[int, Set[str]]] = None
+    if queue is not None:
+        todo = {}
+        for split_id, column, _host in queue:
+            todo.setdefault(split_id, set()).add(f"{column}.col")
+    for split_id, sdir in splits:
+        if todo is not None and split_id not in todo:
+            continue
+        report.splits_scanned += 1
+        manifest = read_manifest(sdir)
+        hosts = placement.replicas(split_id)
+        all_files = _split_files(sdir, manifest)
+        files = (
+            [f for f in all_files if f in todo[split_id]]
+            if todo is not None else all_files
+        )
+        split_unserveable = False
+        for fname in files:
+            expected = _expected(manifest, fname)
+            typ = _type_of(schema, fname)
+            base_path = os.path.join(sdir, fname)
+
+            def ok(raw: Optional[bytes]) -> bool:
+                return (
+                    raw is not None
+                    and _classify_bytes(
+                        raw, expected, path=base_path, typ=typ
+                    )[0]
+                    == CLEAN
+                )
+
+            # classify every logical replica copy (damage is pre-healing
+            # state: the report shows what the scrub FOUND)
+            copies = {
+                h: _read_copy(sdir, split_id, fname, h, fault_plan)
+                for h in hosts
+            }
+            source: Optional[bytes] = None
+            for h in hosts:
+                state, detail = _classify_bytes(
+                    copies[h], expected, path=base_path, typ=typ
+                )
+                report.count(CopyState(split_id, fname, h, state, detail))
+                if source is None and state == CLEAN:
+                    source = copies[h]
+            if source is None:
+                # zero clean replica copies: the base file itself may still
+                # be sound (e.g. every host unreachable but media intact)
+                base = _read_file(base_path)
+                if ok(base):
+                    source = base
+            if source is None:
+                split_unserveable = True
+                continue
+            # heal, base first: physical damage is shared by every host,
+            # so a clean base fixes all copies the plan never touched
+            if not ok(_read_file(base_path)):
+                durable_write(base_path, source)
+                report.repaired.append((split_id, fname, -1))
+            for h in hosts:
+                if ok(_read_copy(sdir, split_id, fname, h, fault_plan)):
+                    continue
+                opath = _overlay_path(sdir, h, fname)
+                os.makedirs(os.path.dirname(opath), exist_ok=True)
+                durable_write(opath, source)
+                report.repaired.append((split_id, fname, h))
+                assert ok(
+                    _read_copy(sdir, split_id, fname, h, fault_plan)
+                ), "healed copy must read back clean (acceptance rule)"
+        qpath = os.path.join(sdir, QUARANTINE_MARKER)
+        if split_unserveable:
+            if not os.path.exists(qpath):
+                durable_write_json(
+                    qpath,
+                    {
+                        "v": 1,
+                        "reason": "zero clean replica copies for some file",
+                        "files": files,
+                    },
+                )
+            report.quarantined.append(split_id)
+        elif os.path.exists(qpath) and todo is None:
+            # a FULL scrub proved every file serveable again: lift it
+            os.remove(qpath)
+            fsync_dir(sdir)
+            report.released.append(split_id)
+    return report.finish()

@@ -93,10 +93,9 @@ class RCFileWriter:
 
     def close(self) -> None:
         self._flush_group()
-        tmp = self.path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(self.buf)
-        os.replace(tmp, self.path)
+        from .durable import durable_write
+
+        durable_write(self.path, bytes(self.buf))
 
 
 def _units(ranges: List[tuple], unit: int) -> int:

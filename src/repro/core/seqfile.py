@@ -94,10 +94,9 @@ class SeqWriter:
         import struct
 
         struct.pack_into("<Q", self._buf, self._n_pos, self.n)
-        tmp = self.path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(self._buf)
-        os.replace(tmp, self.path)
+        from .durable import durable_write
+
+        durable_write(self.path, bytes(self._buf))
 
 
 class SeqReader:

@@ -39,6 +39,8 @@ def _from_jsonable(typ: ColumnType, v: Any) -> Any:
 
 
 def write_text(path: str, schema: Schema, records: Iterable[Dict[str, Any]]) -> int:
+    from .durable import fsync_dir
+
     n = 0
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
@@ -47,7 +49,10 @@ def write_text(path: str, schema: Schema, records: Iterable[Dict[str, Any]]) -> 
             f.write(json.dumps(obj, separators=(",", ":")))
             f.write("\n")
             n += 1
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
     return n
 
 

@@ -146,12 +146,16 @@ class TokenCorpusWriter:
     def close(self) -> None:
         # drop a final partial sequence (standard LM packing) but flush splits
         self._cof.close()
-        with open(os.path.join(self.root, "corpus.json"), "w") as f:
-            json.dump({
+        from ..core.durable import durable_write_json
+
+        durable_write_json(
+            os.path.join(self.root, "corpus.json"),
+            {
                 "seq_len": self.seq_len,
                 "n_sequences": self.n_sequences,
                 "vocab_size": self.max_token + 1,
-            }, f)
+            },
+        )
 
 
 class TokenSplit:
@@ -170,6 +174,7 @@ class TokenSplit:
         placement=None,
         fault_plan=None,
         policy=None,
+        fail=None,
     ):
         self.split_dir = split_dir
         self.legacy = schema.type_of("tokens").kind == "bytes"
@@ -179,7 +184,7 @@ class TokenSplit:
         self.reader = SplitReader(
             split_dir, schema, ["tokens", "n_tokens", "loss_mask"],
             split_id=split_id, placement=placement, fault_plan=fault_plan,
-            policy=policy,
+            policy=policy, fail=fail,
         )
         if self.legacy:
             self.dictionary = np.load(os.path.join(split_dir, "tokens.dict.npy"))
@@ -300,11 +305,11 @@ class TokenCorpus:
     def vocab_size(self) -> Optional[int]:
         return self.meta.get("vocab_size")
 
-    def open_split(self, split_id: int) -> TokenSplit:
+    def open_split(self, split_id: int, *, fail=None) -> TokenSplit:
         d = dict(self.splits)[split_id]
         return TokenSplit(
             d, self.schema, split_id=split_id, placement=self.placement,
-            fault_plan=self.fault_plan, policy=self.failure_policy,
+            fault_plan=self.fault_plan, policy=self.failure_policy, fail=fail,
         )
 
     def split_ids(self) -> List[int]:

@@ -131,9 +131,31 @@ def sharded_verify(root: str, columns: list, n_hosts: int, expect_rows: int) -> 
     return total / dt
 
 
+def corpus_fsck(root: str) -> int:
+    """Audit-only integrity walk (``--fsck``): print the report, return the
+    process exit code — 0 clean, 1 damaged."""
+    from ..core import fsck
+
+    report = fsck(root)
+    print(report.format())
+    return 0 if report.clean else 1
+
+
+def corpus_repair(root: str, n_hosts: int, replication: int):
+    """Scrub + heal (``--repair``): replicas come from the same deterministic
+    placement a job over this corpus would use."""
+    from ..core import Placement, list_splits, repair
+
+    n_splits = len(list_splits(root, include_quarantined=True))
+    placement = Placement(n_splits, n_hosts, replication=replication)
+    report = repair(root, placement)
+    print(report.format())
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--kind", choices=["crawl", "tokens"], required=True)
+    ap.add_argument("--kind", choices=["crawl", "tokens"])
     ap.add_argument("--out", required=True)
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--seq-len", type=int, default=512)
@@ -152,7 +174,27 @@ def main() -> None:
                     help="after writing, run a predicate-pushdown scan and "
                          "report pruned-vs-scanned block counts (OP in "
                          "== != < <= > >= contains)")
+    ap.add_argument("--fsck", action="store_true",
+                    help="audit the EXISTING corpus at --out against its "
+                         "commit manifests (no writes); exit 1 on damage")
+    ap.add_argument("--repair", action="store_true",
+                    help="scrub the EXISTING corpus at --out and re-replicate "
+                         "damaged copies from clean replicas (quarantines "
+                         "splits with zero clean copies)")
+    ap.add_argument("--hosts", type=int, default=4,
+                    help="simulated hosts for --repair's placement")
+    ap.add_argument("--replication", type=int, default=3,
+                    help="replication factor for --repair's placement")
     args = ap.parse_args()
+
+    if args.fsck or args.repair:
+        assert args.kind is None, "--fsck/--repair audit an existing corpus; drop --kind"
+        if args.repair:
+            corpus_repair(args.out, args.hosts, args.replication)
+        if args.fsck:
+            raise SystemExit(corpus_fsck(args.out))
+        return
+    assert args.kind is not None, "--kind is required when writing"
 
     if args.kind == "crawl":
         from ..core import COFWriter, ColumnFormat, urlinfo_schema

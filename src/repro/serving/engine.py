@@ -60,24 +60,45 @@ class PromptStore:
     the serving analog of the scan engine's re-enqueue.  Past
     ``max_reexecutions`` epochs the ``SplitRetryExhausted`` surfaces to the
     engine (production would fail the request, not the server).
+
+    Read repair (PR 7): before a failed split is discarded, its reader's
+    ``FailureStats.repair_queue`` — the replica copies the fetch observed
+    corrupt — folds into ``self.stats``, so a serving job can drain the
+    queue post-hoc exactly like a scan:
+    ``cif.repair(root, placement, queue=store.stats.repair_queue)``.
     """
 
     def __init__(self, corpus, max_prompt: int = 32, decode: str = "np",
                  policy=None):
+        from ..core.cif import ScanStats
+
         self.corpus = corpus
         self.max_prompt = max_prompt
         self.decode = decode
         self.policy = policy
+        self.stats = ScanStats()
         self._open: Dict[int, Any] = {}
         self._epochs: Dict[int, int] = {}
+        self._fail: Dict[int, Any] = {}
 
     def _split(self, sid: int):
         sp = self._open.get(sid)
         if sp is None:
+            from ..core.errors import FailureStats
             from ..core.faults import execution_epoch
 
+            # the failure ledger outlives the open attempt: corruption during
+            # open_split itself (stats page, dictionary) would otherwise take
+            # the half-built reader — and its repair queue — down with it.
+            # Each ledger folds into self.stats exactly once, here at
+            # replacement time (or at terminal raise in fetch) — the scalar
+            # counters are additive, so absorbing twice would double-count.
+            old = self._fail.get(sid)
+            if old is not None:
+                self.stats.absorb_failures(old)
+            self._fail[sid] = f = FailureStats()
             with execution_epoch(self._epochs.get(sid, 0)):
-                sp = self._open[sid] = self.corpus.open_split(sid)
+                sp = self._open[sid] = self.corpus.open_split(sid, fail=f)
         return sp
 
     def fetch(self, refs: Sequence[Tuple[int, int]]) -> List[List[int]]:
@@ -102,11 +123,17 @@ class PromptStore:
                     break
                 except (SplitRetryExhausted, CorruptFileError, OSError):
                     # retry via the scan engine's re-execution policy: new
-                    # epoch, fresh split, fresh attempt numbers
+                    # epoch, fresh split, fresh attempt numbers.  On retry
+                    # the reopen in _split folds this epoch's failure ledger
+                    # (the corrupt copies it observed) into self.stats; on
+                    # terminal give-up, fold it here before surfacing.
                     cap = (self.policy.max_reexecutions
                            if self.policy is not None else 0)
                     e = self._epochs.get(sid, 0) + 1
                     if e > cap:
+                        f_bad = self._fail.pop(sid, None)
+                        if f_bad is not None:
+                            self.stats.absorb_failures(f_bad)
                         raise
                     self._epochs[sid] = e
                     self._open.pop(sid, None)

@@ -1,0 +1,518 @@
+"""Self-healing corpus (PR 7): atomic durable commits, checksum scrubber,
+replica repair, read-repair queue, and quarantine.
+
+Tentpole invariants under test:
+
+  * CRASH SAFETY — a writer killed at ANY byte offset of ANY write
+    operation (column files, ``_meta.json``, the commit manifest, the
+    publish rename) leaves the corpus readable at exactly the prior
+    committed state, fsck-clean, and recoverable by re-running the writer.
+  * SELF-HEALING — ``repair()`` re-replicates corrupt copies from clean
+    replicas so a job that PR 6 alone fails with ``CoverageError``
+    completes bit-identically to a no-fault run.
+  * DETERMINISM — ``RepairReport`` and ``ScanStats.repair_queue`` are
+    bit-identical across reruns and serial vs concurrent schedules.
+"""
+import json
+import os
+import shutil
+
+import pytest
+
+from repro.core import (
+    CIFReader, COFWriter, ColumnFormat, ColumnType, CorruptFileError,
+    CoverageError, FailurePolicy, FaultPlan, Placement, SplitRetryExhausted,
+    SplitUnserveableError, add_column, format_storage_report, fsck,
+    list_splits, quarantined_splits, repair, urlinfo_schema,
+)
+from repro.core import cof, durable
+from repro.core.mapreduce import (
+    fig1_map_batch, fig1_reduce, fig1_where, run_job,
+)
+from conftest import make_crawl_records
+
+POLICY = FailurePolicy()
+N_SPLITS, N_HOSTS, SPLIT_RECORDS = 6, 4, 50
+
+
+def _as_list(vals):
+    return vals.tolist() if hasattr(vals, "tolist") else list(vals)
+
+
+def build_crawl(root, n=N_SPLITS * SPLIT_RECORDS, split_records=SPLIT_RECORDS):
+    w = COFWriter(root, urlinfo_schema(),
+                  formats={"metadata": ColumnFormat("dcsl"),
+                           "url": ColumnFormat("skiplist")},
+                  split_records=split_records)
+    w.append_all(make_crawl_records(n))
+    w.close()
+    return root
+
+
+def _run(root, plan=None, policy=None, n_workers=1, placement=None,
+         split_ids=None):
+    r = CIFReader(root, columns=["url", "metadata"],
+                  fault_plan=plan, failure_policy=policy)
+    want = [i for i, _ in r.splits()
+            if split_ids is None or i in split_ids]
+    # run_job requires len(split_ids) == placement.n_splits, so a corpus
+    # with quarantined (or filtered) splits gets a placement sized to the
+    # surviving split list
+    p = placement if placement is not None else Placement(len(want), N_HOSTS)
+    ids, ob = r.job_inputs(batch_size=64, where=fig1_where(), placement=p)
+    ids = [i for i in ids if split_ids is None or i in split_ids]
+    res = run_job(ids, reduce_fn=fig1_reduce, n_hosts=N_HOSTS, placement=p,
+                  open_split_batches=ob, map_batch_fn=fig1_map_batch(),
+                  n_workers=n_workers, fault_plan=plan, failure_policy=policy,
+                  scan_stats=r.stats)
+    return res, r.stats, p
+
+
+def _pre_existing(stats):
+    return {k: getattr(stats, k) for k in (
+        "bytes_io", "bytes_touched", "bytes_decoded", "cells_decoded",
+        "cells_skipped", "blocks_decompressed", "records_scanned",
+        "files_opened", "blocks_pruned_stats", "rows_short_circuited")}
+
+
+# -- crash injection: the commit protocol (tentpole layer 1) ------------------
+
+
+class Crash(BaseException):
+    """The writer process dies NOW.  BaseException so no recovery path in
+    the code under test can accidentally swallow it."""
+
+
+class CrashingIO:
+    """Kill the writer at durable-write op number ``stop``, with ``frac``
+    of that op's payload flushed.  Leaves exactly what a real mid-write
+    kill leaves: a torn ``.tmp`` (never a torn published file) — or, for
+    the publish rename, a fully-built but never-renamed building dir."""
+
+    def __init__(self, mp, stop, frac):
+        self.stop = stop
+        self.frac = frac
+        self.ops = 0
+        self.renames = 0
+        real_write = durable.durable_write
+        real_replace = os.replace
+
+        def dw(path, data, *, fsync=True):
+            if self._fire():
+                with open(path + ".tmp", "wb") as f:
+                    f.write(data[: int(len(data) * frac)])
+                raise Crash(path)
+            real_write(path, data, fsync=fsync)
+
+        def dwj(path, obj, *, fsync=True):
+            dw(path, json.dumps(obj, sort_keys=True).encode("utf-8"),
+               fsync=fsync)
+
+        def replace(src, dst):
+            if cof.is_building_dir(os.path.basename(src)):
+                if self._fire():
+                    raise Crash(src)
+                real_replace(src, dst)
+                self.renames += 1
+            else:
+                real_replace(src, dst)
+
+        mp.setattr(cof, "durable_write", dw)
+        mp.setattr(cof, "durable_write_json", dwj)
+        mp.setattr(os, "replace", replace)
+
+    def _fire(self):
+        self.ops += 1
+        return self.ops - 1 == self.stop
+
+
+CRASH_SPLITS, CRASH_RECORDS = 3, 20
+
+
+def _crash_write(root, stop, frac, records):
+    with pytest.MonkeyPatch.context() as mp:
+        io = CrashingIO(mp, stop, frac)
+        try:
+            w = COFWriter(root, urlinfo_schema(), split_records=CRASH_RECORDS)
+            w.append_all(records)
+            w.close()
+        except Crash:
+            pass
+    return io
+
+
+def test_writer_crash_at_every_offset_preserves_committed_state(tmp_path):
+    """Exhaustive deterministic sweep: one corpus write per (op, fraction)
+    crash point — mid-column-file, mid-``_meta.json``, mid-manifest
+    (pre-marker), and at the publish rename.  After every crash the corpus
+    reads back EXACTLY the committed prefix, fsck is clean, and re-running
+    the writer recovers the full dataset."""
+    records = make_crawl_records(CRASH_SPLITS * CRASH_RECORDS)
+    urls = [r["url"] for r in records]
+
+    # count the write ops of one clean run (also sanity: Crash never fires)
+    probe = _crash_write(str(tmp_path / "probe"), stop=-1, frac=0.0,
+                         records=records)
+    total_ops, total_renames = probe.ops, probe.renames
+    assert total_renames == CRASH_SPLITS
+
+    for stop in range(total_ops):
+        for frac in (0.0, 0.5, 1.0):
+            root = str(tmp_path / f"c{stop}_{int(frac * 2)}")
+            io = _crash_write(root, stop, frac, records)
+            assert io.ops == stop + 1  # the sweep really hit this op
+            committed = io.renames
+            # visible corpus == the committed prefix, bit for bit
+            got_splits = list_splits(root)
+            assert [i for i, _ in got_splits] == list(range(committed))
+            if os.path.exists(os.path.join(root, "schema.json")):
+                r = CIFReader(root, columns=["url"])
+                got = []
+                for b in r.scan_batches(batch_size=64):
+                    got.extend(_as_list(b["url"]))
+                assert got == urls[: committed * CRASH_RECORDS]
+            else:  # crashed writing schema.json itself: nothing visible
+                assert committed == 0
+            # never a parse error, never damage — just debris
+            report = fsck(root)
+            assert report.clean, report.format()
+            assert not report.quarantined
+            # recovery: re-running the writer heals every crash point
+            w = COFWriter(root, urlinfo_schema(), split_records=CRASH_RECORDS)
+            w.append_all(records)
+            w.close()
+            r = CIFReader(root, columns=["url"])
+            got = []
+            for b in r.scan_batches(batch_size=64):
+                got.extend(_as_list(b["url"]))
+            assert got == urls
+            assert fsck(root).clean
+            shutil.rmtree(root)  # keep the sweep's disk footprint flat
+
+
+def test_add_column_crash_at_every_op_preserves_readable_state(tmp_path):
+    """Schema evolution is crash-safe too: ``add_column`` publishes
+    schema.json LAST, so a crash at any earlier durable write leaves the
+    new column invisible and every split readable at its prior state."""
+    root = str(tmp_path / "d")
+    records = make_crawl_records(CRASH_SPLITS * CRASH_RECORDS)
+    urls = [r["url"] for r in records]
+    w = COFWriter(root, urlinfo_schema(), split_records=CRASH_RECORDS)
+    w.append_all(records)
+    w.close()
+
+    def values_fn(si, n):
+        return range(si * 1000, si * 1000 + n)
+
+    def try_add(stop, frac):
+        with pytest.MonkeyPatch.context() as mp:
+            io = CrashingIO(mp, stop, frac)
+            try:
+                add_column(root, "rank", ColumnType("int64"), values_fn)
+            except Crash:
+                return io, False
+        return io, True
+
+    probe, done = try_add(stop=-1, frac=0.0)
+    assert done
+    # reset to the pre-evolution corpus for the sweep
+    shutil.rmtree(root)
+    w = COFWriter(root, urlinfo_schema(), split_records=CRASH_RECORDS)
+    w.append_all(records)
+    w.close()
+
+    for stop in range(probe.ops):
+        io, done = try_add(stop, 0.5)
+        assert not done and io.ops == stop + 1
+        # schema.json is the last op, so every crash leaves "rank" invisible
+        r = CIFReader(root, columns=["url"])
+        assert "rank" not in r.schema
+        got = []
+        for b in r.scan_batches(batch_size=64):
+            got.extend(_as_list(b["url"]))
+        assert got == urls
+        assert fsck(root).clean
+        # resume: re-running the evolution completes it
+        add_column(root, "rank", ColumnType("int64"), values_fn)
+        r = CIFReader(root, columns=["rank"])
+        got = []
+        for b in r.scan_batches(batch_size=64):
+            got.extend(_as_list(b["rank"]))
+        assert got == [v for si in range(CRASH_SPLITS)
+                       for v in values_fn(si, CRASH_RECORDS)]
+        assert fsck(root).clean
+        # rewind for the next crash point
+        shutil.rmtree(root)
+        w = COFWriter(root, urlinfo_schema(), split_records=CRASH_RECORDS)
+        w.append_all(records)
+        w.close()
+
+
+# -- scrubber classification (tentpole layer 2) -------------------------------
+
+
+def test_fsck_classifies_each_damage_type(tmp_path):
+    root = build_crawl(str(tmp_path / "d"), n=200)
+    assert fsck(root).clean
+    # corrupt: flip one byte of split 0's url.col
+    p0 = os.path.join(root, "split-00000", "url.col")
+    raw = bytearray(open(p0, "rb").read())
+    raw[len(raw) // 2] ^= 0x20
+    open(p0, "wb").write(bytes(raw))
+    # torn: truncate split 1's metadata.col
+    p1 = os.path.join(root, "split-00001", "metadata.col")
+    blob = open(p1, "rb").read()
+    open(p1, "wb").write(blob[: len(blob) // 2])
+    # missing: delete split 2's srcUrl.col
+    os.remove(os.path.join(root, "split-00002", "srcUrl.col"))
+
+    report = fsck(root)
+    assert not report.clean
+    states = {(d.split_id, d.file): d.state for d in report.damage}
+    assert states == {
+        (0, "url.col"): "corrupt",
+        (1, "metadata.col"): "torn",
+        (2, "srcUrl.col"): "missing",
+    }
+    assert (report.copies_corrupt, report.copies_torn,
+            report.copies_missing) == (1, 1, 1)
+    # deterministic: two audits render identically
+    assert fsck(root).format() == report.format()
+
+
+def test_fsck_accepts_legacy_markerless_corpus(tmp_path):
+    """A pre-PR-7 corpus (no commit markers anywhere) stays visible and
+    audits clean via the containers' embedded v3.2 checksums."""
+    root = build_crawl(str(tmp_path / "d"), n=150)
+    for i, sdir in list_splits(root):
+        os.remove(os.path.join(sdir, cof.COMMIT_MARKER))
+    assert len(list_splits(root)) == 3
+    report = fsck(root)
+    assert report.clean and report.splits_scanned == 3
+    # ... and damage is still detected without a manifest
+    p = os.path.join(root, "split-00000", "url.col")
+    raw = bytearray(open(p, "rb").read())
+    raw[len(raw) // 2] ^= 0x20
+    open(p, "wb").write(bytes(raw))
+    bad = fsck(root)
+    assert not bad.clean
+    assert bad.damage[0].state in ("corrupt", "torn")
+
+
+def test_uncommitted_debris_is_invisible_but_reported(tmp_path):
+    root = build_crawl(str(tmp_path / "d"), n=150)
+    # leftover building dir + a markerless final dir in a marker-era corpus
+    os.makedirs(os.path.join(root, ".split-00009.building"))
+    shutil.copytree(os.path.join(root, "split-00000"),
+                    os.path.join(root, "split-00007"))
+    os.remove(os.path.join(root, "split-00007", cof.COMMIT_MARKER))
+    assert [i for i, _ in list_splits(root)] == [0, 1, 2]
+    report = fsck(root)
+    assert report.clean
+    assert report.uncommitted == [".split-00009.building", "split-00007"]
+
+
+# -- repair: heal, quarantine, release (tentpole layer 2) ---------------------
+
+
+def test_repair_heals_faultplan_corruption_via_overlay(tmp_path):
+    root = build_crawl(str(tmp_path / "d"))
+    p = Placement(N_SPLITS, N_HOSTS, replication=2)
+    hA = p.replicas(2)[0]
+    plan = FaultPlan(corrupt_blocks=frozenset({(hA, 2, "url", 0)}))
+    r1 = repair(root, p, fault_plan=plan)
+    assert not r1.clean
+    assert r1.repaired == [(2, "url.col", hA)]
+    assert [(d.split_id, d.file, d.host, d.state) for d in r1.damage] == [
+        (2, "url.col", hA, "corrupt")]
+    # the healed copy lives in the overlay and reads clean THROUGH the plan
+    assert os.path.exists(
+        os.path.join(root, "split-00002", "_replicas", f"h{hA}", "url.col"))
+    r2 = repair(root, p, fault_plan=plan)
+    assert r2.clean and not r2.repaired
+    assert repair(root, p, fault_plan=plan) == r2  # deterministic
+
+
+def test_repair_quarantines_and_releases(tmp_path):
+    root = build_crawl(str(tmp_path / "d"))
+    p = Placement(N_SPLITS, N_HOSTS, replication=2)
+    target = os.path.join(root, "split-00003", "url.col")
+    good = open(target, "rb").read()
+    bad = bytearray(good)
+    bad[len(bad) // 2] ^= 0x10
+    open(target, "wb").write(bytes(bad))
+    # physical base damage = every replica copy damaged: zero clean sources
+    r1 = repair(root, p)
+    assert r1.quarantined == [3] and not r1.repaired
+    assert quarantined_splits(root) == [3]
+    assert [i for i, _ in list_splits(root)] == [0, 1, 2, 4, 5]
+    assert "QUARANTINED" in format_storage_report(root)
+    # a quarantined split is repeatable, not flapping
+    assert repair(root, p).quarantined == [3]
+    # restore the bytes (operator restores from backup): full scrub releases
+    open(target, "wb").write(good)
+    r2 = repair(root, p)
+    assert r2.clean and r2.released == [3]
+    assert quarantined_splits(root) == []
+    assert len(list_splits(root)) == N_SPLITS
+
+
+def test_repair_rewrites_physically_damaged_base_from_overlay(tmp_path):
+    """Physical base damage IS healable once any clean per-host copy
+    exists: repair prefers healing the base in place (durable replace)."""
+    root = build_crawl(str(tmp_path / "d"))
+    p = Placement(N_SPLITS, N_HOSTS, replication=2)
+    hA = p.replicas(1)[0]
+    # first: fault-plan corruption seeds a clean overlay copy for hA
+    plan = FaultPlan(corrupt_blocks=frozenset({(hA, 1, "url", 0)}))
+    repair(root, p, fault_plan=plan)
+    # now: the base file takes real damage
+    target = os.path.join(root, "split-00001", "url.col")
+    good = open(target, "rb").read()
+    bad = bytearray(good)
+    bad[len(bad) // 3] ^= 0x40
+    open(target, "wb").write(bytes(bad))
+    r = repair(root, p, fault_plan=plan)
+    assert (1, "url.col", -1) in r.repaired  # base healed in place
+    assert open(target, "rb").read() == good  # bit-identical restoration
+    assert not r.quarantined
+    assert fsck(root).clean
+
+
+# -- E2E: repair restores coverage (the PR's acceptance scenario) -------------
+
+
+def test_repair_restores_coverage_bit_identically(tmp_path):
+    """One replica's copy is corrupt (seeded byte flip); the only other
+    replica can't serve the column (IO errors).  PR 6 alone: every attempt
+    fails -> re-execution budget exhausted -> ``CoverageError``.  After
+    ``repair()`` healed the corrupt copy, the same doomed plan completes
+    with output, remote_reads, and pre-existing ScanStats bit-identical to
+    the no-fault serial run."""
+    root = build_crawl(str(tmp_path / "d"))
+    p2 = Placement(N_SPLITS, N_HOSTS, replication=2)
+    S = 1
+    hA, hB = p2.replicas(S)
+    base, base_stats, _ = _run(root, placement=p2)
+
+    damage = FaultPlan(corrupt_blocks=frozenset({(hA, S, "url", 0)}))
+    doomed = FaultPlan(corrupt_blocks=frozenset({(hA, S, "url", 0)}),
+                       io_errors=frozenset({(hB, S, "url")}))
+    # PR 6 alone: corruption on one replica + unreachable other = dead job
+    with pytest.raises(CoverageError) as ei:
+        _run(root, doomed, POLICY, placement=p2)
+    assert isinstance(ei.value, SplitUnserveableError)
+    assert isinstance(ei.value, SplitRetryExhausted)  # old contract holds
+
+    # heal while hB is still reachable: hA gets a clean overlay copy
+    rep = repair(root, p2, fault_plan=damage)
+    assert rep.repaired == [(S, "url.col", hA)]
+
+    # the formerly-doomed plan now completes — served entirely by hA's
+    # healed copy, so not a single retry, failover, or checksum failure
+    for n_workers in (1, 4):
+        res, stats, _ = _run(root, doomed, POLICY, n_workers=n_workers,
+                             placement=p2)
+        assert res.output == base.output
+        assert res.remote_reads == base.remote_reads == 0
+        assert _pre_existing(stats) == _pre_existing(base_stats)
+        assert stats.checksum_failures == 0
+        assert stats.read_retries == 0
+        assert stats.splits_reexecuted == 0
+        assert stats.repairs_enqueued == 0
+
+
+def test_quarantine_downgrades_coverage_error_to_partial_job(tmp_path):
+    """When NO clean copy exists the split is lost — but the corpus is
+    not: quarantine removes it from the visible split set, so jobs over
+    the reader's splits() complete instead of dying with CoverageError."""
+    root = build_crawl(str(tmp_path / "d"))
+    S = 4
+    ids_without_S = [i for i in range(N_SPLITS) if i != S]
+    expect, _, _ = _run(root, split_ids=ids_without_S)
+    # physical damage to every copy (the base file backs all replicas)
+    target = os.path.join(root, f"split-0000{S}", "url.col")
+    raw = bytearray(open(target, "rb").read())
+    raw[len(raw) // 2] ^= 0x08
+    open(target, "wb").write(bytes(raw))
+    with pytest.raises(CoverageError):
+        _run(root, policy=POLICY)
+    p = Placement(N_SPLITS, N_HOSTS, replication=2)
+    assert repair(root, p).quarantined == [S]
+    res, _, _ = _run(root, policy=POLICY)  # job_inputs skips the quarantined
+    assert res.output == expect.output
+
+
+# -- read-repair queue (tentpole layer 3) -------------------------------------
+
+
+def test_scan_enqueues_corrupt_copies_deterministically(tmp_path):
+    root = build_crawl(str(tmp_path / "d"))
+    p = Placement(N_SPLITS, N_HOSTS)
+    plan = FaultPlan(
+        corrupt_blocks=frozenset({(p.primary(1), 1, "url", 0),
+                                  (p.primary(4), 4, "metadata", 0)}),
+    )
+    expected_queue = {(1, "url", p.primary(1)), (4, "metadata", p.primary(4))}
+    queues = []
+    for n_workers in (1, 4, 1):
+        res, stats, _ = _run(root, plan, POLICY, n_workers=n_workers)
+        assert stats.repair_queue == expected_queue
+        assert stats.repairs_enqueued == 2
+        queues.append(sorted(stats.repair_queue))
+    assert queues[0] == queues[1] == queues[2]
+
+    # draining the queue scrubs ONLY the observed copies, heals them, and
+    # the rerun is failure-free
+    rep = repair(root, p, fault_plan=plan, queue=queues[0])
+    assert rep.splits_scanned == 2
+    assert sorted(rep.repaired) == [(1, "url.col", p.primary(1)),
+                                    (4, "metadata.col", p.primary(4))]
+    base, base_stats, _ = _run(root)
+    res, stats, _ = _run(root, plan, POLICY)
+    assert res.output == base.output
+    assert stats.checksum_failures == 0 and stats.repairs_enqueued == 0
+    assert _pre_existing(stats) == _pre_existing(base_stats)
+
+
+def test_io_errors_do_not_enqueue_repairs(tmp_path):
+    """Transient unreachability is not media damage: IO errors fail over
+    but must never queue a healthy copy for re-replication."""
+    root = build_crawl(str(tmp_path / "d"))
+    p = Placement(N_SPLITS, N_HOSTS)
+    plan = FaultPlan(io_errors=frozenset({(p.primary(2), 2, "url")}))
+    res, stats, _ = _run(root, plan, POLICY)
+    assert stats.read_retries > 0  # the fault did fire
+    assert stats.repairs_enqueued == 0 and stats.repair_queue == set()
+
+
+def test_prompt_store_records_repairs_on_serving_failure(tmp_path):
+    from repro.data.tokens import TokenCorpus, TokenCorpusWriter
+    from repro.launch.load_data import synth_token_docs
+    from repro.serving.engine import PromptStore
+
+    root = str(tmp_path / "corpus")
+    w = TokenCorpusWriter(root, seq_len=32, split_records=16)
+    for toks, meta in synth_token_docs(40, vocab=120, seed=3):
+        w.add_document(toks % 50 + 1, meta)
+    w.close()
+    n_splits = len(list_splits(root))
+    p = Placement(n_splits, N_HOSTS, replication=2)
+
+    threshold = POLICY.max_attempts + 2  # exhaust epoch 0, clean at epoch 1
+    plan = FaultPlan(corrupt_until={(0, "tokens"): threshold})
+    corpus = TokenCorpus(root, placement=p, fault_plan=plan,
+                         failure_policy=POLICY)
+    store = PromptStore(corpus, max_prompt=5, policy=POLICY)
+    store.fetch([(0, 3), (1, 7), (0, 9)])
+    # the failed epoch's observations survived the discarded split reader
+    assert store.stats.repairs_enqueued == len(store.stats.repair_queue) > 0
+    assert {(s, c) for s, c, _ in store.stats.repair_queue} == {(0, "tokens")}
+    assert {h for _, _, h in store.stats.repair_queue} <= set(p.replicas(0))
+
+    # a second identical store observes the identical queue (determinism)
+    store2 = PromptStore(
+        TokenCorpus(root, placement=p, fault_plan=plan, failure_policy=POLICY),
+        max_prompt=5, policy=POLICY)
+    store2.fetch([(0, 3), (1, 7), (0, 9)])
+    assert store2.stats.repair_queue == store.stats.repair_queue
