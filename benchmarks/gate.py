@@ -11,15 +11,18 @@ correctness gates (serial == concurrent, where= == post-hoc filter, ...)
 before timing anything, which is what makes this a functional check and
 not just a crash test.
 
-It also runs two zero-cost documentation drift guards (no network, no
-I/O beyond a few file reads):
+It also runs three zero-cost drift guards (no network, no I/O beyond a
+few file reads):
 
   * every public module in ``src/repro/core/`` must be mentioned in
     ``docs/ARCHITECTURE.md`` (the module-by-module paper map cannot
     silently fall behind a new subsystem);
   * every fixture format version checked in under ``tests/fixtures/``
     must be documented in ``docs/FORMAT.md`` (the wire spec and the
-    compatibility fixtures evolve in lockstep or not at all).
+    compatibility fixtures evolve in lockstep or not at all);
+  * every benchmark module under ``benchmarks/`` must be registered in
+    ``benchmarks/run.py`` (or listed as a standalone tool below) — a
+    benchmark the harness never runs is a benchmark CI never smokes.
 """
 from __future__ import annotations
 
@@ -33,6 +36,10 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _FIXTURE_VERSIONS = {"prepr": "Version 1", "v2": "Version 2",
                      "v3": "Version 3", "v31": "Version 3.1",
                      "v32": "Version 3.2"}
+
+# benchmark modules that are NOT harness jobs: harness infrastructure plus
+# standalone report generators with their own CLIs
+_STANDALONE_BENCH = {"common", "run", "gate", "roofline", "flash_substitution"}
 
 
 def check_docs_drift() -> None:
@@ -73,9 +80,29 @@ def check_docs_drift() -> None:
           f"ARCHITECTURE.md covers core/)")
 
 
+def check_bench_registration() -> None:
+    """Assert every benchmark module is wired into the run.py harness."""
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    with open(os.path.join(bench_dir, "run.py")) as f:
+        run_src = f.read()
+    unregistered = [
+        name for name in sorted(os.listdir(bench_dir))
+        if name.endswith(".py") and not name.startswith("_")
+        and (stem := name[:-3]) not in _STANDALONE_BENCH
+        and f"from . import {stem}" not in run_src
+    ]
+    assert not unregistered, (
+        f"benchmarks {unregistered} are not registered in benchmarks/run.py "
+        "— add them to the jobs list (or to _STANDALONE_BENCH if they are "
+        "standalone tools)"
+    )
+    print("# benchmark registration guard passed")
+
+
 def main() -> None:
     t0 = time.perf_counter()
     check_docs_drift()
+    check_bench_registration()
     sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
     from .run import main as run_main
 

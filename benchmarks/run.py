@@ -20,7 +20,7 @@ def main() -> None:
                          "whole suite doubles as a tier-2 check")
     ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
                     "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode,"
-                    "sharded_scan,encodings,pushdown,faults,repair")
+                    "sharded_scan,encodings,pushdown,faults,repair,serving")
     args = ap.parse_args()
     assert not (args.full and args.smoke), "pick one of --full / --smoke"
     only = set(args.only.split(",")) if args.only else None
@@ -33,6 +33,7 @@ def main() -> None:
     from . import faults as fl
     from . import pushdown as pd
     from . import repair as rp
+    from . import serving as sv
     from . import sharded_scan as ss
     from . import storage_formats as sf
 
@@ -66,6 +67,8 @@ def main() -> None:
                                      write_json=not args.smoke)),
         ("repair", lambda: rp.repair_bench(csv, n=size(24_000, 4000),
                                            write_json=not args.smoke)),
+        ("serving", lambda: sv.serving(csv, n=size(600, 120),
+                                       write_json=not args.smoke)),
     ]
     failures = []
     for name, fn in jobs:

@@ -1,0 +1,205 @@
+"""serving — production serving path: shared hot-block cache, async
+prefetch, multi-tenant admission (PR 8).
+
+A seeded Zipfian multi-tenant request stream over a real token corpus
+drives two layers:
+
+  * **Storage arms** — the same ref stream fetched through ``PromptStore``
+    with the cache off / small budget / large budget.  Correctness is
+    asserted before timing: prompts bit-identical across arms, every
+    PR 1-7 counter except ``bytes_decoded`` identical, and the
+    bytes_decoded drop EXACTLY equal to ``bytes_served_from_cache``.
+    Acceptance: at the fixed (large) budget the Zipfian stream sees a
+    > 50% hit rate and >= 2x less ``bytes_decoded`` than cache-off.
+  * **Engine arms** — the full ``ServeEngine`` decode loop, cache-off /
+    cache-on / cache-on+prefetch, asserting per-request outputs
+    bit-identical across arms and that prefetch reduces admit-stall time.
+    Reports tokens/sec and p50/p99 admit-to-done latency.
+
+Emits ``BENCH_serving.json``:
+
+    {"results": {"n_requests": .., "zipf_alpha": ..,
+                 "fetch_off_s": .., "fetch_small_s": .., "fetch_large_s": ..,
+                 "hit_rate_small": .., "hit_rate_large": ..,
+                 "bytes_decoded_off": .., "bytes_decoded_large": ..,
+                 "bytes_decoded_reduction_x": ..,
+                 "engine_off_s": .., "engine_cache_s": .., "engine_prefetch_s": ..,
+                 "tokens_per_sec": .., "latency_p50_ms": .., "latency_p99_ms": ..,
+                 "admit_stall_sync_ms": .., "admit_stall_prefetch_ms": ..}}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import random
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.blockcache import BlockCache
+from repro.data.tokens import TokenCorpus, TokenCorpusWriter
+from repro.launch.load_data import synth_token_docs
+from repro.serving.engine import AdmissionPolicy, PromptStore, Request, ServeEngine
+
+from .common import Csv
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
+
+ZIPF_ALPHA = 1.1
+SMALL_BUDGET = 16 << 10  # deliberately starved: shows eviction pressure
+LARGE_BUDGET = 8 << 20   # the "fixed budget" acceptance arm
+TENANTS = ("acme", "globex", "initech")
+CACHE_FIELDS = ("cache_hits", "cache_misses", "cache_evictions",
+                "bytes_served_from_cache")
+
+
+def _build_corpus(root: str) -> TokenCorpus:
+    w = TokenCorpusWriter(root, seq_len=48, split_records=96)
+    for toks, meta in synth_token_docs(150, vocab=120, seed=17):
+        w.add_document(toks % 50 + 1, meta)  # vocab-safe prompt ids
+    w.close()
+    return TokenCorpus(root)
+
+
+def _zipf_refs(corpus: TokenCorpus, n: int, seed: int = 23):
+    """Seeded Zipfian stream: split popularity is rank-Zipf (the cache is
+    keyed per split's column files, so split skew is what locality means
+    here); the record within a split is uniform."""
+    rnd = random.Random(seed)
+    sizes = corpus.split_sizes()
+    ids = list(corpus.split_ids())
+    rnd.shuffle(ids)  # random rank assignment
+    weights = [1.0 / (rank + 1) ** ZIPF_ALPHA for rank in range(len(ids))]
+    return [(sid, rnd.randrange(sizes[sid]))
+            for sid in rnd.choices(ids, weights=weights, k=n)]
+
+
+def _fetch_arm(corpus, refs, cache, group: int = 8):
+    """Replay the ref stream through a PromptStore in admit-sized groups;
+    returns (seconds, prompts, final ScanStats, cache)."""
+    store = PromptStore(corpus, max_prompt=6, cache=cache)
+    prompts = []
+    t0 = time.perf_counter()
+    for i in range(0, len(refs), group):
+        prompts.extend(store.fetch(refs[i : i + group]))
+    dt = time.perf_counter() - t0
+    return dt, prompts, store.close(), cache
+
+
+def _engine_arm(corpus, refs, cache, prefetch: bool):
+    """Full decode loop over the request stream; returns
+    (seconds, {rid: out}, engine, ScanStats)."""
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import lm
+    from repro.models.spec import init_params
+
+    cfg = dataclasses.replace(reduced(get_config("tinyllama-1.1b")),
+                              dtype="float32")
+    params = init_params(lm.param_spec(cfg), jax.random.PRNGKey(0))
+    store = PromptStore(corpus, max_prompt=6, cache=cache)
+    eng = ServeEngine(
+        cfg, params, max_batch=4, max_seq=64, prompt_store=store,
+        admission=AdmissionPolicy(max_queue_depth=1 << 30),
+        prefetch=prefetch,
+    )
+    for rid, ref in enumerate(refs):
+        eng.submit(Request(rid=rid, prompt_ref=ref, max_new=4,
+                           tenant=TENANTS[rid % len(TENANTS)]))
+    t0 = time.perf_counter()
+    done = eng.run(max_steps=1_000_000)
+    dt = time.perf_counter() - t0
+    eng.close()
+    assert len(done) == len(refs), "every admitted request must finish"
+    return dt, {r.rid: r.out for r in done}, eng, store.close()
+
+
+def serving(csv: Csv, n: int = 600, write_json: bool = True) -> None:
+    tmp = tempfile.mkdtemp(prefix="bench-serving-")
+    try:
+        corpus = _build_corpus(os.path.join(tmp, "corpus"))
+        refs = _zipf_refs(corpus, n)
+
+        # -- storage arms: cache off / small / large ----------------------
+        t_off, p_off, st_off, _ = _fetch_arm(corpus, refs, None)
+        t_sm, p_sm, st_sm, c_sm = _fetch_arm(corpus, refs,
+                                             BlockCache(SMALL_BUDGET))
+        t_lg, p_lg, st_lg, c_lg = _fetch_arm(corpus, refs,
+                                             BlockCache(LARGE_BUDGET))
+        assert p_off == p_sm == p_lg, "cache changed fetch results"
+        for st in (st_sm, st_lg):
+            for k, v in vars(st_off).items():
+                if k in CACHE_FIELDS or k in ("bytes_decoded",
+                                              "blocks_decompressed"):
+                    continue
+                assert vars(st)[k] == v, k
+            assert (st.bytes_decoded + st.bytes_served_from_cache
+                    == st_off.bytes_decoded), "inexact cache-bytes delta"
+        assert c_lg.hit_rate > 0.5, (
+            f"Zipfian hit rate {c_lg.hit_rate:.2f} <= 50% at fixed budget"
+        )
+        reduction = st_off.bytes_decoded / max(st_lg.bytes_decoded, 1)
+        assert reduction >= 2.0, (
+            f"bytes_decoded reduced only {reduction:.2f}x (need >= 2x)"
+        )
+        csv.add("serving/fetch_cache_off", t_off,
+                f"bytes_decoded={st_off.bytes_decoded}")
+        csv.add("serving/fetch_cache_small", t_sm,
+                f"hit_rate={c_sm.hit_rate:.3f} evictions={c_sm.evictions}")
+        csv.add("serving/fetch_cache_large", t_lg,
+                f"hit_rate={c_lg.hit_rate:.3f} reduction={reduction:.1f}x")
+
+        # -- engine arms: off / cache / cache+prefetch --------------------
+        eng_refs = refs[: max(n // 4, 24)]  # decode dominates; keep it sane
+        t_a, out_a, eng_a, _ = _engine_arm(corpus, eng_refs, None, False)
+        t_b, out_b, eng_b, _ = _engine_arm(corpus, eng_refs,
+                                           BlockCache(LARGE_BUDGET), False)
+        t_c, out_c, eng_c, _ = _engine_arm(corpus, eng_refs,
+                                           BlockCache(LARGE_BUDGET), True)
+        assert out_a == out_b == out_c, "cache/prefetch changed outputs"
+        assert eng_c.admit_stall_s < eng_b.admit_stall_s, (
+            f"prefetch did not reduce admit stall "
+            f"({eng_c.admit_stall_s:.4f}s vs {eng_b.admit_stall_s:.4f}s)"
+        )
+        toks = sum(len(o) for o in out_c.values())
+        lats = [l for ts in eng_c.tenant_stats.values()
+                for l in ts.latencies_s]
+        p50, p99 = np.percentile(lats, 50), np.percentile(lats, 99)
+        csv.add("serving/engine_cache_off", t_a)
+        csv.add("serving/engine_cache_on", t_b,
+                f"stall={eng_b.admit_stall_s * 1e3:.2f}ms")
+        csv.add("serving/engine_prefetch", t_c,
+                f"stall={eng_c.admit_stall_s * 1e3:.2f}ms "
+                f"tok/s={toks / t_c:.0f}")
+
+        if write_json:
+            results = {
+                "n_requests": n,
+                "zipf_alpha": ZIPF_ALPHA,
+                "fetch_off_s": t_off,
+                "fetch_small_s": t_sm,
+                "fetch_large_s": t_lg,
+                "hit_rate_small": c_sm.hit_rate,
+                "hit_rate_large": c_lg.hit_rate,
+                "bytes_decoded_off": st_off.bytes_decoded,
+                "bytes_decoded_large": st_lg.bytes_decoded,
+                "bytes_decoded_reduction_x": reduction,
+                "engine_off_s": t_a,
+                "engine_cache_s": t_b,
+                "engine_prefetch_s": t_c,
+                "tokens_per_sec": toks / t_c,
+                "latency_p50_ms": float(p50) * 1e3,
+                "latency_p99_ms": float(p99) * 1e3,
+                "admit_stall_sync_ms": eng_b.admit_stall_s * 1e3,
+                "admit_stall_prefetch_ms": eng_c.admit_stall_s * 1e3,
+            }
+            with open(JSON_PATH, "w") as f:
+                json.dump({"results": results}, f, indent=2)
+            print(f"wrote {JSON_PATH}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

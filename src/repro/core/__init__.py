@@ -14,6 +14,7 @@ from .cif import (
     format_storage_report, fsck, list_splits, quarantined_splits,
     read_schema, repair, storage_report,
 )
+from .blockcache import BlockCache
 from .cof import COFWriter, add_column, split_name
 from .colfile import CBLOCK_RECORDS, ColumnFileReader, ColumnFileWriter, ColumnFormat
 from .durable import durable_write, durable_write_json, fsync_dir
@@ -60,7 +61,8 @@ from .schema import (
 )
 
 __all__ = [
-    "ARRAY", "BOOL", "BYTES", "BatchColumns", "BlockCorruptionError",
+    "ARRAY", "BOOL", "BYTES", "BatchColumns", "BlockCache",
+    "BlockCorruptionError",
     "BloomFilter", "CBLOCK_RECORDS",
     "CIFReader", "COFWriter", "ColumnFileReader", "ColumnFileWriter",
     "ColumnFormat", "ColumnType", "CopyState", "CorruptFileError",

@@ -1,0 +1,171 @@
+"""Shared decoded-block cache for the serving + training read paths.
+
+The paper's lazy record construction never deserializes *unwanted* bytes;
+this module extends that to never deserializing the *same* bytes twice.
+``BlockCache`` is a bounded, thread-safe LRU keyed on
+``(file_key, artifact, block_index)`` — ``file_key`` identifies one column
+file of one split (its path, stable across reopens and replica failover,
+since replicas are byte-identical), ``artifact`` distinguishes the decoded
+forms a reader produces:
+
+    "blk"   decoded value block of the v2 encoded kinds (plain / cblock)
+    "page"  parsed ``DictPage`` of a one-block dict column (``read_packed``)
+    "sld"   a skiplist dict-mode dictionary page (per SKIPLIST_DICT_BLOCK)
+
+``ColumnFileReader`` consults the cache before hitting ``varcodec`` /
+``encodings.decode_block`` and inserts what it decodes; ``SplitReader`` /
+``TokenSplit`` / ``PromptStore`` / ``HostPipeline`` just thread one shared
+instance through, so training and serving reuse a single eviction policy.
+
+Counter contract (the reason this stays bit-identical to cache-off runs):
+
+  * A **hit** advances ``bytes_touched`` / ``blocks_skipped`` / cell
+    counters exactly as the decode would have, but NOT ``bytes_decoded``
+    or ``blocks_decompressed`` — instead ``cache_hits`` counts the touch
+    and ``bytes_served_from_cache`` records EXACTLY the ``bytes_decoded``
+    the decode would have charged.  Hence the audited invariant
+    ``stats_off.bytes_decoded ==
+    stats_on.bytes_decoded + stats_on.bytes_served_from_cache``
+    and every other PR 1-7 counter bit-identical cache-on vs cache-off.
+  * A **miss** counts ``cache_misses`` and then decodes/accounts exactly
+    as a cache-less reader would.  A cold single-pass scan therefore
+    reports ALL pre-existing counters unchanged (only misses move).
+  * Entries the reader re-serves without a "fresh block touch" (e.g. the
+    ``read_packed``-then-``read_range`` re-decode of the current block,
+    which never counted bytes) count neither hits nor served bytes.
+
+Schedule-freedom: scan jobs partition splits across workers, so every
+cache key is touched by exactly one reader per job and per-reader
+hit/miss/served counters fold into ``ScanStats`` deterministically.
+``cache_evictions`` is charged to the *inserting* reader; with a budget
+that never evicts mid-job (the concurrency-identity regime) it is zero
+everywhere, and any eviction pressure is deterministic for a fixed
+access sequence.
+
+The byte budget is measured in DECODED-PAYLOAD bytes (the same quantity
+``bytes_decoded`` meters), which keeps the accounting exact and the
+budget deterministic; an entry larger than the whole budget is simply
+not cached.  Values must be treated as immutable by all consumers —
+they are shared across readers and tenants.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, Hashable, Optional, Tuple
+
+
+class BlockCache:
+    """Bounded thread-safe LRU over decoded column-file artifacts.
+
+    One instance is shared across every tenant / pipeline that should
+    pool its hot blocks; all mutation happens under one lock, and each
+    entry is stored as a single tuple so readers can never observe a
+    torn (value, size) pair.
+    """
+
+    def __init__(self, capacity_bytes: int):
+        assert capacity_bytes >= 0, capacity_bytes
+        self.capacity_bytes = int(capacity_bytes)
+        self._lock = threading.Lock()
+        # key -> (value, nbytes, saved): nbytes charges the budget, saved
+        # is what a hit adds to bytes_served_from_cache (0 for artifacts
+        # whose decode never charged bytes_decoded, e.g. skiplist dict
+        # pages — keeping the exact-delta invariant global).
+        self._entries: "OrderedDict[Hashable, Tuple[Any, int, int]]" = OrderedDict()
+        self.current_bytes = 0
+        # lifetime cache-global counters (informational / benchmark hit
+        # rate); per-reader determinism lives in ReadCounters instead
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_served = 0
+
+    # -- core ----------------------------------------------------------------
+    def get(self, key: Hashable, counters: Optional[Any] = None) -> Optional[Any]:
+        """The cached value for ``key`` (refreshed to most-recently-used),
+        or None.  With ``counters`` (a ``ReadCounters``) the lookup is a
+        COUNTED block touch: hit/miss and served bytes are charged there;
+        without it the lookup is silent (uncounted re-serves)."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                if counters is not None:
+                    counters.cache_misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            self.bytes_served += ent[2]
+            if counters is not None:
+                counters.cache_hits += 1
+                counters.bytes_served_from_cache += ent[2]
+            return ent[0]
+
+    def put(
+        self,
+        key: Hashable,
+        value: Any,
+        nbytes: int,
+        counters: Optional[Any] = None,
+        *,
+        saved: Optional[int] = None,
+    ) -> None:
+        """Insert ``value`` under ``key`` charging ``nbytes`` against the
+        budget; ``saved`` (default ``nbytes``) is what a later hit reports
+        as served-from-cache.  Evicts LRU entries until the budget holds;
+        evictions are charged to ``counters`` (the inserting reader).  An
+        entry exceeding the whole budget is not cached; re-inserting an
+        existing key only refreshes its recency."""
+        nbytes = int(nbytes)
+        if nbytes > self.capacity_bytes:
+            return
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                return
+            self._entries[key] = (value, nbytes, nbytes if saved is None else saved)
+            self.current_bytes += nbytes
+            while self.current_bytes > self.capacity_bytes:
+                _, (_, freed, _) = self._entries.popitem(last=False)
+                self.current_bytes -= freed
+                self.evictions += 1
+                if counters is not None:
+                    counters.cache_evictions += 1
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def snapshot(self) -> Dict[str, int]:
+        """Consistent point-in-time view (taken under the lock): budget
+        usage plus the lifetime counters.  ``current_bytes <= capacity``
+        is the capacity invariant the hammer test audits."""
+        with self._lock:
+            return {
+                "capacity_bytes": self.capacity_bytes,
+                "current_bytes": self.current_bytes,
+                "entries": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_served": self.bytes_served,
+            }
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.current_bytes = 0
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        s = self.snapshot()
+        return (
+            f"BlockCache({s['current_bytes']}/{s['capacity_bytes']}B, "
+            f"{s['entries']} entries, {s['hits']}h/{s['misses']}m/"
+            f"{s['evictions']}e)"
+        )

@@ -267,6 +267,19 @@ class ScanStats:
     # serial vs concurrent.
     repairs_enqueued: int = 0
     repair_queue: set = field(default_factory=set)  # {(split, column, host)}
+    # shared block cache (PR 8; zero without one).  Schedule-free: every
+    # (split, column, block) key is touched by exactly one split execution
+    # per job, so hit/miss decisions depend only on that execution's own
+    # access order — bit-identical serial vs concurrent (evictions are
+    # charged to the inserting reader and are zero under a budget that
+    # never evicts mid-job).  bytes_served_from_cache records EXACTLY the
+    # decode bytes hits avoided, so a cache-off run's bytes_decoded equals
+    # a cache-on run's bytes_decoded + bytes_served_from_cache and every
+    # other counter above stays bit-identical cache-on vs cache-off.
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    bytes_served_from_cache: int = 0
 
     def absorb(self, c: ReadCounters, file_bytes: int) -> None:
         self.bytes_io += file_bytes
@@ -275,6 +288,10 @@ class ScanStats:
         self.cells_decoded += c.cells_decoded
         self.cells_skipped += c.cells_skipped
         self.blocks_decompressed += c.blocks_decompressed
+        self.cache_hits += c.cache_hits
+        self.cache_misses += c.cache_misses
+        self.cache_evictions += c.cache_evictions
+        self.bytes_served_from_cache += c.bytes_served_from_cache
         self.files_opened += 1
 
     def absorb_failures(self, f: FailureStats) -> None:
@@ -335,9 +352,14 @@ class SplitReader:
         fault_plan: Optional[FaultPlan] = None,
         policy: Optional[FailurePolicy] = None,
         fail: Optional[FailureStats] = None,
+        cache: Optional[Any] = None,
     ):
         self.split_dir = split_dir
         self.schema = schema
+        # shared decoded-block cache (core.blockcache), threaded into every
+        # column reader this split opens; keys derive from the column-file
+        # path, so reopened splits serve previously-decoded blocks as hits
+        self._cache = cache
         self.columns = list(columns)  # openable (projection + predicate)
         # the caller-requested projection: what batches/records expose.
         # Predicate-only columns stay readable by explicit name but never
@@ -458,7 +480,9 @@ class SplitReader:
             # lazy verification, but corruption raises instead of recovering
             with open(path, "rb") as f:
                 raw = f.read()
-            return ColumnFileReader(raw, typ, path=path, fail=self.fail)
+            return ColumnFileReader(
+                raw, typ, path=path, fail=self.fail, cache=self._cache
+            )
         verify = self._policy.verify if self._policy is not None else True
 
         def fetch() -> bytes:
@@ -475,7 +499,7 @@ class SplitReader:
             try:
                 return ColumnFileReader(
                     raw, typ, path=path, fail=self.fail, fetch=fetch,
-                    verify=verify, on_corrupt=on_corrupt,
+                    verify=verify, on_corrupt=on_corrupt, cache=self._cache,
                 )
             except SplitRetryExhausted:
                 raise  # mid-recovery exhaustion inside the constructor
@@ -811,6 +835,7 @@ class CIFReader:
         *,
         fault_plan: Optional[FaultPlan] = None,
         failure_policy: Optional[FailurePolicy] = None,
+        cache: Optional[Any] = None,
     ):
         self.root = root
         self.schema = read_schema(root)
@@ -820,6 +845,10 @@ class CIFReader:
         self.lazy = lazy
         self.fault_plan = fault_plan
         self.failure_policy = failure_policy
+        # shared decoded-block cache (core.blockcache.BlockCache): scans
+        # consult it before decoding and report the reuse in ScanStats;
+        # outputs and all pre-cache counters stay bit-identical cache-off
+        self.cache = cache
         self.stats = ScanStats()
         self._stats_lock = threading.Lock()
 
@@ -885,7 +914,7 @@ class CIFReader:
         return SplitReader(split_dir, self.schema, cols, lazy_open=lazy_open,
                            project=self.columns, split_id=split_id,
                            placement=placement, fault_plan=self.fault_plan,
-                           policy=self.failure_policy)
+                           policy=self.failure_policy, cache=self.cache)
 
     def _where_columns(self, where: Expr) -> List[str]:
         cols = sorted(where.columns())

@@ -184,6 +184,15 @@ class ReadCounters:
     cells_skipped: int = 0
     blocks_decompressed: int = 0
     blocks_skipped: int = 0
+    # shared block cache (blockcache.py; zero without one).  A hit advances
+    # every counter above exactly as the decode would EXCEPT bytes_decoded/
+    # blocks_decompressed; bytes_served_from_cache records exactly the
+    # bytes_decoded the hit avoided, so
+    # off.bytes_decoded == on.bytes_decoded + on.bytes_served_from_cache.
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    bytes_served_from_cache: int = 0
 
 
 def _write_str(buf: bytearray, s: str) -> None:
@@ -489,8 +498,19 @@ class ColumnFileReader:
         fetch: Optional[Callable[[], bytes]] = None,
         verify: bool = True,
         on_corrupt: Optional[Callable[[], None]] = None,
+        cache: Optional[Any] = None,
+        cache_key: Optional[Any] = None,
     ):
         self.path = path
+        # shared decoded-block cache (core.blockcache.BlockCache): consulted
+        # before any block decode, keyed on (file identity, artifact, block).
+        # The default file identity is the path — stable across reopens and
+        # byte-identical replicas; in-memory readers must name their own key.
+        self._cache = cache
+        self._ckey = cache_key if cache_key is not None else path
+        assert cache is None or self._ckey != "<memory>", (
+            "a shared cache needs a stable identity: pass path= or cache_key="
+        )
         self._fail = fail if fail is not None else FailureStats()
         self._fetch = fetch
         self._verify = verify
@@ -788,6 +808,10 @@ class ColumnFileReader:
         self._pos = 0
         self._page: Optional[DictPage] = None
         self._page_touched = False
+        # tri-state: None = no cache consulted, True/False = the parsed dict
+        # page came from / missed the shared cache (read_packed charges the
+        # hit-vs-decode accounting at its first-touch point)
+        self._page_from_cache: Optional[bool] = None
 
     def _enc_load(self, bi: int) -> None:
         if bi != self._cur_block:
@@ -803,6 +827,18 @@ class ColumnFileReader:
             c.blocks_skipped += bi - self._cur_block - 1 if self._cur_block >= 0 else bi
             c.bytes_touched += plen
             self._page_touched = True  # read_packed must not recount either
+        if self._cache is not None:
+            # a hit serves the decoded values without touching varcodec:
+            # bytes_decoded / blocks_decompressed stay put, the avoided
+            # decode bytes land in bytes_served_from_cache instead.  Only a
+            # FRESH touch counts as hit/miss (uncounted re-serves of the
+            # current block stay uncounted, matching the cache-off path).
+            cached = self._cache.get((self._ckey, "blk", bi), c if fresh else None)
+            if cached is not None:
+                self._vals = cached
+                self._cur_block = bi
+                self._first = first
+                return
         if self.codec == "none":
             data, off, end = self.body, poff + 1, poff + plen
             tag = self.body[poff]
@@ -815,6 +851,8 @@ class ColumnFileReader:
         if fresh:
             c.bytes_decoded += end - off
         self._vals = decode_block(self.typ, tag, data, off, end, nrec)
+        if self._cache is not None:
+            self._cache.put((self._ckey, "blk", bi), self._vals, end - off, c)
         self._cur_block = bi
         self._first = first
 
@@ -859,11 +897,26 @@ class ColumnFileReader:
         if self._page is None:
             self._verify_block(0)
             nrec, poff, plen, _ = self._blocks[0]
+            if self._cache is not None:
+                # the parsed page is the decoded artifact a reopened split
+                # (PromptStore / HostPipeline) re-needs; hit-vs-decode
+                # accounting is deferred to read_packed's first-touch point,
+                # where bytes_decoded is normally charged
+                cached = self._cache.get((self._ckey, "page", 0))
+                if cached is not None:
+                    self._page = cached
+                    self._page_from_cache = True
+                    return self._page
             tag = self.body[poff]
             assert TAG_NAMES[tag] == "dict", (
                 f"packed-code access needs a dict-encoded block, got {TAG_NAMES[tag]!r}"
             )
             self._page = DictPage(self.typ, self.body, poff + 1, poff + plen, nrec)
+            if self._cache is not None:
+                self._page_from_cache = False
+                self._cache.put(
+                    (self._ckey, "page", 0), self._page, plen - 1, self.counters
+                )
         return self._page
 
     def dict_page(self) -> DictPage:
@@ -886,7 +939,15 @@ class ColumnFileReader:
         c = self.counters
         if not self._page_touched:
             c.bytes_touched += plen
-            c.bytes_decoded += plen - 1
+            if self._page_from_cache:
+                # hit: the parse was skipped, so the page bytes a cache-off
+                # reader decodes here are served from cache instead
+                c.cache_hits += 1
+                c.bytes_served_from_cache += plen - 1
+            else:
+                if self._page_from_cache is False:  # counted miss (cache on)
+                    c.cache_misses += 1
+                c.bytes_decoded += plen - 1
             self._page_touched = True
             self._cur_block = 0
         wpc = page.words_per_cell()
@@ -912,12 +973,31 @@ class ColumnFileReader:
             return off
         if i == self._sld_index:  # idempotent revisit
             return self._sld_end[i]
+        if self._cache is not None:
+            # skiplist dict pages are the kind's one block-granular decoded
+            # artifact (cell spans decode exact, so caching them would skew
+            # counters).  The SkipListReader's own byte counters never cover
+            # hook bytes, so a hit changes NO pre-existing counter: saved=0
+            # keeps the bytes_served_from_cache == avoided-bytes_decoded
+            # invariant exact.
+            ent = self._cache.get((self._ckey, "sld", i), self.counters)
+            if ent is not None:
+                self._sld_starts, self._sld_lengths, self._sld_arr, end = ent
+                self._sld_index = i
+                self._sld_end[i] = end
+                return end
         v, o = read_uvarint(data, off)
         if self.typ.kind in ("string", "bytes"):
             self._sld_starts, self._sld_lengths, o = decode_ragged_range(data, o, v)
         else:
             arr, o = decode_varint_range(data, o, v)
             self._sld_arr = arr.astype(np.int32) if self.typ.kind == "int32" else arr
+        if self._cache is not None:
+            self._cache.put(
+                (self._ckey, "sld", i),
+                (self._sld_starts, self._sld_lengths, self._sld_arr, o),
+                o - off, self.counters, saved=0,
+            )
         self._sld_index = i
         self._sld_end[i] = o
         return o

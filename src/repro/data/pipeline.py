@@ -30,6 +30,8 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
+from ..core.blockcache import BlockCache
+from ..core.cif import ScanStats
 from ..core.placement import Placement
 from .sampler import SamplerState, ShardedSampler
 from .tokens import TokenCorpus, TokenSplit
@@ -58,10 +60,22 @@ class HostPipeline:
         prefetch: int = 2,
         state: Optional[PipelineState] = None,
         decode: str = "np",
+        cache: Optional[BlockCache] = None,
     ):
         self.corpus = corpus
         self.batch = batch_per_host
         self.decode = decode
+        # decoded-block reuse now lives in the SHARED block cache (the same
+        # policy + counters the serving path uses) instead of the ad-hoc
+        # oldest-first open-split map earlier revisions kept: splits open
+        # per batch group, and their dict pages / mask blocks come back as
+        # cache hits.  Pass the serving engine's cache to pool hot blocks
+        # across training and serving; ``stats`` folds every retired
+        # reader's counters (cache reuse included).
+        self.cache = cache if cache is not None else BlockCache(
+            self.DEFAULT_CACHE_BYTES
+        )
+        self.stats = ScanStats()
         ids = corpus.split_ids()
         # size the corpus from split metadata only — opening every split
         # would read every column file on every host (anti-CPP startup scan)
@@ -71,25 +85,19 @@ class HostPipeline:
             sizes, placement, host, seed=seed,
             state=state.sampler if state else None,
         )
-        self._open: Dict[int, TokenSplit] = {}
         self._prefetch_n = prefetch
         self._q: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
     # -- core synchronous iteration ----------------------------------------
-    MAX_OPEN_SPLITS = 3
+    DEFAULT_CACHE_BYTES = 64 << 20
 
-    def _split(self, sid: int) -> TokenSplit:
-        sp = self._open.pop(sid, None)
-        if sp is None:
-            # oldest-first eviction; the requested split is never evicted
-            # (it is inserted last) and live splits survive until the cap.
-            while len(self._open) >= self.MAX_OPEN_SPLITS:
-                del self._open[next(iter(self._open))]
-            sp = self.corpus.open_split(sid)
-        self._open[sid] = sp  # (re-)insert last == most recently used
-        return sp
+    def _retire(self, sp: TokenSplit) -> None:
+        """Fold a batch group's reader counters into ``stats`` before the
+        split object is dropped (its decoded state lives on in the cache)."""
+        for r in sp.reader.readers.values():
+            self.stats.absorb(r.counters, r.file_bytes)
 
     def _make_batch(self) -> Dict[str, np.ndarray]:
         it = iter(self.sampler)
@@ -100,15 +108,15 @@ class HostPipeline:
         tokens = mask = None
         for sid, rid_slots in by_split.items():
             # sorted ids keep the forward-only monotone readers happy; the
-            # whole group decodes in one record_batch call.
+            # whole group decodes in one record_batch call.  Each group
+            # opens its split fresh — the shared block cache (not held-open
+            # readers) carries the decoded dict page + mask blocks across
+            # batches, so a reopen costs file reads, not decodes.
             rid_slots.sort()
             uniq = sorted({r for r, _ in rid_slots})
-            sp = self._split(sid)
-            if sp.position > uniq[0]:
-                # reader already past the lowest id (resume / new epoch): reopen
-                del self._open[sid]
-                sp = self._split(sid)
+            sp = self.corpus.open_split(sid, cache=self.cache)
             t, m = sp.record_batch(uniq, decode=self.decode)
+            self._retire(sp)
             row_of = {r: i for i, r in enumerate(uniq)}
             if tokens is None:
                 tokens = np.empty((self.batch,) + t.shape[1:], t.dtype)

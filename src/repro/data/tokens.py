@@ -175,6 +175,7 @@ class TokenSplit:
         fault_plan=None,
         policy=None,
         fail=None,
+        cache=None,
     ):
         self.split_dir = split_dir
         self.legacy = schema.type_of("tokens").kind == "bytes"
@@ -184,7 +185,7 @@ class TokenSplit:
         self.reader = SplitReader(
             split_dir, schema, ["tokens", "n_tokens", "loss_mask"],
             split_id=split_id, placement=placement, fault_plan=fault_plan,
-            policy=policy, fail=fail,
+            policy=policy, fail=fail, cache=cache,
         )
         if self.legacy:
             self.dictionary = np.load(os.path.join(split_dir, "tokens.dict.npy"))
@@ -282,12 +283,15 @@ class TokenSplit:
 
 class TokenCorpus:
     def __init__(self, root: str, *, placement=None, fault_plan=None,
-                 failure_policy=None):
+                 failure_policy=None, cache=None):
         self.root = root
         # fault-tolerant read wiring (PR 6), threaded into every TokenSplit
         self.placement = placement
         self.fault_plan = fault_plan
         self.failure_policy = failure_policy
+        # shared decoded-block cache (PR 8): every split this corpus opens
+        # consults it, so training and serving pool one set of hot blocks
+        self.cache = cache
         # the dataset's own schema.json tells new (ARRAY tokens) from legacy
         # (BYTES tokens + sidecar) corpora
         try:
@@ -305,11 +309,12 @@ class TokenCorpus:
     def vocab_size(self) -> Optional[int]:
         return self.meta.get("vocab_size")
 
-    def open_split(self, split_id: int, *, fail=None) -> TokenSplit:
+    def open_split(self, split_id: int, *, fail=None, cache=None) -> TokenSplit:
         d = dict(self.splits)[split_id]
         return TokenSplit(
             d, self.schema, split_id=split_id, placement=self.placement,
             fault_plan=self.fault_plan, policy=self.failure_policy, fail=fail,
+            cache=cache if cache is not None else self.cache,
         )
 
     def split_ids(self) -> List[int]:

@@ -13,11 +13,37 @@ inline.  ``PromptStore`` resolves those refs on the COLUMNAR batch path —
 each admit step groups the refs of all admitted requests by split and
 issues ONE ``TokenSplit.record_batch`` (``SplitReader.read_batch``
 underneath) per split, instead of one scalar ``value_at`` chain per slot.
+
+Production path (PR 8):
+
+  * **Shared hot-block cache** — ``PromptStore`` threads a
+    ``core.blockcache.BlockCache`` into every split it opens, so the
+    forward-only reopen (a backward seek discards the reader) serves
+    previously-decoded dict pages / mask blocks as cache HITS instead of
+    re-decoding them; one cache instance is shared across tenants (and
+    optionally with the training ``HostPipeline``).
+  * **Async prefetch** — with ``prefetch=True`` the engine issues admit
+    step N+1's grouped ``record_batch`` reads on a background executor
+    while step N decodes; ``_admit`` then only waits for the residual
+    (``admit_stall_s`` meters exactly that wait, prefetched or not).  The
+    PR-6/7 failure ladder is preserved across the thread boundary: fetch
+    runs epochs/retries/repair-queue folding inside the worker, and any
+    terminal ``SplitRetryExhausted``/``CorruptFileError`` re-raises on the
+    main thread at collect time — the same surface as the sync path.
+  * **Multi-tenant admission control** — per-tenant FIFO queues with a
+    bounded depth (``submit`` raises the typed ``AdmissionRejected`` at
+    the cap), a cache-budget watermark that DEFERS admission while the
+    shared cache is saturated and slots are still decoding, deterministic
+    round-robin fair-share admission across tenants, and per-tenant
+    latency / queue-depth stats (``tenant_stats``).
 """
 from __future__ import annotations
 
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +64,57 @@ class Request:
     # columnar prompt reference: (split_id, record_id) resolved by the
     # engine's PromptStore at admit time (batched per step)
     prompt_ref: Optional[Tuple[int, int]] = None
+    # multi-tenant admission: which tenant's queue this request joins
+    tenant: str = "default"
+    # wall-clock lifecycle marks (submit/admit/done), for latency stats
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class AdmissionRejected(RuntimeError):
+    """Typed backpressure signal: a tenant's queue is at its depth bound.
+
+    Raised by ``ServeEngine.submit`` — the caller (a frontend) is expected
+    to shed or retry; nothing is partially enqueued.
+    """
+
+    def __init__(self, tenant: str, depth: int, limit: int):
+        self.tenant = tenant
+        self.depth = depth
+        self.limit = limit
+        super().__init__(
+            f"tenant {tenant!r}: queue depth {depth} at limit {limit}"
+        )
+
+
+@dataclass
+class AdmissionPolicy:
+    """Backpressure knobs for multi-tenant admission.
+
+    ``max_queue_depth`` bounds each tenant's queue (``submit`` raises
+    ``AdmissionRejected`` past it).  ``cache_watermark`` (a fraction of
+    the shared block cache's byte budget) DEFERS admission while cache
+    occupancy exceeds it AND some slot is still decoding — new prompts
+    would evict the very blocks live requests are reusing; deferral never
+    starves the engine (an idle engine always admits).
+    """
+
+    max_queue_depth: int = 64
+    cache_watermark: Optional[float] = None
+
+
+@dataclass
+class TenantStats:
+    """Per-tenant serving accounting (``ServeEngine.tenant_stats``)."""
+
+    submitted: int = 0
+    rejected: int = 0
+    admitted: int = 0
+    finished: int = 0
+    peak_queue_depth: int = 0
+    # admit-to-done wall seconds per finished request (p50/p99 material)
+    latencies_s: List[float] = field(default_factory=list)
 
 
 class PromptStore:
@@ -54,6 +131,15 @@ class PromptStore:
     are cached; a split whose forward-only readers are already past the
     lowest requested id is reopened (same policy as the training pipeline).
 
+    Hot-block cache (PR 8): with ``cache=`` (a shared
+    ``core.blockcache.BlockCache``), every split opens against it — a
+    reopened split's dict page and mask blocks come back as cache hits, so
+    a hot split's second fetch decodes ~zero bytes.  Decode counters
+    (``ReadCounters``, cache reuse included) fold into ``self.stats`` when
+    a split is cleanly retired (reopen or ``close()``); an execution
+    abandoned to a failure contributes nothing, exactly like the scan
+    engine.
+
     Fault tolerance (PR 6): with a ``policy``, a fetch that hits corruption
     or an IO error drops the cached split, bumps its execution epoch (fresh
     read-attempt numbers against the corpus's fault plan), and reopens —
@@ -69,13 +155,14 @@ class PromptStore:
     """
 
     def __init__(self, corpus, max_prompt: int = 32, decode: str = "np",
-                 policy=None):
+                 policy=None, cache=None):
         from ..core.cif import ScanStats
 
         self.corpus = corpus
         self.max_prompt = max_prompt
         self.decode = decode
         self.policy = policy
+        self.cache = cache
         self.stats = ScanStats()
         self._open: Dict[int, Any] = {}
         self._epochs: Dict[int, int] = {}
@@ -98,8 +185,28 @@ class PromptStore:
                 self.stats.absorb_failures(old)
             self._fail[sid] = f = FailureStats()
             with execution_epoch(self._epochs.get(sid, 0)):
-                sp = self._open[sid] = self.corpus.open_split(sid, fail=f)
+                sp = self._open[sid] = self.corpus.open_split(
+                    sid, fail=f, cache=self.cache
+                )
         return sp
+
+    def _retire(self, sid: int) -> None:
+        """Fold a CLEANLY-discarded split's decode counters into ``stats``
+        and drop it.  Failure ledgers fold separately (``_split``/``fetch``)
+        and abandoned executions contribute no decode counters — the same
+        determinism contract the scan engine keeps."""
+        sp = self._open.pop(sid, None)
+        if sp is None:
+            return
+        for r in sp.reader.readers.values():
+            self.stats.absorb(r.counters, r.file_bytes)
+
+    def close(self):
+        """Retire every open split (folding its counters) and return the
+        final ``ScanStats`` — benchmarks/tests read totals through this."""
+        for sid in list(self._open):
+            self._retire(sid)
+        return self.stats
 
     def fetch(self, refs: Sequence[Tuple[int, int]]) -> List[List[int]]:
         """Resolve refs to prompts; one columnar batch read per split."""
@@ -116,7 +223,7 @@ class PromptStore:
                 try:
                     sp = self._split(sid)
                     if sp.position > uniq[0]:  # forward-only readers: reopen
-                        del self._open[sid]
+                        self._retire(sid)
                         sp = self._split(sid)
                     with execution_epoch(self._epochs.get(sid, 0)):
                         toks, mask = sp.record_batch(uniq, decode=self.decode)
@@ -153,30 +260,98 @@ class ServeEngine:
         max_batch: int = 8,
         max_seq: int = 512,
         prompt_store: Optional[PromptStore] = None,
+        admission: Optional[AdmissionPolicy] = None,
+        prefetch: bool = False,
     ):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.prompt_store = prompt_store
+        self.admission = admission if admission is not None else AdmissionPolicy()
         self.caches = lm.init_cache(cfg, max_batch, max_seq)
         # per-slot bookkeeping
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)  # next absolute position
-        self.slot_pending: List[List[int]] = [[] for _ in range(max_batch)]
-        self.queue: List[Request] = []
+        self.slot_pending: List[Deque[int]] = [deque() for _ in range(max_batch)]
+        # multi-tenant admission: one FIFO per tenant + per-tenant stats
+        self._queues: Dict[str, Deque[Request]] = {}
+        self.tenant_stats: Dict[str, TenantStats] = {}
+        self._rr = 0  # fair-share rotation cursor (rotates per admit step)
+        self.admissions_deferred = 0
+        # admit-stall accounting: wall seconds _admit spent WAITING on
+        # prompt fetches (the full fetch when synchronous; only the
+        # residual future-wait when prefetched)
+        self.admit_stall_s = 0.0
+        # async prefetch: one background worker owns the PromptStore while
+        # the main thread decodes — serialized handoff (issue after admit,
+        # collect before the next admit), so the store needs no lock
+        self._prefetch = bool(prefetch) and prompt_store is not None
+        self._exec: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(max_workers=1, thread_name_prefix="prompt-prefetch")
+            if self._prefetch else None
+        )
+        self._pf_future: Optional[Future] = None
+        self._pf_reqs: List[Request] = []
         self._decode = jax.jit(
             lambda p, c, t, q: lm.decode_step(p, c, t, q, cfg)
         )
 
     # -- request management --------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    @property
+    def queue(self) -> List[Request]:
+        """Pending (unadmitted) requests across all tenants, in the
+        deterministic fair-share order admission would take them."""
+        return self._admission_order(sum(len(q) for q in self._queues.values()))
 
-    def _reset_slot(self, slot: int) -> None:
-        """Invalidate a freed slot's cache state before reuse: stale KV
+    def submit(self, req: Request) -> None:
+        q = self._queues.setdefault(req.tenant, deque())
+        ts = self.tenant_stats.setdefault(req.tenant, TenantStats())
+        ts.submitted += 1
+        if len(q) >= self.admission.max_queue_depth:
+            ts.rejected += 1
+            raise AdmissionRejected(
+                req.tenant, len(q), self.admission.max_queue_depth
+            )
+        req.t_submit = time.perf_counter()
+        q.append(req)
+        ts.peak_queue_depth = max(ts.peak_queue_depth, len(q))
+
+    def _admission_order(self, k: int) -> List[Request]:
+        """The next up-to-``k`` pending requests in deterministic fair-share
+        order: round-robin one request per tenant per cycle over the sorted
+        tenant names, the starting tenant rotating each admit step so no
+        tenant is structurally first."""
+        tenants = sorted(t for t, q in self._queues.items() if q)
+        if not tenants or k <= 0:
+            return []
+        start = self._rr % len(tenants)
+        order = tenants[start:] + tenants[:start]
+        out: List[Request] = []
+        depth = 0
+        while len(out) < k:
+            took = False
+            for t in order:
+                q = self._queues[t]
+                if depth < len(q):
+                    out.append(q[depth])
+                    took = True
+                    if len(out) == k:
+                        return out
+            if not took:
+                return out
+            depth += 1
+        return out
+
+    def _reset_slots(self, slots: Sequence[int]) -> None:
+        """Invalidate freed slots' cache state before reuse: stale KV
         positions must not be attendable (pos=-1) and recurrent states must
-        zero.  Stacked (scanned) segments carry a leading layer dim."""
+        zero.  ALL slots of an admit step reset in ONE pass over the cache
+        pytree (one gather-scatter per array, not one rebuild per request);
+        stacked (scanned) segments carry a leading layer dim."""
+        if not len(slots):
+            return
+        idx = jnp.asarray(list(slots), jnp.int32)
         plan = self.cfg.layer_plan()
         new_caches = []
         for si, (kind, count) in enumerate(plan):
@@ -184,27 +359,97 @@ class ServeEngine:
             stacked = count > 1 and kind != "shared_attn"
             baxis = 1 if stacked else 0
 
-            def at_slot(arr, value):
-                idx = (slice(None),) * baxis + (slot,)
-                return arr.at[idx].set(value)
+            def at_slots(arr, value):
+                index = (slice(None),) * baxis + (idx,)
+                return arr.at[index].set(value)
 
             out = {}
             for k, v in seg.items():
                 if k == "pos":
-                    out[k] = at_slot(v, -1)
+                    out[k] = at_slots(v, -1)
                 elif k in ("k", "v"):
                     out[k] = v  # masked out via pos
                 else:  # ssm / conv / S / n / h / c / m — recurrent state
-                    out[k] = at_slot(v, 0)
+                    out[k] = at_slots(v, 0)
             new_caches.append(out)
         self.caches = new_caches
 
+    # -- async prefetch -------------------------------------------------------
+    def _prefetch_issue(self) -> None:
+        """Issue the NEXT admit step's grouped record_batch reads on the
+        background executor while this step's decode runs.  Speculation is
+        exact: admission order is deterministic, so the requests fetched
+        are precisely the ones the next admit steps take first."""
+        if not self._prefetch or self._pf_future is not None:
+            return
+        need = [
+            r for r in self._admission_order(self.max_batch)
+            if r.prompt is None and r.prompt_ref is not None
+        ]
+        if not need:
+            return
+        refs = [r.prompt_ref for r in need]
+        self._pf_reqs = need
+        self._pf_future = self._exec.submit(self.prompt_store.fetch, refs)
+
+    def _prefetch_collect(self) -> None:
+        """Join the in-flight prefetch (charging only the residual wait to
+        ``admit_stall_s``) and attach the prompts.  A fetch that exhausted
+        the failure ladder re-raises HERE, on the main thread — the same
+        exception surface as the synchronous path."""
+        if self._pf_future is None:
+            return
+        t0 = time.perf_counter()
+        try:
+            prompts = self._pf_future.result()
+        finally:
+            self._pf_future = None
+            self.admit_stall_s += time.perf_counter() - t0
+        for r, p in zip(self._pf_reqs, prompts):
+            r.prompt = p
+        self._pf_reqs = []
+
+    def close(self) -> None:
+        """Release the prefetch executor (joins any in-flight fetch)."""
+        if self._pf_future is not None:
+            try:
+                self._pf_future.result()
+            except Exception:
+                pass
+            self._pf_future = None
+        if self._exec is not None:
+            self._exec.shutdown(wait=True)
+            self._exec = None
+            self._prefetch = False
+
+    # -- admission ------------------------------------------------------------
     def _admit(self) -> None:
         free = [s for s in range(self.max_batch) if self.slot_req[s] is None]
-        admitted = self.queue[: len(free)]
+        self._prefetch_collect()  # attach prefetched prompts; re-raise faults
+        if not free:
+            return
+        # cache-budget watermark backpressure: while the shared cache is
+        # saturated and live slots are still decoding, admitting more
+        # prompts would evict the blocks they are reusing — defer (never
+        # when idle: progress beats backpressure on an empty engine)
+        pol = self.admission
+        cache = self.prompt_store.cache if self.prompt_store is not None else None
+        if (
+            pol.cache_watermark is not None
+            and cache is not None
+            and self.active > 0
+            and cache.current_bytes > pol.cache_watermark * cache.capacity_bytes
+            and self._admission_order(1)
+        ):
+            self.admissions_deferred += 1
+            return
+        admitted = self._admission_order(len(free))
         if not admitted:
             return
-        del self.queue[: len(admitted)]
+        for r in admitted:
+            head = self._queues[r.tenant].popleft()
+            assert head is r, "fair-share order must be a per-tenant prefix"
+        self._rr += 1  # rotate the fair-share starting tenant
         # batched feature fetch: resolve every admitted ref in ONE columnar
         # read per split (read_batch), not one scalar chain per slot
         need = [r for r in admitted if r.prompt is None]
@@ -215,17 +460,23 @@ class ServeEngine:
             assert self.prompt_store is not None, (
                 "request carries prompt_ref but the engine has no PromptStore"
             )
+            t0 = time.perf_counter()
             prompts = self.prompt_store.fetch([r.prompt_ref for r in need])
+            self.admit_stall_s += time.perf_counter() - t0
             for r, p in zip(need, prompts):
                 r.prompt = p
+        now = time.perf_counter()
         for slot, req in zip(free, admitted):
             assert len(req.prompt) >= 1
-            self._reset_slot(slot)
             self.slot_req[slot] = req
             self.slot_pos[slot] = 0
             # prompt tokens are fed one at a time through decode steps
             # (token-level prefill; fine for short prompts / tests)
-            self.slot_pending[slot] = list(req.prompt)
+            self.slot_pending[slot] = deque(req.prompt)
+            req.t_admit = now
+            self.tenant_stats[req.tenant].admitted += 1
+        # ONE cache-pytree pass resets every slot admitted this step
+        self._reset_slots(free[: len(admitted)])
 
     @property
     def active(self) -> int:
@@ -243,15 +494,20 @@ class ServeEngine:
             if req is None:
                 continue
             if self.slot_pending[slot]:
-                tokens[slot, 0] = self.slot_pending[slot].pop(0)
+                tokens[slot, 0] = self.slot_pending[slot].popleft()
             else:
                 tokens[slot, 0] = req.out[-1] if req.out else 0
         pos = jnp.asarray(self.slot_pos)
+        # overlap: issue the next admit step's prompt reads before this
+        # step's decode dispatches — the fetch thread runs while XLA
+        # compute holds the main thread (and releases the GIL)
+        self._prefetch_issue()
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(tokens), pos
         )
         next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
         finished = []
+        now = None
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -262,9 +518,17 @@ class ServeEngine:
             hit_eos = req.eos is not None and req.out[-1] == req.eos
             if hit_eos or len(req.out) >= req.max_new or self.slot_pos[slot] >= self.max_seq:
                 req.done = True
+                if now is None:
+                    now = time.perf_counter()
+                req.t_done = now
+                ts = self.tenant_stats.get(req.tenant)
+                if ts is not None:
+                    ts.finished += 1
+                    if req.t_admit is not None:
+                        ts.latencies_s.append(now - req.t_admit)
                 finished.append(req)
                 self.slot_req[slot] = None
-                self.slot_pending[slot] = []
+                self.slot_pending[slot] = deque()
         return finished
 
     def run(self, max_steps: int = 10_000) -> List[Request]:

@@ -272,13 +272,14 @@ def test_pipeline_device_decode_matches_np(corpus):
         np.testing.assert_array_equal(a["loss_mask"], b["loss_mask"])
 
 
-def test_pipeline_split_cache_eviction(corpus):
+def test_pipeline_shared_block_cache_reuse(corpus):
+    # the old ad-hoc open-split map is gone: decoded-block reuse rides the
+    # shared BlockCache, stays within its byte budget, and is metered
     pipe = HostPipeline(corpus, batch_per_host=4, prefetch=0, seed=1)
     it = iter(pipe)
     for _ in range(12):
         next(it)
-        assert len(pipe._open) <= pipe.MAX_OPEN_SPLITS
-    # the most recently requested split is always cached afterwards
-    sid = next(iter(reversed(pipe._open)))
-    pipe._split(sid)
-    assert sid in pipe._open
+        assert pipe.cache.current_bytes <= pipe.cache.capacity_bytes
+    assert pipe.cache.hits > 0  # revisited splits reuse decoded blocks
+    assert pipe.stats.cache_hits == pipe.cache.hits
+    assert pipe.stats.bytes_served_from_cache == pipe.cache.bytes_served

@@ -1,0 +1,176 @@
+"""Shared hot-block cache (PR 8): LRU semantics, thread-safety under a
+hammer, and the counter contract — cache-on vs cache-off scans are
+bit-identical in output and in every PR 1-7 counter, with bytes_decoded's
+drop on warm runs exactly equal to bytes_served_from_cache."""
+import threading
+
+import pytest
+
+from repro.core import CIFReader, COFWriter, ColumnFormat, urlinfo_schema
+from repro.core.blockcache import BlockCache
+from conftest import make_crawl_records
+
+CACHE_FIELDS = ("cache_hits", "cache_misses", "cache_evictions",
+                "bytes_served_from_cache")
+
+
+# -- LRU semantics ------------------------------------------------------------
+
+
+def test_lru_eviction_order():
+    c = BlockCache(capacity_bytes=30)
+    c.put("a", 1, 10)
+    c.put("b", 2, 10)
+    c.put("c", 3, 10)
+    assert c.get("a") == 1  # refresh a -> b is now LRU
+    c.put("d", 4, 10)
+    assert c.get("b") is None and c.evictions == 1
+    assert c.get("a") == 1 and c.get("c") == 3 and c.get("d") == 4
+    assert c.current_bytes == 30 <= c.capacity_bytes
+
+
+def test_oversize_entry_not_cached_and_reinsert_refreshes():
+    c = BlockCache(capacity_bytes=25)
+    c.put("huge", b"x", 26)  # larger than the whole budget: skipped
+    assert len(c) == 0 and c.current_bytes == 0
+    c.put("a", 1, 10)
+    c.put("b", 2, 10)
+    c.put("a", 1, 10)  # re-insert refreshes recency, no double-charge
+    assert c.current_bytes == 20
+    c.put("c", 3, 10)  # evicts b (LRU), not a
+    assert c.get("b") is None and c.get("a") == 1
+
+
+def test_counter_plumbing_and_hit_rate():
+    from repro.core.colfile import ReadCounters
+
+    c = BlockCache(capacity_bytes=100)
+    rc = ReadCounters()
+    assert c.get("k", rc) is None
+    c.put("k", "v", 40, rc, saved=7)
+    assert c.get("k", rc) == "v"
+    assert (rc.cache_hits, rc.cache_misses, rc.bytes_served_from_cache) == (1, 1, 7)
+    assert c.hit_rate == 0.5
+    snap = c.snapshot()
+    assert snap["current_bytes"] == 40 and snap["entries"] == 1
+
+
+# -- thread-safety hammer -----------------------------------------------------
+
+
+def test_concurrent_hammer_capacity_and_no_torn_entries():
+    """8 threads insert/read key-derived values against a budget far below
+    the working set: capacity is never exceeded and every hit returns the
+    exact value its key implies (entries are atomic, never torn)."""
+    cap = 64 * 8  # holds ~64 of 512 live keys
+    c = BlockCache(capacity_bytes=cap)
+    errors = []
+
+    def worker(tid):
+        try:
+            for i in range(2000):
+                # skewed stream: 2/3 of touches hit 16 hot keys (resident),
+                # the rest churn a 512-key tail (forces evictions)
+                k = i % 16 if i % 3 else (tid * 7 + i * 13) % 512
+                v = c.get(("k", k))
+                if v is not None:
+                    assert v == ("payload", k, k * k), "torn entry"
+                else:
+                    c.put(("k", k), ("payload", k, k * k), 8)
+                assert c.snapshot()["current_bytes"] <= cap
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert c.current_bytes <= cap and c.evictions > 0 and c.hits > 0
+
+
+# -- scan integration: the counter contract -----------------------------------
+
+
+@pytest.fixture(scope="module")
+def crawl(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("crawl-cache") / "d")
+    records = make_crawl_records(900)
+    # mixed formats: plain, skiplist (dict hook), dcsl, compressed cblock
+    w = COFWriter(root, urlinfo_schema(),
+                  formats={"metadata": ColumnFormat("dcsl"),
+                           "url": ColumnFormat("skiplist"),
+                           "content": ColumnFormat("cblock", codec="zlib")},
+                  split_records=128)
+    w.append_all(records)
+    w.close()
+    return root, records
+
+
+def _scan(root, cache):
+    r = CIFReader(root, columns=["url", "fetchTime", "content"], cache=cache)
+    rows = []
+    for cols in r.scan_batches(batch_size=128):
+        rows.extend(zip(cols["url"].tolist(),
+                        cols["fetchTime"].tolist(),
+                        cols["content"].lengths.tolist()))
+    return rows, r.stats
+
+
+def test_cold_scan_bit_identical_cache_on_vs_off(crawl):
+    """A cold single-pass scan is all misses: outputs AND every PR 1-7
+    counter are bit-identical with the cache on vs off."""
+    root, _ = crawl
+    rows_off, stats_off = _scan(root, cache=None)
+    rows_on, stats_on = _scan(root, cache=BlockCache(1 << 30))
+    assert rows_on == rows_off
+    off, on = vars(stats_off), vars(stats_on)
+    for k in off:
+        if k not in CACHE_FIELDS:
+            assert on[k] == off[k], k
+    assert stats_on.cache_hits == 0  # forward scans touch each block once
+    assert stats_on.cache_misses > 0
+    assert stats_on.bytes_served_from_cache == 0
+
+
+def test_warm_scan_exact_bytes_decoded_delta(crawl):
+    """A second scan over a shared cache serves decodes as hits; the
+    bytes_decoded drop equals bytes_served_from_cache EXACTLY, and all
+    other counters (minus decompression avoided by hits) are unchanged."""
+    root, _ = crawl
+    cache = BlockCache(1 << 30)
+    rows1, stats1 = _scan(root, cache)
+    rows2, stats2 = _scan(root, cache)
+    assert rows2 == rows1
+    assert stats2.cache_hits > 0 and stats2.cache_evictions == 0
+    assert stats2.bytes_decoded + stats2.bytes_served_from_cache == stats1.bytes_decoded
+    assert stats2.bytes_decoded < stats1.bytes_decoded
+    # hits advance traversal/cell counters exactly as the decode would
+    for k in ("bytes_io", "bytes_touched", "cells_decoded", "cells_skipped",
+              "files_opened", "records_scanned"):
+        assert vars(stats2)[k] == vars(stats1)[k], k
+    # compressed blocks served from cache skip the codec entirely
+    assert stats2.blocks_decompressed < stats1.blocks_decompressed
+
+
+def test_run_job_counters_identical_serial_vs_workers(crawl):
+    """With an ample budget (no evictions) the new cache counters are
+    schedule-free: full ScanStats bit-identical serial vs n_workers=4."""
+    from repro.core.mapreduce import run_job
+
+    root, _ = crawl
+
+    def map_batch(split_id, cols, emit):
+        emit(None, int(cols["fetchTime"].sum()))
+
+    results = []
+    for workers in (1, 4):
+        r = CIFReader(root, columns=["fetchTime", "content"],
+                      cache=BlockCache(1 << 30))
+        ids, open_batches = r.job_inputs(batch_size=128)
+        res = run_job(ids, n_hosts=4, n_workers=workers,
+                      open_split_batches=open_batches, map_batch_fn=map_batch)
+        results.append((res.output, vars(r.stats)))
+    assert results[0][0] == results[1][0]
+    assert results[0][1] == results[1][1]

@@ -136,3 +136,130 @@ def test_engine_prompt_refs_match_inline_prompts(small_corpus):
         eng_inline.submit(Request(rid=rid, prompt=list(p), max_new=4))
     by_inline = {r.rid: r.out for r in eng_inline.run()}
     assert by_ref == by_inline and len(by_ref) == len(refs)
+
+
+# -- PR 8: shared hot-block cache, prefetch, multi-tenant admission ----------
+
+
+CACHE_FIELDS = ("cache_hits", "cache_misses", "cache_evictions",
+                "bytes_served_from_cache")
+
+
+def test_prompt_store_reopen_serves_cache_hits(small_corpus):
+    """Forward-only reopen of a hot split decodes ~zero bytes: the dict
+    page and mask blocks come back from the shared cache."""
+    from repro.core.blockcache import BlockCache
+
+    cache = BlockCache(1 << 30)
+    store = PromptStore(small_corpus, max_prompt=5, cache=cache)
+    refs = [(0, 3), (0, 7)]
+    first = store.fetch(refs)
+    # readers are now past record 3 -> the same refs force a reopen
+    second = store.fetch(refs)
+    assert second == first
+    assert cache.hits > 0
+    sp = store._open[0]  # the reopened split
+    decoded = sum(r.counters.bytes_decoded for r in sp.reader.readers.values())
+    served = sum(r.counters.bytes_served_from_cache
+                 for r in sp.reader.readers.values())
+    assert decoded == 0 and served > 0  # second fetch decoded NOTHING
+    stats = store.close()
+    assert stats.cache_hits == cache.hits
+    assert stats.bytes_served_from_cache == cache.bytes_served
+
+
+def test_serving_outputs_and_stats_identical_cache_on_vs_off(small_corpus):
+    """Same request stream with and without the cache: per-rid outputs are
+    bit-identical, every PR 1-7 counter except bytes_decoded (and the
+    decompression hits avoid) matches, and the bytes_decoded drop equals
+    bytes_served_from_cache exactly."""
+    from repro.core.blockcache import BlockCache
+
+    refs = [(0, 1), (1, 5), (0, 8), (1, 11), (0, 3), (1, 2), (0, 14), (0, 1)]
+    outs, stats = [], []
+    for cache in (None, BlockCache(1 << 30)):
+        store = PromptStore(small_corpus, max_prompt=4, cache=cache)
+        _, _, eng = _engine(slots=2, prompt_store=store)
+        for rid, ref in enumerate(refs):
+            eng.submit(Request(rid=rid, prompt_ref=ref, max_new=3))
+        outs.append({r.rid: r.out for r in eng.run()})
+        stats.append(vars(store.close()))
+    assert outs[0] == outs[1] and len(outs[0]) == len(refs)
+    off, on = stats
+    for k in off:
+        if k in CACHE_FIELDS or k in ("bytes_decoded", "blocks_decompressed"):
+            continue
+        assert on[k] == off[k], k
+    assert off["bytes_decoded"] == on["bytes_decoded"] + on["bytes_served_from_cache"]
+    assert on["cache_hits"] > 0  # repeated splits actually reused blocks
+
+
+def test_prefetch_outputs_match_sync(small_corpus):
+    """Async prefetch changes scheduling, never results."""
+    from repro.core.blockcache import BlockCache
+
+    refs = [(0, 1), (1, 5), (0, 8), (1, 11), (0, 14), (1, 7), (0, 3)]
+    outs = []
+    for prefetch in (False, True):
+        store = PromptStore(small_corpus, max_prompt=4,
+                            cache=BlockCache(1 << 30))
+        _, _, eng = _engine(slots=2, prompt_store=store, prefetch=prefetch)
+        for rid, ref in enumerate(refs):
+            eng.submit(Request(rid=rid, prompt_ref=ref, max_new=3))
+        outs.append({r.rid: r.out for r in eng.run()})
+        assert eng.admit_stall_s >= 0.0
+        eng.close()
+    assert outs[0] == outs[1] and len(outs[0]) == len(refs)
+
+
+def test_admission_rejects_at_queue_depth():
+    from repro.serving.engine import AdmissionPolicy, AdmissionRejected
+
+    _, _, eng = _engine(slots=1, admission=AdmissionPolicy(max_queue_depth=2))
+    eng.submit(Request(rid=0, prompt=[1], max_new=2, tenant="a"))
+    eng.submit(Request(rid=1, prompt=[1], max_new=2, tenant="a"))
+    with pytest.raises(AdmissionRejected) as ei:
+        eng.submit(Request(rid=2, prompt=[1], max_new=2, tenant="a"))
+    assert ei.value.tenant == "a" and ei.value.limit == 2
+    eng.submit(Request(rid=3, prompt=[1], max_new=2, tenant="b"))  # b has room
+    assert eng.tenant_stats["a"].rejected == 1
+    done = eng.run()
+    assert {r.rid for r in done} == {0, 1, 3}
+
+
+def test_fair_share_admission_interleaves_tenants():
+    _, _, eng = _engine(slots=2)
+    for rid in range(4):
+        eng.submit(Request(rid=rid, prompt=[1], max_new=2, tenant="a"))
+    for rid in range(4, 6):
+        eng.submit(Request(rid=rid, prompt=[1], max_new=2, tenant="b"))
+    # round-robin one per tenant per cycle, deterministic
+    order = [r.rid for r in eng._admission_order(6)]
+    assert order == [0, 4, 1, 5, 2, 3]
+    done = eng.run()
+    assert len(done) == 6
+    a, b = eng.tenant_stats["a"], eng.tenant_stats["b"]
+    assert a.admitted == 4 and b.admitted == 2
+    assert a.finished == 4 and b.finished == 2
+    assert len(a.latencies_s) == 4 and len(b.latencies_s) == 2
+    assert a.peak_queue_depth == 4 and b.peak_queue_depth == 2
+
+
+def test_cache_watermark_defers_but_never_starves(small_corpus):
+    """A saturated cache defers admission while slots are busy, yet every
+    request still completes (an idle engine always admits)."""
+    from repro.core.blockcache import BlockCache
+    from repro.serving.engine import AdmissionPolicy
+
+    store = PromptStore(small_corpus, max_prompt=4, cache=BlockCache(1 << 30))
+    _, _, eng = _engine(
+        slots=2, prompt_store=store,
+        admission=AdmissionPolicy(cache_watermark=0.0),
+    )
+    # staggered lengths: one slot frees while the other still decodes, so
+    # the third request sees a busy engine + saturated cache -> deferred
+    for rid, max_new in enumerate((2, 8, 3)):
+        eng.submit(Request(rid=rid, prompt_ref=(0, 1 + rid), max_new=max_new))
+    done = eng.run()
+    assert len(done) == 3
+    assert eng.admissions_deferred > 0
