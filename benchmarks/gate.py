@@ -22,7 +22,15 @@ few file reads):
     compatibility fixtures evolve in lockstep or not at all);
   * every benchmark module under ``benchmarks/`` must be registered in
     ``benchmarks/run.py`` (or listed as a standalone tool below) — a
-    benchmark the harness never runs is a benchmark CI never smokes.
+    benchmark the harness never runs is a benchmark CI never smokes;
+  * every observability counter field (``ScanStats``, ``ReadCounters``,
+    ``FailureStats``) must appear in docs/ARCHITECTURE.md's counter
+    reference — a counter the docs don't name is a counter nobody can
+    interpret in a trace or a baseline diff.
+
+The smoke pass also runs ``benchmarks/regress.py`` in check mode — the
+ScanStats record/replay gate against the committed ``BENCH_baseline.json``
+(it never writes the baseline).
 """
 from __future__ import annotations
 
@@ -80,6 +88,30 @@ def check_docs_drift() -> None:
           f"ARCHITECTURE.md covers core/)")
 
 
+def check_counter_docs() -> None:
+    """Assert every counter field of ScanStats / ReadCounters /
+    FailureStats is named in docs/ARCHITECTURE.md — the counter reference
+    the explain/trace/baseline tooling points users at."""
+    import dataclasses
+
+    from repro.core import FailureStats, ScanStats
+    from repro.core.colfile import ReadCounters
+
+    with open(os.path.join(REPO_ROOT, "docs", "ARCHITECTURE.md")) as f:
+        arch = f.read()
+    missing = [
+        f"{cls.__name__}.{fld.name}"
+        for cls in (ScanStats, ReadCounters, FailureStats)
+        for fld in dataclasses.fields(cls)
+        if f"`{fld.name}`" not in arch
+    ]
+    assert not missing, (
+        f"docs/ARCHITECTURE.md counter reference lacks {missing} — every "
+        "observability counter must be documented (backtick the field name)"
+    )
+    print("# counter docs guard passed")
+
+
 def check_bench_registration() -> None:
     """Assert every benchmark module is wired into the run.py harness."""
     bench_dir = os.path.dirname(os.path.abspath(__file__))
@@ -102,6 +134,7 @@ def check_bench_registration() -> None:
 def main() -> None:
     t0 = time.perf_counter()
     check_docs_drift()
+    check_counter_docs()
     check_bench_registration()
     sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
     from .run import main as run_main

@@ -20,7 +20,8 @@ def main() -> None:
                          "whole suite doubles as a tier-2 check")
     ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
                     "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode,"
-                    "sharded_scan,encodings,pushdown,faults,repair,serving")
+                    "sharded_scan,encodings,pushdown,faults,repair,serving,"
+                    "regress")
     args = ap.parse_args()
     assert not (args.full and args.smoke), "pick one of --full / --smoke"
     only = set(args.only.split(",")) if args.only else None
@@ -32,6 +33,7 @@ def main() -> None:
     from . import encodings as ec
     from . import faults as fl
     from . import pushdown as pd
+    from . import regress as rg
     from . import repair as rp
     from . import serving as sv
     from . import sharded_scan as ss
@@ -69,6 +71,10 @@ def main() -> None:
                                            write_json=not args.smoke)),
         ("serving", lambda: sv.serving(csv, n=size(600, 120),
                                        write_json=not args.smoke)),
+        # fixed sizes by design: the record/replay counter gate only means
+        # anything against the identical workload the baseline recorded;
+        # check mode never writes, so smoke runs are safe
+        ("regress", lambda: rg.regress(csv)),
     ]
     failures = []
     for name, fn in jobs:

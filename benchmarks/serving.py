@@ -37,9 +37,8 @@ import shutil
 import tempfile
 import time
 
-import numpy as np
-
 from repro.core.blockcache import BlockCache
+from repro.core.trace import Histogram
 from repro.data.tokens import TokenCorpus, TokenCorpusWriter
 from repro.launch.load_data import synth_token_docs
 from repro.serving.engine import AdmissionPolicy, PromptStore, Request, ServeEngine
@@ -167,9 +166,10 @@ def serving(csv: Csv, n: int = 600, write_json: bool = True) -> None:
             f"({eng_c.admit_stall_s:.4f}s vs {eng_b.admit_stall_s:.4f}s)"
         )
         toks = sum(len(o) for o in out_c.values())
-        lats = [l for ts in eng_c.tenant_stats.values()
-                for l in ts.latencies_s]
-        p50, p99 = np.percentile(lats, 50), np.percentile(lats, 99)
+        lat = Histogram()
+        for ts in eng_c.tenant_stats.values():
+            lat.merge(ts.latency)
+        p50, p99 = lat.p50, lat.p99
         csv.add("serving/engine_cache_off", t_a)
         csv.add("serving/engine_cache_on", t_b,
                 f"stall={eng_b.admit_stall_s * 1e3:.2f}ms")

@@ -28,7 +28,8 @@ from repro.core import (
     format_storage_report, storage_report, urlinfo_schema,
 )
 from repro.core.mapreduce import (
-    fig1_map, fig1_map_batch, fig1_reduce, fig1_where, run_job,
+    fig1_map, fig1_map_batch, fig1_reduce, fig1_where, format_job_report,
+    run_job,
 )
 from repro.launch.load_data import synth_crawl_records
 
@@ -75,8 +76,7 @@ def main() -> None:
 
     res = run_job(list(split_map), open_split, fig1_map(), fig1_reduce, n_hosts=4)
     print(f"fig1 job: content-types for ibm.com/jp = {[v for _, v in res.output]}")
-    print(f"map_time={res.map_time*1e3:.1f}ms total={res.total_time*1e3:.1f}ms "
-          f"remote_reads={res.remote_reads} (CPP keeps this at 0)")
+    print(format_job_report(res, title="fig1 record-at-a-time"))
 
     # -- 4. same job on the sharded vectorized scan engine with predicate
     #      pushdown: where= evaluates the url predicate vectorized and
@@ -88,12 +88,9 @@ def main() -> None:
                     open_split_batches=open_batches,
                     map_batch_fn=fig1_map_batch())
     assert res_b.output == res.output, "where= path must match the record path"
-    s3 = reader3.stats
     print(f"fig1 where= batch mode: identical output, "
-          f"map_time={res_b.map_time*1e3:.1f}ms total={res_b.total_time*1e3:.1f}ms "
-          f"({res.total_time/res_b.total_time:.1f}x vs record-at-a-time, "
-          f"{res_b.n_workers} worker threads, "
-          f"{s3.rows_short_circuited} rows short-circuited)")
+          f"{res.total_time/res_b.total_time:.1f}x vs record-at-a-time")
+    print(format_job_report(res_b, reader3.stats, title="fig1 where= batch"))
 
     # -- 5. schema evolution + zone-map pruning: add a "lang" column that is
     #      constant per split (a partition key; one new file per split,

@@ -10,8 +10,8 @@ Public API:
 Baselines: seqfile (SEQ), textfile (TXT), rowgroup (RCFile).
 """
 from .cif import (
-    BatchColumns, CIFReader, FilteredBatchColumns, ScanStats,
-    format_storage_report, fsck, list_splits, quarantined_splits,
+    BatchColumns, CIFReader, ExplainReport, FilteredBatchColumns, ScanStats,
+    explain, format_storage_report, fsck, list_splits, quarantined_splits,
     read_schema, repair, storage_report,
 )
 from .blockcache import BlockCache
@@ -38,8 +38,10 @@ from .cif import repair  # noqa: F811
 from .faults import FaultPlan, execution_epoch
 from .lazy import EagerRecord, LazyRecord, Record
 from .mapreduce import (
-    JobResult, fig1_map, fig1_map_batch, fig1_reduce, fig1_where, run_job,
+    JobResult, PhaseTimes, fig1_map, fig1_map_batch, fig1_reduce, fig1_where,
+    format_job_report, run_job,
 )
+from .trace import Histogram, Tracer, tracing
 from .placement import Placement, WorkQueue, stable_partition
 from .predicate import Expr, col, parse_predicate, validate_predicate
 from .stats import BloomFilter, PruneResult, ZoneMap
@@ -68,21 +70,24 @@ __all__ = [
     "ColumnFormat", "ColumnType", "CopyState", "CorruptFileError",
     "CoverageError",
     "DEFAULT_POLICY", "DeadlineExceeded", "DictPage", "DictRaggedColumn",
-    "EagerRecord", "ENCODINGS", "Expr", "FLOAT32", "FLOAT64",
+    "EagerRecord", "ENCODINGS", "ExplainReport", "Expr", "FLOAT32", "FLOAT64",
     "FailurePolicy", "FailureStats", "FaultPlan",
-    "FilteredBatchColumns", "INT32", "INT64", "InjectedIOError", "JobResult",
+    "FilteredBatchColumns", "Histogram", "INT32", "INT64", "InjectedIOError",
+    "JobResult",
     "LazyRecord",
-    "MAP", "Placement", "PruneResult", "RECORD", "Record", "RaggedColumn",
+    "MAP", "PhaseTimes", "Placement", "PruneResult", "RECORD", "Record",
+    "RaggedColumn",
     "RepairReport",
     "STRING", "ScanStats", "Schema", "SplitRetryExhausted",
-    "SplitUnserveableError", "WorkQueue",
+    "SplitUnserveableError", "Tracer", "WorkQueue",
     "ZoneMap", "add_column",
     "col", "durable_write", "durable_write_json", "encode_block",
-    "execution_epoch", "fig1_map", "fig1_map_batch",
+    "execution_epoch", "explain", "fig1_map", "fig1_map_batch",
     "fig1_reduce",
-    "fig1_where", "format_storage_report", "fsck", "fsync_dir", "list_splits",
+    "fig1_where", "format_job_report", "format_storage_report", "fsck",
+    "fsync_dir", "list_splits",
     "parse_predicate",
     "plain_size", "quarantined_splits", "read_schema", "repair", "run_job",
     "split_name", "stable_partition",
-    "storage_report", "urlinfo_schema", "validate_predicate",
+    "storage_report", "tracing", "urlinfo_schema", "validate_predicate",
 ]

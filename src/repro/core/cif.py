@@ -47,11 +47,12 @@ import json
 import os
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields as dataclass_fields
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import trace
 from .colfile import ColumnFileReader, ReadCounters
 from .cof import COMMIT_MARKER, QUARANTINE_MARKER, REPLICA_OVERLAY, is_split_dir
 from .errors import (
@@ -64,7 +65,7 @@ from .errors import (
 from .faults import FaultPlan, attempt_base
 from .lazy import EagerRecord, LazyRecord, Record
 from .placement import Placement
-from .predicate import ColumnInfo, Expr, TRI_NONE, validate_predicate
+from .predicate import ColumnInfo, Expr, TRI_NONE, parse_predicate, validate_predicate
 from .schema import Schema
 from .stats import PruneResult, clip_ranges, intersect_ranges, ranges_rows
 from .varcodec import RaggedColumn
@@ -356,6 +357,9 @@ class SplitReader:
     ):
         self.split_dir = split_dir
         self.schema = schema
+        # tracer captured at construction (PR 9): None when tracing is off,
+        # so the per-attempt/per-span guards cost one identity test
+        self._tr = trace.live()
         # shared decoded-block cache (core.blockcache), threaded into every
         # column reader this split opens; keys derive from the column-file
         # path, so reopened splits serve previously-decoded blocks as hits
@@ -449,6 +453,13 @@ class SplitReader:
             self.split_dir, REPLICA_OVERLAY, f"h{host}", os.path.basename(path)
         )
         healed = os.path.exists(opath)
+        if self._tr is not None:
+            # attempt numbers (epoch-strided) and replica hosts are keyed on
+            # the chain, never the executing worker — deterministic args
+            self._tr.instant("fetch.attempt", {
+                "split": self.split_id, "column": name, "attempt": a,
+                "host": host, "healed": healed,
+            })
         with open(opath if healed else path, "rb") as f:
             raw = f.read()
         if self._fault_plan is not None:
@@ -563,6 +574,12 @@ class SplitReader:
             res = PruneResult(ranges, total, pruned)
         self._plan = (pred, res)
         self.blocks_pruned_stats += res.blocks_pruned
+        if self._tr is not None:
+            self._tr.instant("plan.split", {
+                "split": self.split_id, "blocks_total": res.blocks_total,
+                "blocks_pruned": res.blocks_pruned,
+                "split_dead": split_dead,
+            })
         return res
 
     def filter_span(
@@ -617,6 +634,11 @@ class SplitReader:
         mask = pred.mask(lambda ref: decoded[ref], len(ids))
         n_match = int(mask.sum())
         self.rows_short_circuited += len(ids) - n_match
+        if self._tr is not None:
+            self._tr.instant("filter.span", {
+                "split": self.split_id, "start": start, "stop": stop,
+                "rows_in": len(ids), "rows_matched": n_match,
+            })
         if n_match == 0:
             return None
         # pre-decoded values the filtered span can serve from cache: whole
@@ -660,12 +682,32 @@ class SplitReader:
                 yield EagerRecord({n: cols[n][i] for n in self.out_columns})
 
     def finish_stats(self, stats: ScanStats) -> None:
+        # per-split delta counter event (PR 9): computed from this split's
+        # OWN numbers — never by diffing the cumulative stats, whose float
+        # fields depend on summation order.  Only the completing execution
+        # reaches here, so summing every split.stats event reproduces the
+        # final ScanStats exactly (the trace-reconciliation acceptance).
+        delta = ScanStats() if self._tr is not None else None
         for name, r in self.readers.items():
             stats.absorb(r.counters, r.file_bytes)
+            if delta is not None:
+                delta.absorb(r.counters, r.file_bytes)
         stats.records_scanned += self.n_records
         stats.blocks_pruned_stats += self.blocks_pruned_stats
         stats.rows_short_circuited += self.rows_short_circuited
         stats.absorb_failures(self.fail)
+        if delta is not None:
+            delta.records_scanned += self.n_records
+            delta.blocks_pruned_stats += self.blocks_pruned_stats
+            delta.rows_short_circuited += self.rows_short_circuited
+            delta.absorb_failures(self.fail)
+            payload: Dict[str, Any] = {
+                f.name: getattr(delta, f.name)
+                for f in dataclass_fields(ScanStats)
+                if f.name != "repair_queue"
+            }
+            payload["split"] = self.split_id
+            self._tr.counter("split.stats", payload)
 
 
 def _compress(vals: Any, mask: np.ndarray) -> Any:
@@ -803,6 +845,12 @@ class FilteredBatchColumns(BatchColumns):
             assert r.position <= int(self.rows[0]), (
                 f"column {name!r} already read past this span"
             )
+            tr = self._sr._tr
+            if tr is not None:
+                tr.instant("materialize", {
+                    "split": self._sr.split_id, "column": name,
+                    "rows": len(self.rows),
+                })
             v = r.read_many(self.rows.tolist())
             self._cache[name] = v
         return v
@@ -1101,3 +1149,218 @@ def repair(
     from .repair import repair as _repair
 
     return _repair(root, placement, fault_plan=fault_plan, queue=queue)
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN: the planner's decision tree without decoding anything (PR 9)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ColumnExplain:
+    """One predicate column's block-prune verdict for one split."""
+
+    column: str
+    blocks_total: int
+    blocks_pruned: int
+    # {source-label: blocks pruned by it} — "zone-map" / "dict-page" /
+    # "stats-tag" / "bloom" / "combined" (see ColumnFileReader.prune)
+    sources: Dict[str, int]
+
+
+@dataclass
+class SplitExplain:
+    split_id: int
+    n_records: int
+    # predicate columns whose _meta.json zone summary alone proved the
+    # split dead (empty = the split survived to block planning)
+    pruned_by_meta: List[str]
+    blocks_total: int
+    blocks_pruned: int
+    columns: List[ColumnExplain]
+    ranges: List[Tuple[int, int]]
+    candidate_rows: int
+
+
+@dataclass
+class ExplainReport:
+    """What a ``where=`` scan WOULD do, derived purely from metadata.
+
+    The numbers are exact, not estimates: ``blocks_pruned`` per split is
+    the same memoized ``SplitReader.plan`` a real scan charges to
+    ``ScanStats.blocks_pruned_stats``, so ``report.blocks_pruned`` equals
+    the counter a subsequent scan reports.  ``stats`` are the explain
+    pass's OWN ScanStats — ``bytes_decoded``/``cells_decoded`` are
+    asserted zero, the "without decoding anything" guarantee.
+    """
+
+    root: str
+    predicate: str
+    projection: List[str]
+    predicate_columns: List[str]
+    late_columns: List[str]
+    splits: List[SplitExplain]
+    stats: ScanStats
+
+    @property
+    def splits_total(self) -> int:
+        return len(self.splits)
+
+    @property
+    def splits_pruned(self) -> int:
+        return sum(1 for s in self.splits if s.pruned_by_meta)
+
+    @property
+    def blocks_total(self) -> int:
+        return sum(s.blocks_total for s in self.splits)
+
+    @property
+    def blocks_pruned(self) -> int:
+        return sum(s.blocks_pruned for s in self.splits)
+
+    @property
+    def candidate_rows(self) -> int:
+        return sum(s.candidate_rows for s in self.splits)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(s.n_records for s in self.splits)
+
+    def source_totals(self) -> Dict[str, int]:
+        """Aggregated prune attribution; meta-pruned splits' blocks are
+        charged to "split-meta" (the ``_meta.json`` zone summary)."""
+        out: Dict[str, int] = {}
+        for s in self.splits:
+            if s.pruned_by_meta:
+                out["split-meta"] = out.get("split-meta", 0) + s.blocks_pruned
+                continue
+            for c in s.columns:
+                for k, v in c.sources.items():
+                    out[k] = out.get(k, 0) + v
+        return out
+
+    def format(self) -> str:
+        lines = [
+            f"EXPLAIN scan of {self.root}",
+            f"  where: {self.predicate}",
+            f"  projection: {', '.join(self.projection)}",
+            f"  predicate columns (decoded over surviving ranges): "
+            f"{', '.join(self.predicate_columns)}",
+            f"  late-materialized (decoded only for matching rows): "
+            f"{', '.join(self.late_columns) or '(none)'}",
+            f"  splits: {self.splits_total} total, {self.splits_pruned} "
+            f"pruned by _meta.json zone summary",
+        ]
+        src = ", ".join(f"{k} {v}" for k, v in sorted(self.source_totals().items()))
+        lines.append(
+            f"  blocks: {self.blocks_total} total, {self.blocks_pruned} "
+            f"pruned ({src or 'nothing pruned'})"
+        )
+        lines.append(
+            f"  candidate rows: {self.candidate_rows} of {self.total_rows}"
+        )
+        for s in self.splits:
+            if s.pruned_by_meta:
+                lines.append(
+                    f"  split {s.split_id} ({s.n_records} rows): PRUNED by "
+                    f"_meta.json zone summary "
+                    f"[{', '.join(s.pruned_by_meta)}] — no column file opened"
+                )
+                continue
+            lines.append(
+                f"  split {s.split_id} ({s.n_records} rows): "
+                f"{s.blocks_total} stats blocks, {s.blocks_pruned} pruned"
+                f" -> {s.candidate_rows} candidate rows in "
+                f"{len(s.ranges)} range(s)"
+            )
+            for c in s.columns:
+                csrc = ", ".join(
+                    f"{k} {v}" for k, v in sorted(c.sources.items())
+                )
+                lines.append(
+                    f"      {c.column}: {c.blocks_pruned}/{c.blocks_total} "
+                    f"blocks pruned ({csrc or 'none'})"
+                )
+        lines.append(
+            f"  explain decoded nothing: bytes_decoded="
+            f"{self.stats.bytes_decoded}, cells_decoded="
+            f"{self.stats.cells_decoded} "
+            f"(files opened for metadata: {self.stats.files_opened})"
+        )
+        return "\n".join(lines)
+
+
+def explain(
+    root: str,
+    where: Any,
+    columns: Optional[Sequence[str]] = None,
+) -> ExplainReport:
+    """Render the planner's decision tree for ``where=`` over ``root``
+    WITHOUT decoding a single cell.
+
+    Runs the real planner — the same ``_meta.json`` stage-1 check and the
+    same memoized ``SplitReader.plan`` a scan would use — then re-evaluates
+    each pruned block against each stats source in isolation to attribute
+    it (zone map / dict page / bloom / stats-tag).  ``where`` is an
+    ``Expr`` or a ``parse_predicate`` string; ``columns`` the projection
+    (defaults to the full schema).  The returned report's prune counts are
+    exactly what a subsequent scan reports in ``blocks_pruned_stats``, and
+    its own ``stats.bytes_decoded`` is asserted zero.
+    """
+    pred = parse_predicate(where) if isinstance(where, str) else where
+    reader = CIFReader(root, columns=columns)
+    pcols = reader._where_columns(pred)
+    late = [c for c in reader.columns if c not in pcols]
+    splits_expl: List[SplitExplain] = []
+    for idx, sdir in reader.splits():
+        sr = reader.open_split(sdir, extra_columns=pcols, lazy_open=True,
+                               split_id=idx)
+        # stage-1 re-derivation (mirrors SplitReader.plan): which predicate
+        # columns' persisted zone summaries alone prove the split dead
+        meta_dead: List[str] = []
+        for name in pcols:
+            z = sr._meta_zone(name)
+            if not z:
+                continue
+            keys = z.get("keys")
+            info = ColumnInfo(
+                vmin=z.get("min"), vmax=z.get("max"),
+                map_keys=frozenset(keys) if keys is not None else None,
+            )
+            if info.vmin is None and info.map_keys is None:
+                continue
+            if pred.tri(lambda nm, name=name, info=info:
+                        info if nm == name else None) == TRI_NONE:
+                meta_dead.append(name)
+        plan = sr.plan(pred)  # THE accounting a real scan charges
+        cols_expl: List[ColumnExplain] = []
+        if not meta_dead:
+            for name in pcols:
+                src: Dict[str, int] = {}
+                pr = sr.readers[name].prune(pred, column=name, sources=src)
+                cols_expl.append(
+                    ColumnExplain(name, pr.blocks_total, pr.blocks_pruned, src)
+                )
+        splits_expl.append(SplitExplain(
+            split_id=idx,
+            n_records=sr.n_records,
+            pruned_by_meta=meta_dead,
+            blocks_total=plan.blocks_total,
+            blocks_pruned=plan.blocks_pruned,
+            columns=cols_expl,
+            ranges=list(plan.ranges),
+            candidate_rows=ranges_rows(plan.ranges),
+        ))
+        reader.absorb_stats(sr)
+    assert reader.stats.bytes_decoded == 0 and reader.stats.cells_decoded == 0, (
+        "explain decoded data — the planner stopped being metadata-only"
+    )
+    return ExplainReport(
+        root=root,
+        predicate=repr(pred),
+        projection=list(reader.columns),
+        predicate_columns=list(pcols),
+        late_columns=late,
+        splits=splits_expl,
+        stats=reader.stats,
+    )

@@ -70,6 +70,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import trace
 from .checksum import ChecksumPage, algo_name, best_algo, crc_of
 from .compression import CODECS, compress_block, decompress_block, read_block_header
 from .dcsl import DICT_BLOCK, DCSLColumnReader, DCSLColumnWriter
@@ -502,6 +503,11 @@ class ColumnFileReader:
         cache_key: Optional[Any] = None,
     ):
         self.path = path
+        # tracer captured at construction (PR 9): block decode / cache-hit
+        # instants identify the file by its ``split-dir/name.col`` tail,
+        # which is stable across replicas and reopens
+        self._tr = trace.live()
+        self._tr_file = "/".join(path.replace("\\", "/").split("/")[-2:])
         # shared decoded-block cache (core.blockcache.BlockCache): consulted
         # before any block decode, keyed on (file identity, artifact, block).
         # The default file identity is the path — stable across reopens and
@@ -835,6 +841,9 @@ class ColumnFileReader:
             # current block stay uncounted, matching the cache-off path).
             cached = self._cache.get((self._ckey, "blk", bi), c if fresh else None)
             if cached is not None:
+                if fresh and self._tr is not None:
+                    self._tr.instant("cache.hit",
+                                     {"file": self._tr_file, "block": bi})
                 self._vals = cached
                 self._cur_block = bi
                 self._first = first
@@ -850,6 +859,13 @@ class ColumnFileReader:
             tag = payload[0]
         if fresh:
             c.bytes_decoded += end - off
+            if self._tr is not None:
+                # mirrors the counter: fresh decodes only, so summing the
+                # "bytes" args reproduces bytes_decoded for this reader
+                self._tr.instant("block.decode", {
+                    "file": self._tr_file, "block": bi, "bytes": end - off,
+                    "cached": self._cache is not None,
+                })
         self._vals = decode_block(self.typ, tag, data, off, end, nrec)
         if self._cache is not None:
             self._cache.put((self._ckey, "blk", bi), self._vals, end - off, c)
@@ -1186,7 +1202,64 @@ class ColumnFileReader:
             return RaggedColumn(self.body, page.starts, page.lengths, self.typ.kind)
         return page.values
 
-    def prune(self, pred: Expr, column: Optional[str] = None) -> PruneResult:
+    def _block_pieces(self, bi: int) -> Tuple[Any, Optional[str], Any, Any]:
+        """The prunable evidence of block ``bi`` beyond its zone map:
+        ``(values, values_src, blk_bloom, map_keys)`` where ``values_src``
+        labels where the exact value set came from ("stats-tag" for a v3.1
+        per-block tag, "dict-page" for a free dictionary-page peek)."""
+        values = blk_bloom = map_keys = None
+        values_src = None
+        extra = self.block_extras[bi] if self.block_extras else None
+        if extra is not None:
+            tag, payload = extra
+            if tag == "values":
+                values, values_src = payload, "stats-tag"
+            elif tag == "bloom":
+                blk_bloom = payload
+            elif tag == "keys":
+                map_keys = payload
+        if values is None:
+            # the block grid follows the zone maps when both exist, and the
+            # writer emits those per encoded block — indices align
+            dv = (
+                self._dict_block_values(bi)
+                if self.zone_maps is None or self._enc else None
+            )
+            if dv is not None:
+                values, values_src = dv, "dict-page"
+        return values, values_src, blk_bloom, map_keys
+
+    def _attribute_block(
+        self, pred: Expr, known: Callable[[str], bool], zm: Optional[ZoneMap],
+        bi: int,
+    ) -> str:
+        """EXPLAIN-only: name the single stats source that alone proves
+        block ``bi`` dead, re-evaluating ``pred.tri`` with each source in
+        isolation ("combined" when only their conjunction prunes).  Pure
+        metadata work — no counter moves, like prune itself."""
+        values, values_src, blk_bloom, map_keys = self._block_pieces(bi)
+        candidates: List[Tuple[str, ColumnInfo]] = []
+        if zm is not None and (zm.vmin is not None or zm.vmax is not None):
+            candidates.append(("zone-map", ColumnInfo(vmin=zm.vmin, vmax=zm.vmax)))
+        if values is not None and values_src is not None:
+            candidates.append((values_src, ColumnInfo(values=values)))
+        if blk_bloom is not None:
+            candidates.append(("stats-tag", ColumnInfo(bloom=blk_bloom)))
+        if map_keys is not None:
+            candidates.append(("stats-tag", ColumnInfo(map_keys=map_keys)))
+        if self.bloom is not None:
+            candidates.append(("bloom", ColumnInfo(bloom=self.bloom)))
+        for label, ci in candidates:
+            if pred.tri(lambda nm, ci=ci: ci if known(nm) else None) == TRI_NONE:
+                return label
+        return "combined"
+
+    def prune(
+        self,
+        pred: Expr,
+        column: Optional[str] = None,
+        sources: Optional[Dict[str, int]] = None,
+    ) -> PruneResult:
         """Advisory pruning: the row ranges that MAY contain matches.
 
         Evaluates ``pred`` three-valued against the file-level aggregate
@@ -1197,6 +1270,12 @@ class ColumnFileReader:
         (refs to other columns evaluate as unknown); with ``column=None``
         every reference is treated as this column.  Nothing is decoded and
         no counter moves — pruning is advisory, evaluation is exact.
+
+        ``sources`` (EXPLAIN only) is an out-param dict accumulating
+        ``{source-label: blocks pruned by it}`` — "zone-map", "dict-page",
+        "stats-tag", "bloom", or "combined"; file-level prunes are labeled
+        by the same rule.  Passing it adds re-evaluation work but changes
+        neither the result nor any counter.
         """
         if self.n == 0:
             return PruneResult([], 0, 0)
@@ -1218,6 +1297,20 @@ class ColumnFileReader:
                 return ColumnInfo(bloom=self.bloom)
 
             if pred.tri(file_info) == TRI_NONE:
+                if sources is not None:
+                    label = "combined"
+                    cands = []
+                    if agg is not None and agg.vmin is not None:
+                        cands.append(("zone-map",
+                                      ColumnInfo(vmin=agg.vmin, vmax=agg.vmax)))
+                    if self.bloom is not None:
+                        cands.append(("bloom", ColumnInfo(bloom=self.bloom)))
+                    for lab, ci in cands:
+                        if pred.tri(lambda nm, ci=ci:
+                                    ci if known(nm) else None) == TRI_NONE:
+                            label = lab
+                            break
+                    sources[label] = sources.get(label, 0) + len(blocks)
                 return PruneResult([], len(blocks), len(blocks))
 
         ranges: List[Tuple[int, int]] = []
@@ -1231,24 +1324,7 @@ class ColumnFileReader:
                 # v3.1 per-block stats-tag: exact value set / per-block
                 # bloom / map-key presence — all readable without touching
                 # (let alone decompressing) the block itself
-                values = blk_bloom = map_keys = None
-                extra = self.block_extras[bi] if self.block_extras else None
-                if extra is not None:
-                    tag, payload = extra
-                    if tag == "values":
-                        values = payload
-                    elif tag == "bloom":
-                        blk_bloom = payload
-                    elif tag == "keys":
-                        map_keys = payload
-                if values is None:
-                    # the block grid follows the zone maps when both exist,
-                    # and the writer emits those per encoded block — indices
-                    # align
-                    values = (
-                        self._dict_block_values(bi)
-                        if self.zone_maps is None or self._enc else None
-                    )
+                values, _src, blk_bloom, map_keys = self._block_pieces(bi)
                 ci = ColumnInfo(
                     vmin=zm.vmin if zm else None,
                     vmax=zm.vmax if zm else None,
@@ -1263,10 +1339,18 @@ class ColumnFileReader:
 
             if pred.tri(info) == TRI_NONE:
                 pruned += 1
+                if sources is not None:
+                    label = self._attribute_block(pred, known, zm, bi)
+                    sources[label] = sources.get(label, 0) + 1
             elif ranges and ranges[-1][1] == first:
                 ranges[-1] = (ranges[-1][0], first + count)
             else:
                 ranges.append((first, first + count))
+        if self._tr is not None:
+            self._tr.instant("prune.file", {
+                "file": self._tr_file, "blocks_total": len(blocks),
+                "blocks_pruned": pruned,
+            })
         return PruneResult(ranges, len(blocks), pruned)
 
     # -- public -------------------------------------------------------------------

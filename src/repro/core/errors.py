@@ -40,6 +40,8 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Optional, Set, Tuple
 
+from . import trace
+
 
 def _stable_hash(s: str) -> int:
     return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8], "little")
@@ -164,3 +166,10 @@ class FailureStats:
         if key not in self.repair_queue:
             self.repair_queue.add(key)
             self.repairs_enqueued += 1
+            tr = trace.live()
+            if tr is not None:
+                # fires once per distinct corrupt copy — schedule-free like
+                # the queue itself (corruption decisions key on the chain)
+                tr.instant("repair.enqueue", {
+                    "split": split_id, "column": column, "host": host,
+                })

@@ -51,6 +51,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
+from . import trace
 from .errors import (
     DEFAULT_POLICY,
     CorruptFileError,
@@ -65,6 +66,24 @@ from .placement import Placement, WorkQueue, stable_partition
 MapFn = Callable[[Any, Any, Callable[[Any, Any], None]], None]
 MapBatchFn = Callable[[int, Any, Callable[[Any, Any], None]], None]
 ReduceFn = Callable[[Any, List[Any], Callable[[Any, Any], None]], None]
+
+
+@dataclass(frozen=True)
+class PhaseTimes:
+    """Typed per-phase wall-clock breakdown of one job (PR 9).
+
+    ``map`` is the aggregate per-slot map seconds (the paper divides total
+    map-task time by slots — same number as ``JobResult.map_time``);
+    ``map_wall`` is the barrier-to-barrier wall clock the map phase
+    actually took, which is what shrinks with ``n_workers``.
+    """
+
+    plan: float
+    map: float
+    map_wall: float
+    shuffle: float
+    reduce: float
+    total: float
 
 
 @dataclass
@@ -86,6 +105,37 @@ class JobResult:
     # given FaultPlan, serial or concurrent.
     splits_reexecuted: int = 0
     hosts_failed: int = 0
+    phase_times: Optional[PhaseTimes] = None
+
+
+def format_job_report(res: JobResult, stats: Optional[Any] = None,
+                      title: str = "job report") -> str:
+    """Pretty-print a JobResult (and optionally its ScanStats highlights)."""
+    pt = res.phase_times or PhaseTimes(
+        plan=0.0, map=res.map_time, map_wall=res.map_time,
+        shuffle=res.shuffle_time, reduce=res.reduce_time,
+        total=res.total_time)
+    lines = [
+        f"{title} — {res.mode} mode, {res.n_workers} worker(s)",
+        f"  {'phase':<10} {'seconds':>10}",
+        f"  {'plan':<10} {pt.plan:>10.4f}",
+        f"  {'map':<10} {pt.map:>10.4f}  (aggregate over slots; "
+        f"wall {pt.map_wall:.4f})",
+        f"  {'shuffle':<10} {pt.shuffle:>10.4f}",
+        f"  {'reduce':<10} {pt.reduce:>10.4f}",
+        f"  {'total':<10} {pt.total:>10.4f}",
+        f"  splits={res.splits_processed} (reexecuted {res.splits_reexecuted})"
+        f"  map-out={res.map_output_records}  remote-reads={res.remote_reads}"
+        f"  hosts-failed={res.hosts_failed}",
+    ]
+    if stats is not None:
+        lines.append(
+            f"  scan: bytes_decoded={stats.bytes_decoded}"
+            f" blocks_pruned={stats.blocks_pruned_stats}"
+            f" rows_short_circuited={stats.rows_short_circuited}"
+            f" cache_hits={stats.cache_hits}"
+            f" repairs_enqueued={stats.repairs_enqueued}")
+    return "\n".join(lines)
 
 
 def run_job(
@@ -145,6 +195,7 @@ def run_job(
     plan to both layers.
     """
     t0 = time.perf_counter()
+    tr = trace.live()
     batch_mode = map_batch_fn is not None or open_split_batches is not None
     if batch_mode:
         assert map_batch_fn is not None and open_split_batches is not None, (
@@ -180,6 +231,13 @@ def run_job(
 
     live_hosts = [h for h in range(placement.n_hosts) if h not in start_dead]
 
+    t_plan = time.perf_counter()
+    if tr is not None:
+        tr.complete("job.plan", int(t0 * 1e6), int(t_plan * 1e6),
+                    {"splits": len(split_ids),
+                     "mode": "batches" if batch_mode else "records",
+                     "where": where is not None})
+
     def run_split(sidx: int) -> Tuple[List[Tuple[Any, Any]], float]:
         split_id = split_ids[sidx]
         local_out: List[Tuple[Any, Any]] = []
@@ -214,6 +272,11 @@ def run_job(
         if host in wq.dead:
             return None
         sidx = wq.next_split(host)
+        if sidx is not None and tr is not None:
+            # which worker claims a stolen split is a scheduler race —
+            # excluded from the deterministic counter view
+            tr.instant("job.claim",
+                       {"host": host, "split": split_ids[sidx]}, cat="sched")
         if sidx is None or fault_plan is None:
             return sidx
         with claims_lock:
@@ -221,6 +284,8 @@ def run_job(
             k = claim_counts[host]
         dies = fault_plan.dies_after_claims(host)
         if dies is not None and k >= dies:
+            if tr is not None:
+                tr.instant("host.death", {"host": host}, cat="sched")
             wq.mark_dead(host)  # raises CoverageError when coverage is lost
             return None
         return sidx
@@ -232,8 +297,16 @@ def run_job(
         the split: that is coverage lost in substance, so the terminal
         error is ``SplitUnserveableError`` (both a ``CoverageError`` and a
         ``SplitRetryExhausted``) and the remedy is ``cif.repair``."""
+        epoch = wq.epoch(sidx)
         try:
-            with execution_epoch(wq.epoch(sidx)):
+            with execution_epoch(epoch):
+                if tr is not None:
+                    # (split, epoch) executions are deterministic — epochs
+                    # bump on deterministic requeues, never on the race of
+                    # which worker ran them
+                    with tr.span("split",
+                                 {"split": split_ids[sidx], "epoch": epoch}):
+                        return run_split(sidx)
                 return run_split(sidx)
         except (SplitRetryExhausted, CorruptFileError, OSError) as e:
             if policy is None or not wq.requeue(sidx, policy.max_reexecutions):
@@ -242,6 +315,10 @@ def run_job(
                     f"copy within {0 if policy is None else policy.max_reexecutions} "
                     f"re-execution(s); last error: {e}"
                 ) from e
+            if tr is not None:
+                tr.instant("split.requeue",
+                           {"split": split_ids[sidx], "epoch": epoch,
+                            "error": type(e).__name__})
             return None
 
     # Task = (sidx, host, local_out, map_seconds).  Each split is claimed and
@@ -302,6 +379,10 @@ def run_job(
     else:
         drain(tasks)
     assert len(tasks) == len(split_ids), "scheduler lost or duplicated a split"
+    t_map_end = time.perf_counter()
+    if tr is not None:
+        tr.complete("job.map", int(t_plan * 1e6), int(t_map_end * 1e6),
+                    {"splits": len(split_ids)})
 
     # deterministic fold: split order, stable partitioning
     shuffle: List[Dict[Any, List[Any]]] = [defaultdict(list) for _ in range(n_reducers)]
@@ -339,9 +420,24 @@ def run_job(
                 reduce_fn(k, vs, emit_r)
     t_end = time.perf_counter()
 
+    if tr is not None:
+        # the fold between the map barrier and t_shuffle is shuffle work too
+        tr.complete("job.shuffle", int(t_map_end * 1e6), int(t_reduce * 1e6),
+                    {"reducers": n_reducers})
+        tr.complete("job.reduce", int(t_reduce * 1e6), int(t_end * 1e6))
+        tr.counter("job.stats", {"splits_reexecuted": wq.reexecutions})
+
     if scan_stats is not None:
         scan_stats.splits_reexecuted += wq.reexecutions
 
+    phase_times = PhaseTimes(
+        plan=t_plan - t0,
+        map=map_time,
+        map_wall=t_map_end - t_plan,
+        shuffle=t_reduce - t_shuffle,
+        reduce=t_end - t_reduce,
+        total=t_end - t0,
+    )
     return JobResult(
         output=output,
         map_time=map_time,
@@ -356,6 +452,7 @@ def run_job(
         n_workers=max(1, pool_size),
         splits_reexecuted=wq.reexecutions,
         hosts_failed=len(wq.dead) - len(start_dead),
+        phase_times=phase_times,
     )
 
 

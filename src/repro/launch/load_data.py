@@ -80,6 +80,17 @@ def print_storage_report(root: str) -> None:
     print(format_storage_report(root))
 
 
+def explain_report(root: str, text: str, columns: list) -> "object":
+    """``--explain``: print the planner's decision tree for ``--where``
+    without decoding anything (``cif.explain``).  Returns the report so
+    tests (and the cross-check in ``main``) can assert on it."""
+    from ..core import explain
+
+    report = explain(root, text, columns=columns)
+    print(report.format())
+    return report
+
+
 def where_report(root: str, text: str, columns: list) -> dict:
     """Run a ``where=`` pushdown scan and report pruned vs scanned blocks.
 
@@ -153,6 +164,24 @@ def corpus_repair(root: str, n_hosts: int, replication: int):
     return report
 
 
+def where_with_explain(out: str, text: str, columns: list,
+                       do_explain: bool) -> dict:
+    """``--where`` (optionally preceded by ``--explain``): the explain
+    pass predicts, the real scan then reports, and the prune counts must
+    agree exactly — the planner's decision tree is the accounting, not an
+    estimate."""
+    rep = explain_report(out, text, columns) if do_explain else None
+    got = where_report(out, text, columns)
+    if rep is not None:
+        assert rep.blocks_pruned == got["blocks_pruned"], (
+            f"explain predicted {rep.blocks_pruned} pruned blocks, the scan "
+            f"reported {got['blocks_pruned']}"
+        )
+        print(f"explain matches scan: {rep.blocks_pruned} blocks pruned, "
+              f"attribution {rep.source_totals() or '{}'}")
+    return got
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--kind", choices=["crawl", "tokens"])
@@ -174,6 +203,12 @@ def main() -> None:
                     help="after writing, run a predicate-pushdown scan and "
                          "report pruned-vs-scanned block counts (OP in "
                          "== != < <= > >= contains)")
+    ap.add_argument("--explain", action="store_true",
+                    help="with --where: print the planner's decision tree "
+                         "(split/block prune attribution per stats source, "
+                         "late-materialized columns) without decoding "
+                         "anything, then cross-check it against the real "
+                         "scan's counters")
     ap.add_argument("--fsck", action="store_true",
                     help="audit the EXISTING corpus at --out against its "
                          "commit manifests (no writes); exit 1 on damage")
@@ -227,7 +262,8 @@ def main() -> None:
             sharded_verify(args.out, ["url", "fetchTime"], args.verify_hosts,
                            w.total_records)
         if args.where:
-            where_report(args.out, args.where, ["url", "fetchTime"])
+            where_with_explain(args.out, args.where, ["url", "fetchTime"],
+                               args.explain)
     else:
         from ..data.tokens import TokenCorpusWriter
 
@@ -243,7 +279,8 @@ def main() -> None:
             sharded_verify(args.out, ["n_tokens"], args.verify_hosts,
                            w.n_sequences)
         if args.where:
-            where_report(args.out, args.where, ["n_tokens"])
+            where_with_explain(args.out, args.where, ["n_tokens"],
+                               args.explain)
 
 
 if __name__ == "__main__":

@@ -50,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core import trace
+from ..core.trace import Histogram
 from ..models import lm
 
 
@@ -113,8 +115,15 @@ class TenantStats:
     admitted: int = 0
     finished: int = 0
     peak_queue_depth: int = 0
-    # admit-to-done wall seconds per finished request (p50/p99 material)
-    latencies_s: List[float] = field(default_factory=list)
+    # admit-to-done wall seconds per finished request; ``latency.p50`` /
+    # ``latency.p99`` are the serving SLO numbers (core.trace.Histogram —
+    # the same percentile math benchmarks report, computed in one place)
+    latency: Histogram = field(default_factory=Histogram)
+
+    @property
+    def latencies_s(self) -> List[float]:
+        """Raw samples, for callers that merge across tenants."""
+        return self.latency.values
 
 
 class PromptStore:
@@ -269,6 +278,7 @@ class ServeEngine:
         self.max_seq = max_seq
         self.prompt_store = prompt_store
         self.admission = admission if admission is not None else AdmissionPolicy()
+        self._tr = trace.live()  # None when tracing is disabled (zero cost)
         self.caches = lm.init_cache(cfg, max_batch, max_seq)
         # per-slot bookkeeping
         self.slot_req: List[Optional[Request]] = [None] * max_batch
@@ -310,6 +320,10 @@ class ServeEngine:
         ts.submitted += 1
         if len(q) >= self.admission.max_queue_depth:
             ts.rejected += 1
+            if self._tr is not None:
+                self._tr.instant("serve.reject", {
+                    "tenant": req.tenant, "rid": req.rid, "depth": len(q),
+                })
             raise AdmissionRejected(
                 req.tenant, len(q), self.admission.max_queue_depth
             )
@@ -390,6 +404,8 @@ class ServeEngine:
             return
         refs = [r.prompt_ref for r in need]
         self._pf_reqs = need
+        if self._tr is not None:
+            self._tr.instant("prefetch.issue", {"refs": len(refs)})
         self._pf_future = self._exec.submit(self.prompt_store.fetch, refs)
 
     def _prefetch_collect(self) -> None:
@@ -404,7 +420,13 @@ class ServeEngine:
             prompts = self._pf_future.result()
         finally:
             self._pf_future = None
-            self.admit_stall_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.admit_stall_s += dt
+            if self._tr is not None:
+                self._tr.instant("serve.stall", {
+                    "seconds": dt, "refs": len(self._pf_reqs),
+                    "prefetched": True,
+                }, cat="sched")
         for r, p in zip(self._pf_reqs, prompts):
             r.prompt = p
         self._pf_reqs = []
@@ -442,6 +464,11 @@ class ServeEngine:
             and self._admission_order(1)
         ):
             self.admissions_deferred += 1
+            if self._tr is not None:
+                self._tr.instant("serve.defer", {
+                    "queued": sum(len(q) for q in self._queues.values()),
+                    "cache_bytes": cache.current_bytes,
+                })
             return
         admitted = self._admission_order(len(free))
         if not admitted:
@@ -462,7 +489,14 @@ class ServeEngine:
             )
             t0 = time.perf_counter()
             prompts = self.prompt_store.fetch([r.prompt_ref for r in need])
-            self.admit_stall_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.admit_stall_s += dt
+            if self._tr is not None:
+                # wall-clock wait — scheduler-dependent, excluded from the
+                # deterministic counter view like every timing-borne event
+                self._tr.instant("serve.stall", {
+                    "seconds": dt, "refs": len(need), "prefetched": False,
+                }, cat="sched")
             for r, p in zip(need, prompts):
                 r.prompt = p
         now = time.perf_counter()
@@ -475,6 +509,10 @@ class ServeEngine:
             self.slot_pending[slot] = deque(req.prompt)
             req.t_admit = now
             self.tenant_stats[req.tenant].admitted += 1
+            if self._tr is not None:
+                self._tr.instant("serve.admit", {
+                    "tenant": req.tenant, "rid": req.rid, "slot": slot,
+                })
         # ONE cache-pytree pass resets every slot admitted this step
         self._reset_slots(free[: len(admitted)])
 
@@ -525,7 +563,7 @@ class ServeEngine:
                 if ts is not None:
                     ts.finished += 1
                     if req.t_admit is not None:
-                        ts.latencies_s.append(now - req.t_admit)
+                        ts.latency.record(now - req.t_admit)
                 finished.append(req)
                 self.slot_req[slot] = None
                 self.slot_pending[slot] = deque()
