@@ -43,7 +43,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # fixture filename prefix -> the version heading FORMAT.md must carry
 _FIXTURE_VERSIONS = {"prepr": "Version 1", "v2": "Version 2",
                      "v3": "Version 3", "v31": "Version 3.1",
-                     "v32": "Version 3.2"}
+                     "v32": "Version 3.2", "v33": "Version 3.3"}
 
 # benchmark modules that are NOT harness jobs: harness infrastructure plus
 # standalone report generators with their own CLIs

@@ -65,6 +65,13 @@ SPLIT_RECORDS = 512      # -> 6 splits
 N_HOSTS = 4
 CUTOFF = 1300000000 + 300  # fetchTime < CUTOFF selects the first 300 rows
 POLICY = FailurePolicy(max_attempts=4, max_reexecutions=2, seed=0)
+LAYOUT_N = 2048             # the PR-10 layout corpus
+LAYOUT_SPLIT_RECORDS = 512  # -> 4 splits
+LAYOUT_CUT = 80             # k < LAYOUT_CUT: ~4% — clustered on the sorted copy
+
+
+def _layout_placement() -> Placement:
+    return Placement(LAYOUT_N // LAYOUT_SPLIT_RECORDS, N_HOSTS, 2)
 
 # drift directions: a work counter RISING or a savings counter FALLING is
 # a regression; anything else that moves means the workload changed or an
@@ -74,10 +81,13 @@ BAD_UP = frozenset({
     "blocks_decompressed", "files_opened", "cache_misses",
     "cache_evictions", "checksum_failures", "read_retries",
     "replica_failovers", "splits_reexecuted", "repairs_enqueued",
+    # a clean scheduled run serving MORE splits from the insertion-order
+    # fallback means the layout cost step stopped winning (PR 10)
+    "layout_fallbacks",
 })
 BAD_DOWN = frozenset({
     "cache_hits", "bytes_served_from_cache", "blocks_pruned_stats",
-    "cells_skipped", "rows_short_circuited",
+    "cells_skipped", "rows_short_circuited", "layout_best_choices",
 })
 
 
@@ -108,6 +118,25 @@ def _build_corpora(base: str) -> None:
     for toks, meta in synth_token_docs(100, vocab=120, seed=17):
         tw.add_document(toks % 50 + 1, meta)
     tw.close()
+    # the PR-10 layout corpus: a shuffled int key (every key range is
+    # scattered across insertion-order blocks) + a k-sorted replica copy
+    import random
+
+    from repro.core import Schema, materialize_layouts
+    from repro.core.schema import INT64, STRING
+
+    keys = list(range(LAYOUT_N))
+    random.Random(42).shuffle(keys)
+    lw = COFWriter(os.path.join(base, "layouts"),
+                   Schema([("k", INT64()), ("payload", STRING())]),
+                   formats={"k": ColumnFormat(enc_block=64),
+                            "payload": ColumnFormat(enc_block=64)},
+                   split_records=LAYOUT_SPLIT_RECORDS)
+    for k in keys:
+        lw.append({"k": k, "payload": f"p{k:06d}-" + "x" * (10 + k % 20)})
+    lw.close()
+    materialize_layouts(os.path.join(base, "layouts"), _layout_placement(),
+                        ["k"])
 
 
 # -- scenarios: each returns (counters, extra) -------------------------------
@@ -178,11 +207,40 @@ def _scn_faults(base: str):
     return _counters(r.stats), {}, r.stats
 
 
+def _scn_layout_sched(base: str):
+    """The PR-10 layout-aware scheduler on the shuffled-key corpus: every
+    split must route to its k-sorted replica copy (``layout_best_choices``
+    == n_splits, ``layout_fallbacks`` == 0 — both baselined), and the
+    explain report's prune count must equal the scan's counter."""
+    root = os.path.join(base, "layouts")
+    p = _layout_placement()
+    pred = col("k") < LAYOUT_CUT
+    r = CIFReader(root, columns=["payload"])
+    sched = r.schedule_layouts(pred, p)
+    ids, ob = r.job_inputs(schedule=sched)
+
+    def map_batch(split_id, cols, emit):
+        emit(None, (cols.n_rows, sum(len(v) for v in cols["payload"])))
+
+    res = run_job(ids, n_hosts=p.n_hosts, placement=sched.placement,
+                  open_split_batches=ob, map_batch_fn=map_batch,
+                  scan_stats=r.stats)
+    rows = sum(v[0] for _, vs in res.output for v in vs)
+    assert rows == LAYOUT_CUT, f"selected {rows} rows, wanted {LAYOUT_CUT}"
+    rep = explain(root, pred, columns=["payload"], placement=p)
+    assert rep.blocks_pruned == r.stats.blocks_pruned_stats, (
+        f"layout-aware explain predicted {rep.blocks_pruned} pruned "
+        f"blocks, the scheduled scan pruned {r.stats.blocks_pruned_stats}"
+    )
+    return _counters(r.stats), {"rows": rows}, r.stats
+
+
 SCENARIOS = [
     ("fig1_where_job", _scn_fig1_where_job),
     ("sorted_prune", _scn_sorted_prune),
     ("cached_refetch", _scn_cached_refetch),
     ("faults", _scn_faults),
+    ("layout_sched", _scn_layout_sched),
 ]
 
 

@@ -20,8 +20,8 @@ def main() -> None:
                          "whole suite doubles as a tier-2 check")
     ap.add_argument("--only", default="", help="comma list: fig7,table1,fig8,"
                     "fig9,fig10,fig11,table2,kernels,pipeline,batch_decode,"
-                    "sharded_scan,encodings,pushdown,faults,repair,serving,"
-                    "regress")
+                    "sharded_scan,encodings,pushdown,faults,repair,layouts,"
+                    "serving,regress")
     args = ap.parse_args()
     assert not (args.full and args.smoke), "pick one of --full / --smoke"
     only = set(args.only.split(",")) if args.only else None
@@ -32,6 +32,7 @@ def main() -> None:
     from . import deser_and_kernels as dk
     from . import encodings as ec
     from . import faults as fl
+    from . import layouts as ly
     from . import pushdown as pd
     from . import regress as rg
     from . import repair as rp
@@ -69,6 +70,8 @@ def main() -> None:
                                      write_json=not args.smoke)),
         ("repair", lambda: rp.repair_bench(csv, n=size(24_000, 4000),
                                            write_json=not args.smoke)),
+        ("layouts", lambda: ly.layouts(csv, n=size(48_000, 6000),
+                                       write_json=not args.smoke)),
         ("serving", lambda: sv.serving(csv, n=size(600, 120),
                                        write_json=not args.smoke)),
         # fixed sizes by design: the record/replay counter gate only means

@@ -10,9 +10,14 @@ Public API:
 Baselines: seqfile (SEQ), textfile (TXT), rowgroup (RCFile).
 """
 from .cif import (
-    BatchColumns, CIFReader, ExplainReport, FilteredBatchColumns, ScanStats,
+    BatchColumns, CanonicalBatchColumns, CIFReader, ExplainReport,
+    FilteredBatchColumns, LayoutCandidate, LayoutSchedule, ScanStats,
     explain, format_storage_report, fsck, list_splits, quarantined_splits,
     read_schema, repair, storage_report,
+)
+from .layout import (
+    LayoutDescriptor, PinnedPlacement, host_layout_dir, materialize_layouts,
+    read_layouts,
 )
 from .blockcache import BlockCache
 from .cof import COFWriter, add_column, split_name
@@ -42,7 +47,7 @@ from .mapreduce import (
     format_job_report, run_job,
 )
 from .trace import Histogram, Tracer, tracing
-from .placement import Placement, WorkQueue, stable_partition
+from .placement import Placement, ScheduledPlacement, WorkQueue, stable_partition
 from .predicate import Expr, col, parse_predicate, validate_predicate
 from .stats import BloomFilter, PruneResult, ZoneMap
 from .varcodec import DictRaggedColumn, RaggedColumn
@@ -66,7 +71,8 @@ __all__ = [
     "ARRAY", "BOOL", "BYTES", "BatchColumns", "BlockCache",
     "BlockCorruptionError",
     "BloomFilter", "CBLOCK_RECORDS",
-    "CIFReader", "COFWriter", "ColumnFileReader", "ColumnFileWriter",
+    "CIFReader", "COFWriter", "CanonicalBatchColumns",
+    "ColumnFileReader", "ColumnFileWriter",
     "ColumnFormat", "ColumnType", "CopyState", "CorruptFileError",
     "CoverageError",
     "DEFAULT_POLICY", "DeadlineExceeded", "DictPage", "DictRaggedColumn",
@@ -74,20 +80,25 @@ __all__ = [
     "FailurePolicy", "FailureStats", "FaultPlan",
     "FilteredBatchColumns", "Histogram", "INT32", "INT64", "InjectedIOError",
     "JobResult",
+    "LayoutCandidate", "LayoutDescriptor", "LayoutSchedule",
     "LazyRecord",
-    "MAP", "PhaseTimes", "Placement", "PruneResult", "RECORD", "Record",
+    "MAP", "PhaseTimes", "PinnedPlacement", "Placement", "PruneResult",
+    "RECORD", "Record",
     "RaggedColumn",
     "RepairReport",
-    "STRING", "ScanStats", "Schema", "SplitRetryExhausted",
+    "STRING", "ScanStats", "ScheduledPlacement", "Schema",
+    "SplitRetryExhausted",
     "SplitUnserveableError", "Tracer", "WorkQueue",
     "ZoneMap", "add_column",
     "col", "durable_write", "durable_write_json", "encode_block",
     "execution_epoch", "explain", "fig1_map", "fig1_map_batch",
     "fig1_reduce",
     "fig1_where", "format_job_report", "format_storage_report", "fsck",
-    "fsync_dir", "list_splits",
+    "fsync_dir", "host_layout_dir", "list_splits",
+    "materialize_layouts",
     "parse_predicate",
-    "plain_size", "quarantined_splits", "read_schema", "repair", "run_job",
+    "plain_size", "quarantined_splits", "read_layouts", "read_schema",
+    "repair", "run_job",
     "split_name", "stable_partition",
     "storage_report", "tracing", "urlinfo_schema", "validate_predicate",
 ]

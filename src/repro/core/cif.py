@@ -62,11 +62,18 @@ from .errors import (
     FailureStats,
     SplitRetryExhausted,
 )
-from .faults import FaultPlan, attempt_base
+from .faults import FaultPlan, attempt_base, current_epoch
+from .layout import (
+    ROWIDS_COLUMN,
+    LayoutDescriptor,
+    PinnedPlacement,
+    host_layout_dir,
+    read_layouts,
+)
 from .lazy import EagerRecord, LazyRecord, Record
-from .placement import Placement
+from .placement import Placement, ScheduledPlacement
 from .predicate import ColumnInfo, Expr, TRI_NONE, parse_predicate, validate_predicate
-from .schema import Schema
+from .schema import INT64, Schema
 from .stats import PruneResult, clip_ranges, intersect_ranges, ranges_rows
 from .varcodec import RaggedColumn
 
@@ -281,6 +288,16 @@ class ScanStats:
     cache_misses: int = 0
     cache_evictions: int = 0
     bytes_served_from_cache: int = 0
+    # layout-aware scheduling (PR 10; zero without a LayoutSchedule).
+    # Per COMPLETING split execution exactly one of the two advances:
+    # layout_best_choices when the execution was served by the schedule's
+    # top-choice SORTED replica copy, layout_fallbacks otherwise (the
+    # insertion-order copy won the cost comparison, or failover rotated
+    # the execution onto a lower-preference replica).  Schedule-free like
+    # every counter above: the choice is precomputed per split and epochs
+    # bump on deterministic requeues, so serial == concurrent.
+    layout_best_choices: int = 0
+    layout_fallbacks: int = 0
 
     def absorb(self, c: ReadCounters, file_bytes: int) -> None:
         self.bytes_io += file_bytes
@@ -401,6 +418,15 @@ class SplitReader:
         # planner accounting, folded into ScanStats by finish_stats
         self.blocks_pruned_stats = 0
         self.rows_short_circuited = 0
+        # layout-aware scheduling attribution (PR 10): the schedule's open
+        # function sets exactly one to 1 before handing the reader to the
+        # map task; finish_stats folds them, so — like every counter — an
+        # abandoned execution on one replica contributes nothing
+        self.layout_best_choices = 0
+        self.layout_fallbacks = 0
+        # a layout copy's _meta.json carries its descriptor; the base copy
+        # has none.  filter_split keys the canonical re-permutation on it.
+        self.layout: Optional[Dict[str, Any]] = self.meta.get("layout")
         self._plan: Optional[Tuple[Expr, PruneResult]] = None
         if lazy_open:
             self.readers: Dict[str, ColumnFileReader] = _LazyReaders(self)
@@ -484,8 +510,14 @@ class SplitReader:
 
     def _open_reader(self, name: str) -> ColumnFileReader:
         assert name in self.columns, f"column {name!r} not opened by this split"
+        return self._open_reader_typed(name, self.schema.type_of(name))
+
+    def _open_reader_typed(self, name: str, typ: Any) -> ColumnFileReader:
+        """Open one column file with an explicit type — the seam that lets
+        ``filter_split`` open a layout copy's ``_rowids`` companion (not a
+        schema column) through the SAME retry/overlay/fault machinery as
+        every real column."""
         path = os.path.join(self.split_dir, f"{name}.col")
-        typ = self.schema.type_of(name)
         if self._policy is None and self._fault_plan is None:
             # no retry policy: plain open — still graceful typed errors and
             # lazy verification, but corruption raises instead of recovering
@@ -652,6 +684,37 @@ class SplitReader:
                 pred_vals[name] = _compress(cells, mask)
         return FilteredBatchColumns(self, ids[mask], pred_vals, start, stop)
 
+    def filter_split(self, pred: Expr) -> Optional["BatchColumns"]:
+        """Whole-split predicate evaluation in CANONICAL record order — the
+        layout-aware read path (PR 10).
+
+        On the insertion-order base copy this is exactly one
+        ``filter_span`` over the full split.  On a sorted layout copy the
+        matched rows come back in SORT order, so they are re-permuted by
+        the copy's ``_rowids`` companion column (the canonical record id of
+        each sorted row) into a ``CanonicalBatchColumns`` whose ``rows``,
+        iteration order, and late-materialized values are bit-identical to
+        what the base copy produces — which is what lets a job mix replicas
+        of different layouts (choice, failover) and still fold one
+        deterministic output.  One span per split by construction: the
+        permutation needs every matching row of the split at once.
+        """
+        fb = self.filter_span(pred, 0, self.n_records)
+        if fb is None or self.layout is None:
+            return fb
+        # _rowids opens through the full retry seam (keyed as its own
+        # column) and its IO lands in self.readers, so finish_stats charges
+        # the canonicalization honestly
+        if ROWIDS_COLUMN not in self.readers:
+            self.readers[ROWIDS_COLUMN] = self._open_reader_typed(
+                ROWIDS_COLUMN, INT64()
+            )
+        canon = np.asarray(
+            self.readers[ROWIDS_COLUMN].read_many(fb.rows.tolist()), np.int64
+        )
+        perm = np.argsort(canon, kind="stable")
+        return CanonicalBatchColumns(fb, canon, perm)
+
     def iter_lazy(self) -> Iterator[LazyRecord]:
         rec = LazyRecord(self.readers)
         for _ in range(self.n_records):
@@ -695,11 +758,15 @@ class SplitReader:
         stats.records_scanned += self.n_records
         stats.blocks_pruned_stats += self.blocks_pruned_stats
         stats.rows_short_circuited += self.rows_short_circuited
+        stats.layout_best_choices += self.layout_best_choices
+        stats.layout_fallbacks += self.layout_fallbacks
         stats.absorb_failures(self.fail)
         if delta is not None:
             delta.records_scanned += self.n_records
             delta.blocks_pruned_stats += self.blocks_pruned_stats
             delta.rows_short_circuited += self.rows_short_circuited
+            delta.layout_best_choices += self.layout_best_choices
+            delta.layout_fallbacks += self.layout_fallbacks
             delta.absorb_failures(self.fail)
             payload: Dict[str, Any] = {
                 f.name: getattr(delta, f.name)
@@ -866,6 +933,181 @@ class FilteredBatchColumns(BatchColumns):
             "span is already predicate-filtered — pass where= to either "
             "job_inputs() or run_job(), not both"
         )
+
+
+class CanonicalBatchColumns:
+    """Matched rows of a SORTED replica copy, re-permuted into canonical
+    (insertion) order — what ``SplitReader.filter_split`` yields off a
+    layout copy (PR 10).
+
+    Wraps the copy's ``FilteredBatchColumns`` (whose ``rows`` are sorted-
+    copy positions) with the permutation derived from ``_rowids``:
+    ``rows`` here are the CANONICAL record ids, strictly increasing, and
+    every column access permutes the underlying values to match — so map
+    functions observe exactly the view the insertion-order base copy would
+    have produced, and job output folds bit-identically no matter which
+    replica (or mix of replicas, under failover) served each split.
+    Late materialization is preserved: an untouched column still decodes
+    only on first access, reading the SORTED copy's rows monotonically
+    before permuting.
+    """
+
+    __slots__ = ("_fb", "_perm", "rows", "start", "stop", "_cache")
+
+    prefiltered = True
+
+    def __init__(
+        self, fb: FilteredBatchColumns, canon: np.ndarray, perm: np.ndarray
+    ):
+        self._fb = fb
+        self._perm = perm
+        self.rows = canon[perm]
+        assert len(self.rows) == 0 or bool(
+            np.all(self.rows[1:] > self.rows[:-1])
+        ), "duplicate canonical row ids — corrupt _rowids companion"
+        self.start = 0
+        self.stop = fb._sr.n_records
+        self._cache: Dict[str, Any] = {}
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.rows)
+
+    def keys(self):
+        return self._fb.keys()
+
+    def __iter__(self):
+        return iter(self._fb)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._fb
+
+    def __getitem__(self, name: str) -> Any:
+        v = self._cache.get(name)
+        if v is None:
+            raw = self._fb[name]
+            if isinstance(raw, (np.ndarray, RaggedColumn)):
+                v = raw[self._perm]
+            else:
+                v = [raw[int(i)] for i in self._perm]
+            self._cache[name] = v
+        return v
+
+    def get(self, name: str, default: Any = None) -> Any:
+        return self[name] if name in self._fb else default
+
+    def sparse(self, name: str, rows: Sequence[int], key: Optional[str] = None) -> List[Any]:
+        """Index into the MATCHING rows (canonical order).  The underlying
+        sorted-copy fetch must be monotone, so the request is routed
+        through the permutation, served in sorted-copy order, and the
+        results un-permuted back."""
+        idx = np.asarray(list(rows), np.int64)
+        fbi = self._perm[idx]
+        order = np.argsort(fbi, kind="stable")
+        vals = self._fb.sparse(name, fbi[order].tolist(), key)
+        out: List[Any] = [None] * len(idx)
+        for j, o in enumerate(order.tolist()):
+            out[o] = vals[j]
+        return out
+
+    def filter(self, pred: Expr) -> Optional["FilteredBatchColumns"]:
+        raise AssertionError(
+            "span is already predicate-filtered — pass where= to either "
+            "job_inputs() or run_job(), not both"
+        )
+
+
+@dataclass(frozen=True)
+class LayoutCandidate:
+    """One replica copy a split's ``where=`` scan could be served from:
+    the insertion-order base copy (``sort_by is None``) or a host's sorted
+    layout copy — with the real planner's verdict against THAT copy's zone
+    maps (probed without decoding a cell)."""
+
+    host: int
+    sort_by: Optional[str]
+    dir: str
+    blocks_total: int
+    blocks_pruned: int
+    candidate_rows: int
+    chain_pos: int  # position in the split's replica chain
+
+    @property
+    def blocks_scanned(self) -> int:
+        return self.blocks_total - self.blocks_pruned
+
+    @property
+    def is_fallback(self) -> bool:
+        return self.sort_by is None
+
+
+class LayoutSchedule:
+    """A layout-aware plan for one ``where=`` predicate (PR 10).
+
+    Built by ``CIFReader.schedule_layouts``: per split, every serveable
+    replica copy (base + registered layouts) probed with the REAL planner,
+    then ordered best-first — the HAIL cost step, picking ``(replica,
+    host)`` jointly.  The decision rule: minimize ``(blocks_scanned,
+    candidate_rows, chain_pos)``; ties go to the earlier chain position,
+    so the insertion-order base copy (chain position 0) wins whenever
+    sorting buys nothing — which guarantees the chosen copy never scans
+    more blocks than the fallback.
+
+    ``candidate_for(split, epoch)`` rotates through the preference chain
+    on re-execution epochs: attempt-ladder exhaustion on the best copy
+    requeues the split, and the next execution is served by the next
+    replica — whose layout may differ — composing the PR 6 failover chain
+    with heterogeneous layouts.  ``placement`` exposes the same chains to
+    the WorkQueue so the executing host always holds the copy it reads.
+    ``force(k)`` pins every split to chain position ``k`` (single-entry
+    preference chains) — the differential harness's replica-forcing knob.
+    """
+
+    def __init__(
+        self,
+        root: str,
+        where: Expr,
+        base: Placement,
+        prefs: Dict[int, List[LayoutCandidate]],
+    ):
+        self.root = root
+        self.where = where
+        self.base = base
+        self.prefs = prefs
+
+    def chosen(self, split_id: int) -> LayoutCandidate:
+        return self.prefs[split_id][0]
+
+    def fallback(self, split_id: int) -> LayoutCandidate:
+        for c in self.prefs[split_id]:
+            if c.is_fallback:
+                return c
+        raise AssertionError(
+            f"split {split_id}: no insertion-order candidate in the "
+            "preference chain (base copy unserveable?)"
+        )
+
+    def candidate_for(self, split_id: int, epoch: int) -> LayoutCandidate:
+        pref = self.prefs[split_id]
+        return pref[epoch % len(pref)]
+
+    @property
+    def placement(self) -> ScheduledPlacement:
+        return ScheduledPlacement(
+            self.base,
+            {s: tuple(c.host for c in pref) for s, pref in self.prefs.items()},
+        )
+
+    def force(self, chain_pos: int) -> "LayoutSchedule":
+        prefs: Dict[int, List[LayoutCandidate]] = {}
+        for s, pref in self.prefs.items():
+            match = [c for c in pref if c.chain_pos == chain_pos]
+            assert match, (
+                f"split {s}: no serveable candidate at chain position "
+                f"{chain_pos}"
+            )
+            prefs[s] = match
+        return LayoutSchedule(self.root, self.where, self.base, prefs)
 
 
 class CIFReader:
@@ -1036,6 +1278,96 @@ class CIFReader:
                         yield {c: fb[c] for c in self.columns}
             self.absorb_stats(sr)
 
+    # -- layout-aware scheduling (PR 10) -------------------------------------
+    def schedule_layouts(self, where: Any, placement: Placement) -> LayoutSchedule:
+        """The HAIL cost step: probe every replica copy of every split —
+        the insertion-order base plus each layout registered in the split's
+        ``_layout.json`` — with the real planner, and order the candidates
+        best-first.
+
+        Probes are throwaway lazy readers over the predicate columns only:
+        they read zone maps / dict pages / blooms, never decode a cell, and
+        their counters are DISCARDED (scheduling cost is not scan cost — a
+        run's ScanStats stay comparable with and without a schedule).  A
+        physically damaged copy fails its probe and drops out of the
+        candidate list; injected (fault-plan) damage is invisible here and
+        is handled at read time by the ladder + epoch rotation.  Splits are
+        asserted to keep at least their base candidate — an unprobeable
+        base copy is repair's problem, not the scheduler's.
+        """
+        pred = parse_predicate(where) if isinstance(where, str) else where
+        pcols = self._where_columns(pred)
+        tr = trace.live()
+        prefs: Dict[int, List[LayoutCandidate]] = {}
+        for idx, sdir in self.splits():
+            chain = placement.replicas(idx)
+            layouts = read_layouts(sdir)
+            cands: List[LayoutCandidate] = []
+            seen_base = False
+            for pos, host in enumerate(chain):
+                if host in layouts:
+                    cdir = host_layout_dir(sdir, host)
+                    sort_by: Optional[str] = layouts[host]["descriptor"].sort_by
+                else:
+                    if seen_base:
+                        continue  # every layout-less host serves the same base
+                    seen_base = True
+                    cdir = sdir
+                    sort_by = None
+                try:
+                    probe = SplitReader(
+                        cdir, self.schema, pcols, lazy_open=True, split_id=idx
+                    )
+                    plan = probe.plan(pred)
+                except (CorruptFileError, OSError):
+                    continue  # damaged copy: not a candidate
+                cands.append(LayoutCandidate(
+                    host=host, sort_by=sort_by, dir=cdir,
+                    blocks_total=plan.blocks_total,
+                    blocks_pruned=plan.blocks_pruned,
+                    candidate_rows=ranges_rows(plan.ranges),
+                    chain_pos=pos,
+                ))
+            assert cands, (
+                f"split {idx}: every replica copy failed its planning probe "
+                "— run cif.repair before scheduling"
+            )
+            best = min(
+                cands,
+                key=lambda c: (c.blocks_scanned, c.candidate_rows, c.chain_pos),
+            )
+            prefs[idx] = [best] + [c for c in cands if c is not best]
+            if tr is not None:
+                fb = next((c for c in cands if c.is_fallback), None)
+                tr.instant("layout.choose", {
+                    "split": idx, "host": best.host, "sort_by": best.sort_by,
+                    "blocks_scanned": best.blocks_scanned,
+                    "candidate_rows": best.candidate_rows,
+                    "fallback_blocks_scanned":
+                        fb.blocks_scanned if fb is not None else None,
+                    "candidates": len(cands),
+                })
+        return LayoutSchedule(self.root, pred, placement, prefs)
+
+    def _open_candidate(
+        self, split_id: int, cand: LayoutCandidate, pcols: Sequence[str]
+    ) -> SplitReader:
+        """A SplitReader over one candidate copy, pinned to its host: every
+        attempt of the PR 6 ladder reads THIS host's copy (mixing sorted
+        and insertion-order bytes mid-execution would interleave rows of
+        different records), so failover to a differently-laid-out replica
+        happens only between execution epochs via the schedule."""
+        cols = list(self.columns)
+        for c in pcols:
+            if c not in cols:
+                cols.append(c)
+        return SplitReader(
+            cand.dir, self.schema, cols, lazy_open=True, project=self.columns,
+            split_id=split_id, placement=PinnedPlacement(cand.host),
+            fault_plan=self.fault_plan, policy=self.failure_policy,
+            cache=self.cache,
+        )
+
     # -- MapReduce adapters (run_job inputs) ---------------------------------
     def job_inputs(
         self,
@@ -1043,6 +1375,7 @@ class CIFReader:
         *,
         where: Optional[Expr] = None,
         placement: Optional[Placement] = None,
+        schedule: Optional[LayoutSchedule] = None,
     ) -> Tuple[List[int], Callable[[int], Iterator[BatchColumns]]]:
         """``(split_ids, open_split_batches)`` for batch-mode ``run_job``.
 
@@ -1056,7 +1389,21 @@ class CIFReader:
         evaluated, and map functions see just the matching rows (empty
         spans are never yielded).  Equivalent to ``run_job(where=...)`` but
         saves opening the projection columns of fully-pruned splits.
+
+        With ``schedule=`` (a ``schedule_layouts`` result; mutually
+        exclusive with ``where=``, which the schedule embeds) each split is
+        served from the replica copy its execution epoch maps to — the
+        chosen layout on epoch 0, rotating down the preference chain on
+        requeues — and yields exactly ONE canonical-order span per split
+        (``SplitReader.filter_split``), so output and counters are
+        bit-identical no matter which replica served.  Pair it with
+        ``run_job(..., placement=schedule.placement)`` and NO ``where=``.
         """
+        if schedule is not None:
+            assert where is None, (
+                "schedule= already embeds the predicate — don't pass where="
+            )
+            return self._layout_job_inputs(schedule)
         split_map = dict(self.splits())
         pcols = self._where_columns(where) if where is not None else ()
 
@@ -1079,6 +1426,36 @@ class CIFReader:
             self.absorb_stats(sr)
 
         return sorted(split_map), open_split_batches
+
+    def _layout_job_inputs(
+        self, sched: LayoutSchedule
+    ) -> Tuple[List[int], Callable[[int], Iterator[BatchColumns]]]:
+        """The layout-aware ``(split_ids, open_split_batches)``: each
+        execution opens the replica copy ``sched.candidate_for(split,
+        current_epoch())`` names — so a requeued split's retry lands on the
+        next replica in the preference chain, layouts and all — and yields
+        one canonical-order span.  Attribution: the completing execution
+        counts as a ``layout_best_choices`` when it was served by the
+        schedule's top choice AND that choice is a sorted layout, else as a
+        ``layout_fallbacks`` (insertion-order won the cost step, or
+        failover rotated past the best copy)."""
+        pred = sched.where
+        pcols = self._where_columns(pred)
+        split_ids = sorted(sched.prefs)
+
+        def open_split_batches(split_id: int) -> Iterator[BatchColumns]:
+            cand = sched.candidate_for(split_id, current_epoch())
+            sr = self._open_candidate(split_id, cand, pcols)
+            if cand is sched.prefs[split_id][0] and not cand.is_fallback:
+                sr.layout_best_choices = 1
+            else:
+                sr.layout_fallbacks = 1
+            fb = sr.filter_split(pred)
+            if fb is not None:
+                yield fb
+            self.absorb_stats(sr)
+
+        return split_ids, open_split_batches
 
     def job_records(
         self,
@@ -1180,6 +1557,17 @@ class SplitExplain:
     columns: List[ColumnExplain]
     ranges: List[Tuple[int, int]]
     candidate_rows: int
+    # layout-aware scheduling (PR 10; populated only by explain(placement=)
+    # over a corpus with materialized layouts): which replica copy the
+    # schedule chose for this split and the full candidate slate as
+    # (host, sort_by, blocks_scanned) — sort_by None = the insertion-order
+    # base copy.  The plan numbers above are THAT copy's, so
+    # report.blocks_pruned matches the layout-aware scan's counter.
+    layout_host: Optional[int] = None
+    layout_sort_by: Optional[str] = None
+    layout_candidates: List[Tuple[int, Optional[str], int]] = field(
+        default_factory=list
+    )
 
 
 @dataclass
@@ -1273,6 +1661,16 @@ class ExplainReport:
                 f" -> {s.candidate_rows} candidate rows in "
                 f"{len(s.ranges)} range(s)"
             )
+            if s.layout_host is not None:
+                slate = ", ".join(
+                    f"h{h}:{sb or 'insertion-order'}={bs}blk"
+                    for h, sb, bs in s.layout_candidates
+                )
+                lines.append(
+                    f"      layout: host {s.layout_host} "
+                    f"({s.layout_sort_by or 'insertion-order'}) "
+                    f"chosen of [{slate}]"
+                )
             for c in s.columns:
                 csrc = ", ".join(
                     f"{k} {v}" for k, v in sorted(c.sources.items())
@@ -1294,6 +1692,8 @@ def explain(
     root: str,
     where: Any,
     columns: Optional[Sequence[str]] = None,
+    *,
+    placement: Optional[Placement] = None,
 ) -> ExplainReport:
     """Render the planner's decision tree for ``where=`` over ``root``
     WITHOUT decoding a single cell.
@@ -1306,15 +1706,30 @@ def explain(
     (defaults to the full schema).  The returned report's prune counts are
     exactly what a subsequent scan reports in ``blocks_pruned_stats``, and
     its own ``stats.bytes_decoded`` is asserted zero.
+
+    With ``placement=`` the report is LAYOUT-AWARE (PR 10): the same
+    ``schedule_layouts`` cost step a scheduled job runs picks each split's
+    replica copy, the plan numbers are derived from THAT copy's zone maps,
+    and each ``SplitExplain`` names the chosen ``(host, sort_by)`` plus
+    the full candidate slate — so ``report.blocks_pruned`` equals the
+    ``blocks_pruned_stats`` a clean ``job_inputs(schedule=...)`` run
+    charges.
     """
     pred = parse_predicate(where) if isinstance(where, str) else where
     reader = CIFReader(root, columns=columns)
     pcols = reader._where_columns(pred)
     late = [c for c in reader.columns if c not in pcols]
+    sched = (
+        reader.schedule_layouts(pred, placement)
+        if placement is not None else None
+    )
     splits_expl: List[SplitExplain] = []
     for idx, sdir in reader.splits():
-        sr = reader.open_split(sdir, extra_columns=pcols, lazy_open=True,
-                               split_id=idx)
+        chosen = sched.chosen(idx) if sched is not None else None
+        sr = reader.open_split(
+            chosen.dir if chosen is not None else sdir,
+            extra_columns=pcols, lazy_open=True, split_id=idx,
+        )
         # stage-1 re-derivation (mirrors SplitReader.plan): which predicate
         # columns' persisted zone summaries alone prove the split dead
         meta_dead: List[str] = []
@@ -1350,6 +1765,12 @@ def explain(
             columns=cols_expl,
             ranges=list(plan.ranges),
             candidate_rows=ranges_rows(plan.ranges),
+            layout_host=chosen.host if chosen is not None else None,
+            layout_sort_by=chosen.sort_by if chosen is not None else None,
+            layout_candidates=[
+                (c.host, c.sort_by, c.blocks_scanned)
+                for c in sched.prefs[idx]
+            ] if sched is not None else [],
         ))
         reader.absorb_stats(sr)
     assert reader.stats.bytes_decoded == 0 and reader.stats.cells_decoded == 0, (

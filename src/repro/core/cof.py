@@ -221,6 +221,19 @@ class COFWriter:
         self._writers = None
 
 
+def materialize_layouts(root, placement, layouts, *, fsync: bool = True):
+    """Write-path entry point for per-replica heterogeneous layouts
+    (PR 10, the HAIL idea): after a corpus is committed, re-sort and
+    re-encode one full copy of each split per requested layout under
+    ``split-NNNNN/_layouts/h<host>/``, at the replica slots the placement
+    already assigns.  Replica 0 (the base copy) always stays in insertion
+    order as the universal fallback.  Thin delegation — the actual
+    materialization lives in ``core.layout``."""
+    from .layout import materialize_layouts as _impl  # local import, no cycle
+
+    return _impl(root, placement, layouts, fsync=fsync)
+
+
 def add_column(
     root: str,
     name: str,

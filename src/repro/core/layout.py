@@ -1,0 +1,330 @@
+"""Per-replica heterogeneous layouts (PR 10) — the HAIL idea on COF.
+
+"Only Aggressive Elephants are Fast Elephants" observes that the r
+replicas of a split need not be byte-identical: each replica can carry a
+different sort order (and encoding profile) at zero extra storage cost,
+so a ``where=`` predicate on ANY of the sort columns finds one replica
+whose zone maps prune almost everything.  This module is the storage
+half of that idea:
+
+  * ``LayoutDescriptor`` — what one replica's copy looks like: the sort
+    column, optional forced per-column encodings, and a stats profile.
+  * ``materialize_layouts(root, placement, layouts)`` — the write path:
+    for every split, re-sort + re-encode one full copy per descriptor
+    into ``split-NNNNN/_layouts/h<host>/`` (host = the replica-chain
+    position the descriptor is assigned to; ``chain[0]`` ALWAYS keeps
+    the insertion-order base copy as the compatibility/fallback
+    replica), and record every copy's per-file byte size + whole-file
+    CRC plus its descriptor in a ``_layout.json`` sidecar.
+  * ``materialize_split_layout`` — the deterministic single-copy
+    builder ``core.repair`` reuses to re-materialize a damaged layout
+    replica in its OWN sort order from any clean insertion-order copy
+    (byte-identical output, so the healed copy re-verifies against the
+    recorded CRC — the repair acceptance rule, layout edition).
+
+Canonical order.  A sorted copy stores one extra ``_rowids.col``
+(int64, plain): the canonical record id of each row.  The read path
+(``cif.SplitReader.filter_split``) uses it to permute matched rows back
+into insertion order, so job output is bit-identical no matter which
+replica served each split.
+
+On-disk shape, per split (docs/FORMAT.md "Version 3.3"):
+
+    split-00003/
+        _layout.json            # descriptors + per-file [size, CRC]
+        _layouts/
+            h2/                 # host 2's copy, sorted by fetchTime
+                _meta.json      # same shape as the base _meta.json
+                url.col ...     # every schema column, rows re-sorted
+                _rowids.col     # canonical record id per sorted row
+                _replicas/h2/   # healed overlay (repair, fresh sectors)
+
+The scheduling half (candidate probing, the (replica, host) cost step,
+preference chains) lives in ``cif.CIFReader.schedule_layouts`` /
+``placement.ScheduledPlacement`` — this module stays below ``cif`` in
+the import order, next to ``cof``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .checksum import algo_name, best_algo, crc_of
+from .colfile import ColumnFileReader, ColumnFileWriter, ColumnFormat
+from .durable import durable_write, durable_write_json
+from .schema import INT64, Schema
+
+LAYOUT_MARKER = "_layout.json"
+LAYOUT_DIR = "_layouts"
+ROWIDS_FILE = "_rowids.col"
+ROWIDS_COLUMN = "_rowids"
+# value-block granularity of the _rowids companion: canonicalization
+# point-reads only matched rows, so small blocks keep a highly selective
+# scan from decoding the whole permutation (matched rows on a sorted copy
+# are contiguous, so they land in few blocks)
+ROWIDS_BLOCK = 256
+
+# scalar kinds a replica copy may be sorted by (maps/arrays/records have
+# no total order the planner's zone maps could exploit)
+_SORTABLE_KINDS = frozenset(
+    {"int32", "int64", "float32", "float64", "string", "bytes", "bool"}
+)
+
+
+@dataclass(frozen=True)
+class LayoutDescriptor:
+    """One replica copy's physical layout: rows sorted by ``sort_by``,
+    with per-column block encodings optionally forced (``encodings`` is a
+    sorted tuple of ``(column, encoding)`` pairs so descriptors hash) and
+    a named stats profile (reserved: all copies currently write the same
+    v3.2 stats the base writer does)."""
+
+    sort_by: str
+    encodings: Tuple[Tuple[str, str], ...] = ()
+    stats_profile: str = "default"
+
+    def encoding_of(self, column: str) -> Optional[str]:
+        for name, enc in self.encodings:
+            if name == column:
+                return enc
+        return None
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "sort_by": self.sort_by,
+            "encodings": {n: e for n, e in self.encodings},
+            "stats_profile": self.stats_profile,
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "LayoutDescriptor":
+        return LayoutDescriptor(
+            sort_by=d["sort_by"],
+            encodings=tuple(sorted(d.get("encodings", {}).items())),
+            stats_profile=d.get("stats_profile", "default"),
+        )
+
+
+def coerce_descriptor(
+    layout: Union[str, LayoutDescriptor]
+) -> LayoutDescriptor:
+    if isinstance(layout, LayoutDescriptor):
+        return layout
+    return LayoutDescriptor(sort_by=layout)
+
+
+def host_layout_dir(sdir: str, host: int) -> str:
+    return os.path.join(sdir, LAYOUT_DIR, f"h{host}")
+
+
+def read_layouts(sdir: str) -> Dict[int, Dict[str, Any]]:
+    """The split's ``_layout.json``: ``{host: {"descriptor":
+    LayoutDescriptor, "files": {fname: [size, crc]}}}`` plus the CRC
+    algorithm under the reserved key ``-1`` is NOT used — the algo rides
+    on each entry.  Returns ``{}`` when the split has no layouts or the
+    sidecar is unreadable (scheduling then falls back to the base copy;
+    correctness never depends on this sidecar)."""
+    path = os.path.join(sdir, LAYOUT_MARKER)
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        algo = doc["algo"]
+        out: Dict[int, Dict[str, Any]] = {}
+        for hkey, entry in doc.get("hosts", {}).items():
+            out[int(hkey)] = {
+                "descriptor": LayoutDescriptor.from_json(entry),
+                "files": {
+                    fn: (int(sz), int(crc))
+                    for fn, (sz, crc) in entry["files"].items()
+                },
+                "algo": algo,
+            }
+        return out
+    except (ValueError, KeyError, TypeError):
+        return {}
+
+
+def _load_schema(root: str) -> Schema:
+    with open(os.path.join(root, "schema.json")) as f:
+        return Schema.from_json(f.read())
+
+
+def _sort_order(vals: Any, n: int) -> List[int]:
+    """Deterministic stable sort permutation over one column's decoded
+    values (ties keep insertion order, so re-materialization from any
+    clean copy reproduces identical bytes)."""
+    if isinstance(vals, np.ndarray):
+        return np.argsort(vals, kind="stable").tolist()
+    cells = vals.tolist() if hasattr(vals, "tolist") else list(vals)
+    return sorted(range(n), key=cells.__getitem__)
+
+
+def materialize_split_layout(
+    sdir: str,
+    schema: Schema,
+    desc: LayoutDescriptor,
+    *,
+    read_base: Optional[Callable[[str], bytes]] = None,
+) -> Tuple[Dict[str, bytes], Dict[str, Any]]:
+    """Build ONE sorted copy of the split entirely in memory.
+
+    Returns ``(files, meta)``: every ``<column>.col`` re-sorted by
+    ``desc.sort_by`` plus ``_rowids.col`` (the canonical record id per
+    sorted row), and the copy's ``_meta.json`` dict.  Deterministic —
+    stable sort, and block encodings are a pure function of the values —
+    so repair can rebuild a damaged copy from any clean base copy and
+    byte-compare it against the recorded CRC.
+
+    ``read_base`` overrides how insertion-order column bytes are
+    obtained (repair passes its clean-copy resolution; default reads the
+    split's base files).
+    """
+    typ = schema.type_of(desc.sort_by)
+    assert typ.kind in _SORTABLE_KINDS, (
+        f"layout sort column {desc.sort_by!r} has kind {typ.kind!r} — "
+        f"only scalar columns ({sorted(_SORTABLE_KINDS)}) are sortable"
+    )
+    if read_base is None:
+        def read_base(fname: str) -> bytes:
+            with open(os.path.join(sdir, fname), "rb") as f:
+                return f.read()
+    with open(os.path.join(sdir, "_meta.json")) as f:
+        base_meta = json.load(f)
+    n = int(base_meta["n_records"])
+
+    def decode(name: str) -> Any:
+        r = ColumnFileReader(read_base(f"{name}.col"), schema.type_of(name))
+        return r.read_range(0, n)
+
+    order = _sort_order(decode(desc.sort_by), n)
+
+    files: Dict[str, bytes] = {}
+    sizes: Dict[str, int] = {}
+    formats: Dict[str, ColumnFormat] = {}
+    encodings: Dict[str, Any] = {}
+    for name in schema.names():
+        fdict = dict(base_meta["columns"][name])
+        forced = desc.encoding_of(name)
+        if forced is not None:
+            fdict["encoding"] = forced
+        fmt = ColumnFormat(**fdict)
+        w = ColumnFileWriter(schema.type_of(name), fmt)
+        vals = decode(name)
+        cells = vals.tolist() if isinstance(vals, np.ndarray) else vals
+        for i in order:
+            w.append(cells[i])
+        raw = w.finish()
+        files[f"{name}.col"] = raw
+        sizes[name] = len(raw)
+        formats[name] = fmt
+        encodings[name] = w.encoding_stats()
+    rw = ColumnFileWriter(INT64(), ColumnFormat("plain", enc_block=ROWIDS_BLOCK))
+    for i in order:
+        rw.append(i)
+    files[ROWIDS_FILE] = rw.finish()
+    from dataclasses import asdict
+
+    meta = {
+        "n_records": n,
+        "columns": {name: asdict(formats[name]) for name in schema.names()},
+        "bytes": sizes,
+        "encodings": encodings,
+        "layout": desc.to_json(),
+    }
+    # the copy's _meta.json rides in the file set (CRC-tracked by
+    # _layout.json like every column file), serialized canonically so the
+    # rebuild reproduces it byte-identically
+    files["_meta.json"] = json.dumps(meta, sort_keys=True).encode("utf-8")
+    return files, meta
+
+
+def write_layout_copy(
+    sdir: str, host: int, files: Dict[str, bytes], *, fsync: bool = True
+) -> None:
+    """Persist one materialized copy under ``_layouts/h<host>/``."""
+    ldir = host_layout_dir(sdir, host)
+    os.makedirs(ldir, exist_ok=True)
+    for fname, raw in sorted(files.items()):
+        durable_write(os.path.join(ldir, fname), raw, fsync=fsync)
+
+
+def materialize_layouts(
+    root: str,
+    placement: Any,
+    layouts: Sequence[Union[str, LayoutDescriptor]],
+    *,
+    fsync: bool = True,
+) -> Dict[int, Dict[int, LayoutDescriptor]]:
+    """The HAIL write path: give every split heterogeneous replica copies.
+
+    ``layouts[k]`` is materialized on each split's replica-chain host
+    ``chain[k + 1]`` — ``chain[0]`` (the primary) always keeps the
+    insertion-order base copy as the compatibility/fallback replica, so
+    a corpus with layouts still serves every pre-existing read path
+    unchanged.  Writes each copy's files plus the split's
+    ``_layout.json`` manifest (descriptor + per-file [size, CRC]; the
+    manifest is written LAST, so a crashed materialization leaves
+    orphan ``_layouts`` bytes a later run overwrites, never a manifest
+    promising files that don't exist).
+
+    Returns ``{split_id: {host: descriptor}}``.
+    """
+    from .cif import list_splits  # late import: cif sits above layout
+
+    descs = [coerce_descriptor(l) for l in layouts]
+    schema = _load_schema(root)
+    seen = set()
+    for d in descs:
+        assert d.sort_by in schema, f"unknown layout sort column {d.sort_by!r}"
+        assert d not in seen, f"duplicate layout descriptor {d}"
+        seen.add(d)
+    algo = best_algo()
+    assigned: Dict[int, Dict[int, LayoutDescriptor]] = {}
+    for split_id, sdir in list_splits(root):
+        chain = placement.replicas(split_id)
+        assert len(descs) < len(chain), (
+            f"{len(descs)} layouts need a replica chain of at least "
+            f"{len(descs) + 1} hosts (chain[0] stays insertion-order); "
+            f"split {split_id} has {len(chain)}"
+        )
+        hosts_doc: Dict[str, Any] = {}
+        per_host: Dict[int, LayoutDescriptor] = {}
+        for k, desc in enumerate(descs):
+            host = chain[k + 1]
+            files, _meta = materialize_split_layout(sdir, schema, desc)
+            write_layout_copy(sdir, host, files, fsync=fsync)
+            entry = desc.to_json()
+            entry["files"] = {
+                fname: [len(raw), crc_of(algo, raw)]
+                for fname, raw in sorted(files.items())
+            }
+            hosts_doc[str(host)] = entry
+            per_host[host] = desc
+        durable_write_json(
+            os.path.join(sdir, LAYOUT_MARKER),
+            {"v": 1, "algo": algo_name(algo), "hosts": hosts_doc},
+            fsync=fsync,
+        )
+        assigned[split_id] = per_host
+    return assigned
+
+
+class PinnedPlacement:
+    """Placement-shaped view that serves ONE host for every split — how a
+    layout-pinned ``SplitReader`` keeps every column fetch of one
+    execution on the same replica copy (cross-layout failover happens at
+    requeue granularity, never mid-execution: mixing a sorted column
+    with an insertion-order one would interleave rows of different
+    records)."""
+
+    def __init__(self, host: int):
+        self.host = host
+
+    def replicas(self, split_id: int) -> tuple:
+        return (self.host,)

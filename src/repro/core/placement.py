@@ -111,6 +111,58 @@ class Placement:
         return Placement(self.n_splits, n_hosts, self.replication)
 
 
+class ScheduledPlacement:
+    """Placement view whose replica chains are layout-preference chains
+    (PR 10).
+
+    ``cif.LayoutSchedule.placement`` builds one from the base ``Placement``
+    plus each split's preference-ordered candidate hosts: ``chains[s][0]``
+    is the host serving the split's BEST-layout replica for the scheduled
+    predicate, the rest are the remaining replicas in chain order.  Because
+    ``primary(s)`` is the best-layout host, the ``WorkQueue`` hands every
+    split to the host holding its chosen copy (``remote_reads`` stays 0 —
+    the CPP invariant now composed with HAIL's layout choice), and because
+    ``replicas(s)`` is the full preference chain, dead-host stealing and
+    retry-exhaustion requeues walk the SAME chain the layout-aware read
+    path walks (``LayoutSchedule.candidate_for``), falling back to
+    differently-laid-out replicas exactly like HAIL falls back to full
+    scan.  Duck-types the ``Placement`` surface ``WorkQueue``/``run_job``
+    consume; splits without an entry in ``chains`` serve the base chain.
+    """
+
+    def __init__(self, base: Placement, chains: Dict[int, tuple]):
+        self.base = base
+        self.chains = {s: tuple(c) for s, c in chains.items()}
+        self.n_splits = base.n_splits
+        self.n_hosts = base.n_hosts
+        self.replication = base.replication
+        for s, chain in self.chains.items():
+            assert chain, f"split {s}: empty preference chain"
+            assert set(chain) <= set(base.replicas(s)), (
+                f"split {s}: preference chain {chain} names hosts outside "
+                f"the base replica set {base.replicas(s)} — a layout can "
+                "only live where a replica does"
+            )
+
+    def replicas(self, split_id: int) -> tuple:
+        got = self.chains.get(split_id)
+        return got if got is not None else self.base.replicas(split_id)
+
+    def primary(self, split_id: int) -> int:
+        return self.replicas(split_id)[0]
+
+    def splits_of(self, host: int, include_replicas: bool = False) -> tuple:
+        out = []
+        for s in range(self.n_splits):
+            reps = self.replicas(s)
+            if (host == reps[0]) or (include_replicas and host in reps):
+                out.append(s)
+        return tuple(out)
+
+    def is_local(self, split_id: int, host: int) -> bool:
+        return host in self.replicas(split_id)
+
+
 class WorkQueue:
     """Deterministic work-stealing queue over a Placement.
 

@@ -60,8 +60,15 @@ from .cof import (
 from .durable import durable_write, durable_write_json, fsync_dir
 from .errors import CorruptFileError
 from .faults import FaultPlan
+from .layout import (
+    LAYOUT_MARKER,
+    LayoutDescriptor,
+    host_layout_dir,
+    materialize_split_layout,
+    read_layouts,
+)
 from .placement import Placement
-from .schema import ColumnType, Schema
+from .schema import INT64, ColumnType, Schema
 
 # copy states, in increasing severity (for report sorting stability)
 CLEAN, CORRUPT, TORN, MISSING = "clean", "corrupt", "torn", "missing"
@@ -331,6 +338,70 @@ def _split_files(sdir: str, manifest: Optional[Dict[str, Any]]) -> List[str]:
     )
 
 
+# ---------------------------------------------------------------------------
+# per-host layout copies (PR 10)
+# ---------------------------------------------------------------------------
+
+
+def _layout_typ(schema: Optional[Schema], fname: str) -> Optional[ColumnType]:
+    if fname == "_rowids.col":
+        return INT64()
+    return _type_of(schema, fname)
+
+
+def _layout_expected(entry: Dict[str, Any], fname: str):
+    """(size, crc, algo) the split's ``_layout.json`` promises for one file
+    of one host's layout copy, or None when untracked."""
+    ent = entry["files"].get(fname)
+    if ent is None:
+        return None
+    try:
+        algo = algo_from_name(entry.get("algo", ""))
+    except ValueError:
+        return None
+    return int(ent[0]), int(ent[1]), algo
+
+
+def _check_layout_marker(
+    report: RepairReport, split_id: int, sdir: str
+) -> Dict[int, Dict[str, Any]]:
+    """Parse the split's ``_layout.json``; an existing-but-unparseable
+    sidecar is reported CORRUPT (the scheduler then sees no layouts and
+    falls back — correctness holds, the layout copies are just dark)."""
+    doc = read_layouts(sdir)
+    if not doc and os.path.exists(os.path.join(sdir, LAYOUT_MARKER)):
+        report.count(CopyState(
+            split_id, LAYOUT_MARKER, -1, CORRUPT,
+            "unparseable _layout.json sidecar — layout copies unschedulable",
+        ))
+    return doc
+
+
+def _fsck_layouts(
+    report: RepairReport, split_id: int, sdir: str, schema: Optional[Schema]
+) -> None:
+    """Audit every host's layout copy (base files + healed overlays under
+    ``_layouts/h<h>/_replicas/h<h>/``) against the ``_layout.json`` CRCs."""
+    for h, entry in sorted(_check_layout_marker(report, split_id, sdir).items()):
+        ldir = host_layout_dir(sdir, h)
+        for fname in sorted(entry["files"]):
+            expected = _layout_expected(entry, fname)
+            typ = _layout_typ(schema, fname)
+            rel = f"_layouts/h{h}/{fname}"
+            copies = [(-1, _read_file(os.path.join(ldir, fname)))]
+            opath = _overlay_path(ldir, h, fname)
+            if os.path.exists(opath):
+                copies.append((h, _read_file(opath)))
+            for host, raw in copies:
+                if fname == "_meta.json" and expected is None:
+                    state, detail = _classify_meta(raw)
+                else:
+                    state, detail = _classify_bytes(
+                        raw, expected, path=os.path.join(ldir, fname), typ=typ
+                    )
+                report.count(CopyState(split_id, rel, host, state, detail))
+
+
 def fsck(root: str) -> RepairReport:
     """Audit-only physical integrity walk — see ``cif.fsck``."""
     report = RepairReport()
@@ -358,9 +429,113 @@ def fsck(root: str) -> RepairReport:
             _read_file(os.path.join(sdir, "_meta.json"))
         )
         report.count(CopyState(split_id, "_meta.json", -1, state, detail))
+        _fsck_layouts(report, split_id, sdir, schema)
         if os.path.exists(os.path.join(sdir, QUARANTINE_MARKER)):
             report.quarantined.append(split_id)
     return report.finish()
+
+
+def _repair_layouts(
+    report: RepairReport,
+    split_id: int,
+    sdir: str,
+    schema: Optional[Schema],
+    manifest: Optional[Dict[str, Any]],
+    hosts,
+    fault_plan: Optional[FaultPlan],
+) -> None:
+    """Scrub and heal every host's layout copy (PR 10).
+
+    A damaged layout copy is NEVER healed by byte-copying the insertion-
+    order base (the copy's sort order is its identity): the whole copy is
+    re-materialized deterministically from clean insertion-order bytes via
+    ``layout.materialize_split_layout`` — stable sort, value-determined
+    encodings — and accepted only when every rebuilt file's CRC matches
+    what ``_layout.json`` recorded at write time.  Physical damage heals
+    in place; plan-injected per-host damage through the read seam gets a
+    ``_layouts/h<h>/_replicas/h<h>/`` overlay with a read-back assert —
+    the same two-axis model as base repair.  Layout damage never
+    quarantines: the base copy still serves every read, the scheduler just
+    loses a candidate until the copy heals.
+    """
+    ldoc = _check_layout_marker(report, split_id, sdir)
+    if not ldoc:
+        return
+
+    def clean_base(fname: str) -> bytes:
+        expected = _expected(manifest, fname)
+        typ = _type_of(schema, fname)
+        bpath = os.path.join(sdir, fname)
+        cands = [_read_file(bpath)] + [
+            _read_copy(sdir, split_id, fname, h, fault_plan) for h in hosts
+        ]
+        for raw in cands:
+            if raw is not None and _classify_bytes(
+                raw, expected, path=bpath, typ=typ
+            )[0] == CLEAN:
+                return raw
+        raise CorruptFileError(
+            bpath, -1,
+            "no clean insertion-order copy to re-materialize the layout from",
+        )
+
+    for h, entry in sorted(ldoc.items()):
+        ldir = host_layout_dir(sdir, h)
+
+        def classify(fname: str, raw: Optional[bytes]) -> Tuple[str, str]:
+            return _classify_bytes(
+                raw, _layout_expected(entry, fname),
+                path=os.path.join(ldir, fname),
+                typ=_layout_typ(schema, fname),
+            )
+
+        def served_ok(fname: str) -> bool:
+            raw = _read_copy(ldir, split_id, fname, h, fault_plan)
+            return classify(fname, raw)[0] == CLEAN
+
+        damaged: List[str] = []
+        for fname in sorted(entry["files"]):
+            raw = _read_copy(ldir, split_id, fname, h, fault_plan)
+            state, detail = classify(fname, raw)
+            report.count(CopyState(
+                split_id, f"_layouts/h{h}/{fname}", h, state, detail
+            ))
+            if state != CLEAN:
+                damaged.append(fname)
+        if not damaged or schema is None:
+            continue
+        try:
+            rebuilt, _meta = materialize_split_layout(
+                sdir, schema, entry["descriptor"], read_base=clean_base
+            )
+        except (CorruptFileError, OSError, ValueError, KeyError):
+            continue  # no clean base copy left: damage stays reported
+        # acceptance rule, layout edition: the rebuild must reproduce the
+        # recorded CRCs exactly — proof the healed copy is the SAME sorted
+        # re-encoding, not a byte-copy of some other layout
+        algo = algo_from_name(entry["algo"])
+        for fname, raw in rebuilt.items():
+            exp = entry["files"].get(fname)
+            assert exp is not None and crc_of(algo, raw) == int(exp[1]), (
+                f"split {split_id} h{h} {fname}: deterministic layout "
+                "rebuild diverged from the recorded CRC — refusing to heal"
+            )
+        for fname in damaged:
+            raw = rebuilt[fname]
+            lpath = os.path.join(ldir, fname)
+            if classify(fname, _read_file(lpath))[0] != CLEAN:
+                durable_write(lpath, raw)
+                report.repaired.append(
+                    (split_id, f"_layouts/h{h}/{fname}", -1)
+                )
+            if not served_ok(fname):
+                opath = _overlay_path(ldir, h, fname)
+                os.makedirs(os.path.dirname(opath), exist_ok=True)
+                durable_write(opath, raw)
+                report.repaired.append((split_id, f"_layouts/h{h}/{fname}", h))
+                assert served_ok(fname), (
+                    "healed layout copy must read back clean (acceptance rule)"
+                )
 
 
 def repair(
@@ -443,6 +618,9 @@ def repair(
                 assert ok(
                     _read_copy(sdir, split_id, fname, h, fault_plan)
                 ), "healed copy must read back clean (acceptance rule)"
+        _repair_layouts(
+            report, split_id, sdir, schema, manifest, hosts, fault_plan
+        )
         qpath = os.path.join(sdir, QUARANTINE_MARKER)
         if split_unserveable:
             if not os.path.exists(qpath):

@@ -627,6 +627,12 @@ class PruneResult:
     def n_rows(self) -> int:
         return ranges_rows(self.ranges)
 
+    @property
+    def blocks_scanned(self) -> int:
+        """Blocks the scan will actually visit — the layout scheduler's
+        primary cost metric (PR 10)."""
+        return self.blocks_total - self.blocks_pruned
+
 
 # ---------------------------------------------------------------------------
 # interval algebra for the planner (row ranges are half-open [start, stop))

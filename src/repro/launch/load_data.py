@@ -16,6 +16,16 @@ training startup uses.
 predicate-pushdown scan over the freshly written dataset and reports
 pruned-vs-scanned block counts — the zone maps the v3 writer just
 emitted, made observable from the command line.
+
+``--layouts 'col1,col2'`` materializes per-replica heterogeneous
+layouts after writing (PR 10): replica-chain position k+1 of every
+split gets a full copy stably sorted by colk, registered in the
+``_layout.json`` sidecar.  A subsequent ``--where`` then runs through
+``schedule_layouts`` — each split served from the copy whose zone maps
+prune the most, the insertion-order base as fallback — and the report
+gains the routing counters (``layout_best_choices`` /
+``layout_fallbacks``).  With ``--explain`` the layout-aware plan's
+prune count is cross-checked against the scheduled scan's, exactly.
 """
 from __future__ import annotations
 
@@ -164,6 +174,68 @@ def corpus_repair(root: str, n_hosts: int, replication: int):
     return report
 
 
+def corpus_layouts(root: str, cols: list, n_hosts: int, replication: int):
+    """``--layouts``: give each non-primary replica-chain position its own
+    sort order (zero extra storage beyond the ``_rowids`` permutation).
+    Returns the Placement the layouts were materialized against — the same
+    one a ``--where`` scheduled scan must use."""
+    from ..core import Placement, list_splits, materialize_layouts
+
+    n_splits = len(list_splits(root))
+    placement = Placement(n_splits, n_hosts, replication=replication)
+    materialize_layouts(root, placement, cols)
+    print(f"materialized {len(cols)} replica layout(s) "
+          f"(sorted by {', '.join(cols)}) across {n_splits} splits, "
+          f"{n_hosts} hosts, replication {replication}")
+    return placement
+
+
+def layout_where_report(root: str, text: str, columns: list,
+                        placement, do_explain: bool) -> dict:
+    """Layout-aware ``--where``: route each split to its best replica copy
+    via ``schedule_layouts``, run the scheduled job, and report the routing
+    counters next to the prune counters.  With ``--explain``, the
+    layout-aware plan (``explain(..., placement=)``) must predict the
+    scheduled scan's prune count exactly."""
+    from ..core import CIFReader, explain, parse_predicate, run_job
+
+    pred = parse_predicate(text)
+    reader = CIFReader(root, columns=columns)
+    sched = reader.schedule_layouts(pred, placement)
+    rep = None
+    if do_explain:
+        rep = explain(root, pred, columns=columns, placement=placement)
+        print(rep.format())
+    ids, ob = reader.job_inputs(schedule=sched)
+
+    def map_batch(split_id, cols, emit):
+        emit(None, cols.n_rows)
+
+    res = run_job(ids, n_hosts=placement.n_hosts, placement=sched.placement,
+                  open_split_batches=ob, map_batch_fn=map_batch,
+                  scan_stats=reader.stats)
+    rows = sum(v for _, vs in res.output for v in vs)
+    s = reader.stats
+    out = {
+        "rows": rows,
+        "blocks_pruned": s.blocks_pruned_stats,
+        "layout_best_choices": s.layout_best_choices,
+        "layout_fallbacks": s.layout_fallbacks,
+    }
+    print(f"where {text!r} (layout-scheduled): {rows} matching rows; "
+          f"{s.blocks_pruned_stats} blocks pruned by stats, "
+          f"{s.layout_best_choices} splits on their best layout, "
+          f"{s.layout_fallbacks} on a fallback copy")
+    if rep is not None:
+        assert rep.blocks_pruned == s.blocks_pruned_stats, (
+            f"layout-aware explain predicted {rep.blocks_pruned} pruned "
+            f"blocks, the scheduled scan reported {s.blocks_pruned_stats}"
+        )
+        print(f"explain matches scheduled scan: {rep.blocks_pruned} blocks "
+              f"pruned, attribution {rep.source_totals() or '{}'}")
+    return out
+
+
 def where_with_explain(out: str, text: str, columns: list,
                        do_explain: bool) -> dict:
     """``--where`` (optionally preceded by ``--explain``): the explain
@@ -216,10 +288,18 @@ def main() -> None:
                     help="scrub the EXISTING corpus at --out and re-replicate "
                          "damaged copies from clean replicas (quarantines "
                          "splits with zero clean copies)")
+    ap.add_argument("--layouts", default="", metavar="'col1,col2'",
+                    help="after writing, materialize per-replica "
+                         "heterogeneous layouts: replica-chain position "
+                         "k+1 of every split gets a copy sorted by colk "
+                         "(the base stays insertion order); a --where "
+                         "scan then routes each split to its best copy")
     ap.add_argument("--hosts", type=int, default=4,
-                    help="simulated hosts for --repair's placement")
+                    help="simulated hosts for --repair's / --layouts' "
+                         "placement")
     ap.add_argument("--replication", type=int, default=3,
-                    help="replication factor for --repair's placement")
+                    help="replication factor for --repair's / --layouts' "
+                         "placement")
     args = ap.parse_args()
 
     if args.fsck or args.repair:
@@ -261,7 +341,14 @@ def main() -> None:
         if args.verify_hosts:
             sharded_verify(args.out, ["url", "fetchTime"], args.verify_hosts,
                            w.total_records)
-        if args.where:
+        placement = None
+        if args.layouts:
+            placement = corpus_layouts(args.out, args.layouts.split(","),
+                                       args.hosts, args.replication)
+        if args.where and placement is not None:
+            layout_where_report(args.out, args.where, ["url", "fetchTime"],
+                                placement, args.explain)
+        elif args.where:
             where_with_explain(args.out, args.where, ["url", "fetchTime"],
                                args.explain)
     else:
@@ -278,7 +365,14 @@ def main() -> None:
         if args.verify_hosts:
             sharded_verify(args.out, ["n_tokens"], args.verify_hosts,
                            w.n_sequences)
-        if args.where:
+        placement = None
+        if args.layouts:
+            placement = corpus_layouts(args.out, args.layouts.split(","),
+                                       args.hosts, args.replication)
+        if args.where and placement is not None:
+            layout_where_report(args.out, args.where, ["n_tokens"],
+                                placement, args.explain)
+        elif args.where:
             where_with_explain(args.out, args.where, ["n_tokens"],
                                args.explain)
 

@@ -179,6 +179,63 @@ def test_ragged_cmp_matches_str_ordering(cells, pivot):
     assert got == expect
 
 
+# -- sorted-replica layout round-trip (ISSUE 10) ------------------------------
+# The per-replica heterogeneous layout write path must be a pure re-ordering:
+# for ANY corpus, the sorted copy's values are the base values permuted by a
+# stable sort, ``_rowids`` is the inverse permutation, and re-materializing
+# is byte-deterministic (the repair acceptance rule).
+
+
+@given(
+    st.lists(st.tuples(st.integers(-(2**31), 2**31 - 1), st.text(max_size=12)),
+             min_size=1, max_size=80),
+    st.sampled_from(["k", "v"]),
+)
+@settings(max_examples=30, deadline=None)
+def test_sorted_replica_layout_roundtrip(rows, sort_by):
+    import os
+    import tempfile
+
+    from repro.core import COFWriter, ColumnFileReader, Schema, split_name
+    from repro.core.colfile import ColumnFormat as CF
+    from repro.core.layout import (
+        LayoutDescriptor, ROWIDS_FILE, materialize_split_layout,
+    )
+    from repro.core.schema import INT64 as I64, STRING as STR
+
+    schema = Schema([("k", I64()), ("v", STR())])
+    with tempfile.TemporaryDirectory() as td:
+        root = os.path.join(td, "d")
+        w = COFWriter(root, schema,
+                      formats={"k": CF(enc_block=8), "v": CF(enc_block=8)},
+                      split_records=len(rows), fsync=False)
+        w.append_all({"k": k, "v": v} for k, v in rows)
+        w.close()
+        sdir = os.path.join(root, split_name(0))
+        desc = LayoutDescriptor(sort_by=sort_by)
+        files, meta = materialize_split_layout(sdir, schema, desc)
+        again, _ = materialize_split_layout(sdir, schema, desc)
+        assert files == again  # byte-deterministic rebuild
+        n = meta["n_records"]
+        rowids = _as_plain_list(
+            ColumnFileReader(files[ROWIDS_FILE], I64()).read_range(0, n))
+        assert sorted(rowids) == list(range(n))  # a permutation
+        base = {"k": [k for k, _ in rows], "v": [v for _, v in rows]}
+        for name in ("k", "v"):
+            got = _as_plain_list(ColumnFileReader(
+                files[f"{name}.col"], schema.type_of(name)).read_range(0, n))
+            assert got == [base[name][i] for i in rowids]  # pure re-ordering
+        key = _as_plain_list(ColumnFileReader(
+            files[f"{sort_by}.col"], schema.type_of(sort_by)).read_range(0, n))
+        assert key == sorted(key)
+        # stable: equal keys keep insertion order
+        assert rowids == sorted(range(n), key=lambda i: (base[sort_by][i], i))
+
+
+def _as_plain_list(vals):
+    return vals.tolist() if hasattr(vals, "tolist") else list(vals)
+
+
 @given(st.lists(st.sampled_from(["", "a", "ab", "b", "ba", "bb"]),
                 min_size=1, max_size=80),
        st.sampled_from(["", "a", "ab", "abc", "b", "c"]))
